@@ -1,0 +1,28 @@
+"""Paper Figs. 10/17: peak memory vs batch size + max batch under 128 GiB.
+Paper: batch 4 -> 32 on Qwen2.5-7B under 128 GiB (8x tokens/s)."""
+
+from __future__ import annotations
+
+from repro.configs import PAPER_MODELS
+
+from .common import emit, gib, time_us
+from .memory_model import GIB, estimate_peak, max_batch_under
+
+BATCHES = (1, 4, 8, 16, 32, 64, 96)
+LIMIT = 128 * GIB
+
+
+def run() -> None:
+    for name in ("llama3.1-8b", "qwen2.5-7b"):
+        cfg = PAPER_MODELS[name]
+        for b in BATCHES:
+            us = time_us(lambda: estimate_peak(cfg, memascend=True, batch=b),
+                         repeats=2)
+            base = estimate_peak(cfg, memascend=False, batch=b).total
+            mem = estimate_peak(cfg, memascend=True, batch=b).total
+            emit(f"batch/{name}/{b}", us,
+                 f"baseline={gib(base):.1f}GiB memascend={gib(mem):.1f}GiB")
+        bb = max_batch_under(cfg, LIMIT, memascend=False)
+        bm = max_batch_under(cfg, LIMIT, memascend=True)
+        emit(f"batch/{name}/max@128GiB", 0.0,
+             f"baseline_max={bb} memascend_max={bm} paper(qwen2.5-7b)=4->32")

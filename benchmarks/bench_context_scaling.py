@@ -1,0 +1,30 @@
+"""Paper Figs. 9/16: peak memory vs context length; max context under a
+128 GiB cap.  Paper: 16,384 (baseline) -> 131,072 (MemAscend) on Qwen2.5-7B."""
+
+from __future__ import annotations
+
+from repro.configs import PAPER_MODELS
+
+from .common import emit, gib, time_us
+from .memory_model import GIB, estimate_peak, max_context_under
+
+CONTEXTS = (4096, 16384, 32768, 65536, 131072)
+LIMIT = 128 * GIB
+
+
+def run() -> None:
+    for name in ("llama3.1-8b", "qwen2.5-7b", "qwen2.5-14b", "qwen2.5-32b"):
+        cfg = PAPER_MODELS[name]
+        for ctx in CONTEXTS:
+            us = time_us(lambda: estimate_peak(cfg, memascend=True, ctx=ctx,
+                                               batch=1), repeats=2)
+            b = estimate_peak(cfg, memascend=False, ctx=ctx, batch=1).total
+            m = estimate_peak(cfg, memascend=True, ctx=ctx, batch=1).total
+            emit(f"ctx/{name}/{ctx}", us,
+                 f"baseline={gib(b):.1f}GiB memascend={gib(m):.1f}GiB "
+                 f"reduction={1 - m / b:.1%}")
+        mb = max_context_under(cfg, LIMIT, memascend=False, batch=1)
+        mm = max_context_under(cfg, LIMIT, memascend=True, batch=1)
+        emit(f"ctx/{name}/max@128GiB", 0.0,
+             f"baseline_max={mb} memascend_max={mm} "
+             f"paper(qwen2.5-7b)=16384->131072")

@@ -1,0 +1,47 @@
+"""Paper Fig. 8 (pinned-overhead component): pow2 vs alignment-free waste
+over the long-lived offloading buffers.  Paper: 24.90 GiB -> 1.63 GiB
+(-93.5%) for Qwen2.5-7B."""
+
+from __future__ import annotations
+
+from repro.configs import ALL_MODELS
+from repro.core import (AlignmentFreeAllocator, MemoryTracker,
+                        PowerOfTwoCachingAllocator)
+
+from .common import emit, gib, time_us
+
+
+def _long_lived_buffers(cfg, n_gpus=2):
+    """Request sizes of every long-lived pinned buffer (per §IV-C)."""
+    census = cfg.pool_census(inflight_blocks=1, shards=n_gpus)
+    sizes = []
+    slab = census.max_tensor_bytes
+    for cls in census.classes:
+        sizes += [cls.nbytes] * cls.slots(census.inflight_blocks)
+    sizes.append(cfg.param_count() * 4 // n_gpus)       # gradient flat buffer
+    sizes += [census.max_tensor_bytes * 2] * 3           # optimizer staging
+    sizes += [8 * 4096 * cfg.d_model * 2] * min(cfg.n_layers, 64)  # offl. GC
+    return sizes
+
+
+def run() -> None:
+    for name, cfg in ALL_MODELS.items():
+        sizes = _long_lived_buffers(cfg)
+
+        def alloc_all(cls):
+            t = MemoryTracker()
+            a = cls(tracker=t, component="x", caching=False)
+            for s in sizes:
+                a.alloc(s)
+            return t
+
+        us = time_us(lambda: alloc_all(AlignmentFreeAllocator), repeats=3)
+        t_pow2 = alloc_all(PowerOfTwoCachingAllocator)
+        t_free = alloc_all(AlignmentFreeAllocator)
+        waste_pow2 = t_pow2.live_allocated - t_pow2.live_requested
+        waste_free = t_free.live_allocated - t_free.live_requested
+        emit(f"pinned/{name}", us,
+             f"pow2_waste={gib(waste_pow2):.2f}GiB "
+             f"alignfree_waste={gib(waste_free):.3f}GiB "
+             f"reduction={1 - waste_free / max(waste_pow2, 1):.1%} "
+             f"paper=93.5%")

@@ -1,0 +1,27 @@
+"""Shared benchmark plumbing: timing + the required CSV emission format."""
+
+from __future__ import annotations
+
+import time
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def time_us(fn, *, repeats: int = 5, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def gib(n: float) -> float:
+    return n / (1 << 30)

@@ -1,0 +1,153 @@
+"""Peak system-memory model at paper scale (Tables II, Figs. 8/9/10/15-18).
+
+Runs the REAL policy objects (allocators, pools) in accounting mode — no
+actual buffers — to produce peak-host-memory estimates for paper-scale
+models.  Components, following the paper's Fig. 8 breakdown:
+
+  parameter buffer pool   census-sized, fixed vs adaptive slots
+  pinned-alloc overhead   pow2 rounding vs 4 KiB alignment on every
+                          long-lived pinned buffer
+  gradient flat buffer    fp32, whole model (constant across methods)
+  overflow-check temps    2.25x flat-buffer peak vs ~one chunk
+  optimizer stream        3 fp32 subgroup working copies (constant)
+  swap-out buffer         largest-tensor staging (constant)
+  activation checkpoints  Eq. 1: N_g*B*C*L*H*2 bytes, offloaded-GC
+
+Calibration notes (EXPERIMENTS.md §Paper-validation): prefetch depth
+(`inflight_blocks`) is 1, matching the pool sizes reported in the paper's
+Fig. 8/11 within a few percent.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig
+from repro.core import (AdaptiveBufferPool, AlignmentFreeAllocator,
+                        FixedBufferPool, MemoryTracker,
+                        PowerOfTwoCachingAllocator)
+
+GIB = 1 << 30
+
+
+@dataclass
+class PeakEstimate:
+    pool: int
+    pinned_overhead: int
+    flat_buffer: int
+    overflow_peak: int
+    optimizer_stream: int
+    swap_buffer: int
+    checkpoints: int
+
+    @property
+    def total(self) -> int:
+        # overflow temps and the optimizer stream don't overlap in time;
+        # peak takes the max of the two transient phases (paper Fig. 3).
+        transient = max(self.overflow_peak, self.optimizer_stream)
+        return (self.pool + self.pinned_overhead + self.flat_buffer
+                + transient + self.swap_buffer + self.checkpoints)
+
+    def breakdown(self) -> dict:
+        return {k: getattr(self, k) for k in (
+            "pool", "pinned_overhead", "flat_buffer", "overflow_peak",
+            "optimizer_stream", "swap_buffer", "checkpoints")}
+
+
+def estimate_peak(cfg: ModelConfig, *, memascend: bool, n_gpus: int = 2,
+                  batch: int = 8, ctx: int = 4096,
+                  inflight_blocks: int = 1,
+                  offload_checkpoints: bool = True) -> PeakEstimate:
+    census = cfg.pool_census(inflight_blocks=inflight_blocks, shards=n_gpus)
+    tracker = MemoryTracker()
+    alloc_cls = AlignmentFreeAllocator if memascend \
+        else PowerOfTwoCachingAllocator
+    pool_cls = AdaptiveBufferPool if memascend else FixedBufferPool
+
+    # one pool per rank (each holds its parameter shard's staging slots).
+    # ZeRO-Infinity pins each slot as its own allocation (each pow2-rounded
+    # by the caching allocator); MemAscend reserves ONE monolithic arena
+    # (paper §IV-B) at 4 KiB alignment.
+    alloc = alloc_cls(tracker=tracker, component="pinned", caching=False)
+    pool = pool_cls(census, alloc)
+    pool_payload = pool.pool_bytes * n_gpus
+    if memascend:
+        pool_reserved = pool._arena_buf.capacity * n_gpus
+    else:
+        slab = census.max_tensor_bytes
+        per_slot = alloc._rounded(slab)
+        pool_reserved = per_slot * census.total_slots * n_gpus
+
+    # gradient flat buffer: fp32 x whole model, split across ranks but summed
+    n_params = cfg.param_count()
+    flat_payload = n_params * 4
+    flat_buf = alloc.alloc(flat_payload // n_gpus)
+    flat_reserved = flat_buf.capacity * n_gpus
+
+    # activation checkpoints (offloaded GC): Eq. 1, one pinned buffer per
+    # layer per rank of (B, C, H) in fp16/bf16
+    ckpt_payload = 0
+    ckpt_reserved = 0
+    if offload_checkpoints:
+        per_layer = batch * ctx * cfg.d_model * 2
+        layers = cfg.n_layers + cfg.encoder_layers
+        for _ in range(min(layers, 64)):
+            b = alloc.alloc(per_layer)
+            ckpt_payload += per_layer * n_gpus
+            ckpt_reserved += b.capacity * n_gpus
+        if layers > 64:   # avoid silly loops for deep models
+            scale = layers / 64
+            ckpt_payload = int(ckpt_payload * scale)
+            ckpt_reserved = int(ckpt_reserved * scale)
+
+    # optimizer subgroup stream: 3 fp32 working copies of the largest
+    # subgroup per rank (constant across methods; paper's "small system
+    # allocations")
+    max_tensor = census.max_tensor_bytes // 2 * 4   # fp32 elems of largest
+    opt_stream = 3 * max_tensor * n_gpus
+    swap_buffer = max_tensor * n_gpus
+
+    # overflow temporaries
+    if memascend:
+        overflow_peak = 4 << 20
+    else:
+        overflow_peak = int(1.25 * flat_payload)
+
+    pinned_overhead = (pool_reserved - pool_payload) + \
+        (flat_reserved - flat_payload) + (ckpt_reserved - ckpt_payload)
+
+    return PeakEstimate(
+        pool=pool_payload,
+        pinned_overhead=pinned_overhead,
+        flat_buffer=flat_payload,
+        overflow_peak=overflow_peak,
+        optimizer_stream=opt_stream,
+        swap_buffer=swap_buffer,
+        checkpoints=ckpt_payload,
+    )
+
+
+def max_context_under(cfg: ModelConfig, limit_bytes: int, *,
+                      memascend: bool, n_gpus: int = 2, batch: int = 1,
+                      contexts=(4096, 8192, 16384, 32768, 65536, 131072,
+                                262144)) -> int:
+    """Largest context whose estimated peak fits the limit (Fig. 16)."""
+    best = 0
+    for ctx in contexts:
+        est = estimate_peak(cfg, memascend=memascend, n_gpus=n_gpus,
+                            batch=batch, ctx=ctx)
+        if est.total <= limit_bytes:
+            best = ctx
+    return best
+
+
+def max_batch_under(cfg: ModelConfig, limit_bytes: int, *, memascend: bool,
+                    n_gpus: int = 2, ctx: int = 4096,
+                    batches=(1, 2, 4, 8, 16, 32, 48, 64, 96)) -> int:
+    best = 0
+    for b in batches:
+        est = estimate_peak(cfg, memascend=memascend, n_gpus=n_gpus,
+                            batch=b, ctx=ctx)
+        if est.total <= limit_bytes:
+            best = b
+    return best

@@ -1,0 +1,52 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
+
+  bench_buffer_pool      Fig. 11 (+Fig. 18 censuses)
+  bench_pinned_alloc     Fig. 8 pinned-overhead component
+  bench_overflow         Figs. 12/13
+  bench_nvme             Fig. 14
+  bench_peak_memory      Table II / Fig. 15
+  bench_context_scaling  Figs. 9/16
+  bench_batch_scaling    Figs. 10/17
+  bench_moe_pool         Fig. 18
+  bench_io_volume        Fig. 20 / Table VI
+  bench_e2e_throughput   Table IV (real steps, container scale)
+  bench_kernels          (ours) kernel oracle timings + correctness
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (bench_batch_scaling, bench_buffer_pool,
+                   bench_context_scaling, bench_e2e_throughput,
+                   bench_io_volume, bench_kernels, bench_moe_pool,
+                   bench_nvme, bench_overflow, bench_peak_memory,
+                   bench_pinned_alloc)
+    modules = [
+        bench_buffer_pool, bench_pinned_alloc, bench_overflow, bench_nvme,
+        bench_peak_memory, bench_context_scaling, bench_batch_scaling,
+        bench_moe_pool, bench_io_volume, bench_e2e_throughput, bench_kernels,
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    failed = []
+    for mod in modules:
+        if only and only not in mod.__name__:
+            continue
+        try:
+            mod.run()
+        except Exception as e:
+            failed.append(mod.__name__)
+            print(f"{mod.__name__},0,ERROR:{e!r}")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

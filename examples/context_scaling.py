@@ -1,0 +1,41 @@
+"""Paper §V-B story, runnable: how reclaimed host memory converts into
+context length (and batch) under a fixed memory cap.
+
+Run:  PYTHONPATH=src python examples/context_scaling.py [--limit-gib 128]
+"""
+
+import argparse
+
+from benchmarks.memory_model import (GIB, estimate_peak, max_batch_under,
+                                     max_context_under)
+from repro.configs import ALL_MODELS
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--limit-gib", type=float, default=128.0)
+    ap.add_argument("--model", default="qwen2.5-7b",
+                    choices=sorted(ALL_MODELS))
+    args = ap.parse_args()
+    cfg = ALL_MODELS[args.model]
+    limit = int(args.limit_gib * GIB)
+
+    print(f"{cfg.name}: peak host memory vs context (batch 1, 2 ranks)")
+    print(f"{'context':>9} | {'ZeRO-Infinity':>14} | {'MemAscend':>10}")
+    for ctx in (4096, 16384, 32768, 65536, 131072):
+        b = estimate_peak(cfg, memascend=False, ctx=ctx, batch=1).total / GIB
+        m = estimate_peak(cfg, memascend=True, ctx=ctx, batch=1).total / GIB
+        print(f"{ctx:>9} | {b:>11.1f}GiB | {m:>7.1f}GiB")
+
+    cb = max_context_under(cfg, limit, memascend=False, batch=1)
+    cm = max_context_under(cfg, limit, memascend=True, batch=1)
+    bb = max_batch_under(cfg, limit, memascend=False)
+    bm = max_batch_under(cfg, limit, memascend=True)
+    print(f"\nunder {args.limit_gib:.0f} GiB: max context "
+          f"{cb} -> {cm}; max batch (ctx 4096) {bb} -> {bm}")
+    print("paper (qwen2.5-7b, 128 GiB): context 16,384 -> 131,072; "
+          "batch 4 -> 32")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Serve a small model with batched decode requests through the registry's
+serve path (KV cache / recurrent state), on any architecture family.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py [--arch qwen3-4b]
+      (uses the REDUCED variant of the chosen arch so it runs on CPU)
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.models import build
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b", choices=list(ARCHS))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch].reduced()
+    print(f"arch {args.arch} (reduced: {cfg.n_layers}L d={cfg.d_model} "
+          f"vocab={cfg.vocab}, family={cfg.family})")
+    impl = build(cfg)
+    params = impl.init_params(jax.random.PRNGKey(0))
+
+    b = args.batch
+    total = args.prompt_len + args.new_tokens
+    cache = impl.init_cache(b, total)
+    step = jax.jit(impl.decode_fn)
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(3, cfg.vocab, size=(b, args.prompt_len),
+                           dtype=np.int32)
+    # feed the prompt token by token (prefill-by-decode keeps the example
+    # uniform across KV-cache and recurrent-state families)
+    tok = jnp.asarray(prompts[:, :1])
+    for t in range(args.prompt_len):
+        logits, cache = step(params, cache, jnp.asarray(prompts[:, t:t + 1]),
+                             jnp.int32(t))
+
+    out_tokens = []
+    t0 = time.time()
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    for t in range(args.prompt_len, total):
+        logits, cache = step(params, cache, tok, jnp.int32(t))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out_tokens.append(np.asarray(tok[:, 0]))
+    dt = time.time() - t0
+    gen = np.stack(out_tokens, axis=1)
+    print(f"generated {gen.shape} tokens in {dt:.2f}s "
+          f"({b * args.new_tokens / dt:.1f} tok/s)")
+    for i in range(min(b, 2)):
+        print(f"  request {i}: {gen[i][:16].tolist()} ...")
+    print("serve OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Render dry-run + roofline tables and splice them into EXPERIMENTS.md.
+
+Usage: PYTHONPATH=src python experiments/summarize.py
+"""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.roofline import analyze, load_records, report  # noqa: E402
+
+ROOT = os.path.dirname(os.path.abspath(__file__))
+OUT = os.path.join(ROOT, "dryrun")
+EXP = os.path.join(ROOT, "..", "EXPERIMENTS.md")
+GiB = 1 << 30
+
+
+def dryrun_table(mesh: str) -> str:
+    lines = [
+        f"### Dry-run — {mesh} mesh",
+        "",
+        "| arch | shape | kind | compile s | args GiB/chip | temp GiB/chip |"
+        " flops/chip | coll GB (ag/ar/rs/a2a/cp) | status |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    try:
+        recs = load_records(OUT, mesh)
+    except FileNotFoundError:
+        return f"### Dry-run — {mesh} mesh\n\n(not yet run)"
+    for r in recs:
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — "
+                         f"| — | skipped: {r['reason'][:60]}… |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — "
+                         f"| — | ERROR |")
+            continue
+        m = r["memory"]
+        b = r["collectives"]["bytes"]
+        coll = "/".join(f"{b.get(k, 0) / 1e9:.0f}" for k in (
+            "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+            "collective-permute"))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | "
+            f"{r['compile_seconds']:.0f} | "
+            f"{m.get('argument_size_in_bytes', 0) / GiB:.2f} | "
+            f"{m.get('temp_size_in_bytes', 0) / GiB:.1f} | "
+            f"{r['cost'].get('flops', 0):.2e} | {coll} | ok |")
+    return "\n".join(lines)
+
+
+def splice(marker: str, content: str, text: str) -> str:
+    tag = f"<!-- {marker} -->"
+    if tag not in text:
+        raise SystemExit(f"marker {marker} missing")
+    return text.replace(tag, tag + "\n\n" + content)
+
+
+def main() -> None:
+    text = open(EXP).read()
+    # remove previously spliced content: keep everything up to each marker
+    for marker in ("DRYRUN-TABLE", "ROOFLINE-TABLE"):
+        tag = f"<!-- {marker} -->"
+        if tag in text:
+            head, _, rest = text.partition(tag)
+            # find the next --- separator after the tag
+            nxt = rest.find("\n---")
+            tail = rest[nxt:] if nxt >= 0 else ""
+            text = head + tag + tail
+    dr = []
+    rf = []
+    for mesh in ("pod", "multipod"):
+        if os.path.isdir(os.path.join(OUT, mesh)):
+            dr.append(dryrun_table(mesh))
+            if mesh == "pod":   # roofline table is single-pod per assignment
+                rf.append(report(OUT, mesh))
+    text = splice("DRYRUN-TABLE", "\n\n".join(dr), text)
+    text = splice("ROOFLINE-TABLE", "\n\n".join(rf), text)
+    open(EXP, "w").write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""MemAscend core: the paper's contribution as composable JAX/host modules.
+
+Public surface:
+
+* memory accounting      — :mod:`repro.core.memory_tracker`
+* pinned allocators      — :mod:`repro.core.pinned_alloc` (§III-B/§IV-C)
+* parameter buffer pools — :mod:`repro.core.buffer_pool` (§III-A/§IV-B)
+* overflow checking      — :mod:`repro.core.overflow` (§III-C/§IV-D)
+* loss scaling           — :mod:`repro.core.loss_scale`
+* SSD tensor stores      — :mod:`repro.core.nvme` (§III-D/§IV-E)
+* host Adam              — :mod:`repro.core.optimizer`
+* prefetch swapper       — :mod:`repro.core.swapper`
+* the training engine    — :mod:`repro.core.offload_engine`
+"""
+
+from .memory_tracker import MemoryTracker, GLOBAL_TRACKER, fmt_bytes
+from .pinned_alloc import (AlignmentFreeAllocator, PinnedAllocatorBase,
+                           PowerOfTwoCachingAllocator, next_power_of_two,
+                           align_up, DMA_ALIGNMENT)
+from .buffer_pool import (AdaptiveBufferPool, FixedBufferPool, PoolCensus,
+                          ShapeClass)
+from .overflow import (baseline_overflow_check, fused_overflow_check,
+                       baseline_overflow_check_jnp, fused_overflow_check_jnp)
+from .loss_scale import DynamicLossScaler
+from .nvme import DirectNVMeEngine, FilesystemEngine, TensorStore, IOStats
+from .optimizer import AdamConfig, OffloadedAdam, adam_update
+from .swapper import ParameterSwapper
+from .offload_engine import (OffloadableModel, OffloadUnit, OffloadPolicy,
+                             OffloadedTrainer, memascend_policy,
+                             zero_infinity_policy)
+from .checkpoint import (load_pytree, restore_trainer_step, save_pytree,
+                         snapshot_trainer)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,76 @@
+"""Adapter: ModelConfig -> OffloadableModel for the SSD-offloaded trainer.
+
+The offload engine streams *unstacked* per-block parameter dicts (that is
+the whole point — one block in device memory at a time), while the jit/pjit
+path uses period-stacked scans.  This adapter instantiates the same layer
+definitions (:mod:`repro.models.transformer`) in unstacked form and wires
+the pure apply functions the engine jits per block.
+
+Restriction: the engine jits ONE block function, so the config must be
+layer-homogeneous (period == 1) — true for the dense and MoE families.
+Hybrid/xLSTM fine-tuning under offload would need one jitted apply per
+position-in-period; straightforward, not needed for the paper's workloads
+(the paper fine-tunes dense Llama/Qwen + one MoE).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import (apply_layer, ffn_kind,
+                                      init_layer_params, layer_period,
+                                      mixer_kind)
+from repro.models.layers import (cross_entropy, embed_lookup, lm_logits,
+                                 rms_norm, trunc_normal, fan_in_init)
+from .offload_engine import OffloadableModel, OffloadUnit
+
+
+def make_offloadable_lm(cfg: ModelConfig, key,
+                        compute_dtype=jnp.bfloat16) -> OffloadableModel:
+    if layer_period(cfg) != 1:
+        raise ValueError(
+            f"{cfg.name}: offloaded trainer requires layer-homogeneous "
+            f"configs (period==1); got period={layer_period(cfg)}")
+    kinds = (mixer_kind(cfg, 0), ffn_kind(cfg, 0))
+
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    units = [OffloadUnit("embed", "standalone", {
+        "embed": np.asarray(trunc_normal(keys[0], (cfg.vocab, cfg.d_model),
+                                         0.02))})]
+    for i in range(cfg.n_layers):
+        lp = init_layer_params(keys[1 + i], cfg, i)
+        units.append(OffloadUnit(
+            f"block_{i:03d}", "block",
+            {k: np.asarray(v) for k, v in lp.items()}))
+    head_params = {"final_norm": np.zeros((cfg.d_model,), np.float32)}
+    if not cfg.tie_embeddings:
+        head_params["head"] = np.asarray(
+            fan_in_init(keys[-1], (cfg.d_model, cfg.vocab)))
+    else:
+        # tied embeddings: the head unit still needs the table to project
+        head_params["head"] = units[0].params["embed"].T.copy()
+    units.append(OffloadUnit("head", "standalone", head_params))
+
+    def embed_apply(params, tokens):
+        return embed_lookup(params["embed"].astype(compute_dtype), tokens,
+                            scale=cfg.embed_scale)
+
+    def block_apply(params, h):
+        out, _aux = apply_layer(cfg, kinds, params, h)
+        return out
+
+    def head_loss(params, h, labels):
+        h = rms_norm(h, params["final_norm"].astype(compute_dtype),
+                     cfg.rms_eps)
+        logits = lm_logits(h, params["head"].astype(compute_dtype))
+        return cross_entropy(logits, labels)
+
+    def class_of(param_key: str) -> str:
+        return ModelConfig.class_of_param(param_key)
+
+    return OffloadableModel(units=units, embed_apply=embed_apply,
+                            block_apply=block_apply, head_loss=head_loss,
+                            class_of=class_of)

@@ -1,0 +1,386 @@
+"""The SSD-offloaded training engine (ZeRO-Infinity semantics + MemAscend).
+
+This is the end-to-end substrate the paper optimizes.  One training step:
+
+  1. **Forward**, block-streamed: for each unit (embedding, transformer
+     blocks, LM head) the swapper prefetches compute-precision weights
+     SSD→host pool slot; weights are put on device; the block runs; the slot
+     is released.  Block *inputs* are checkpointed (gradient checkpointing)
+     and — in offloaded-GC mode — held in host memory, charged to the
+     tracker (paper Eq. 1 term).
+  2. **Backward**, reverse-streamed: weights are re-fetched, the block is
+     recomputed under ``jax.vjp``, and parameter gradients are written into
+     the fp32 **gradient flat buffer** in host memory (ZeRO-Infinity's
+     single contiguous partition buffer, §III-C).
+  3. **Overflow check** over the flat buffer — chained baseline or
+     MemAscend's fused single pass — then the dynamic loss scaler decides
+     whether to apply the step.
+  4. **Optimizer**, subgroup-streamed on the host: for each parameter, read
+     (master, m, v) from SSD, Adam-update, write back, emit fresh compute
+     weights (fp32 or bf16 state per config).
+
+Two :class:`OffloadPolicy` presets package the paper's comparison:
+``zero_infinity_policy()`` (fixed pool + pow2 pinned allocator + chained
+overflow check + per-tensor-file store) vs ``memascend_policy()`` (adaptive
+pool + alignment-free allocator + fused check + direct NVMe engine).
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .buffer_pool import (AdaptiveBufferPool, BufferPoolBase, FixedBufferPool,
+                          PoolCensus, ShapeClass)
+from .loss_scale import DynamicLossScaler
+from .memory_tracker import MemoryTracker
+from .nvme import DirectNVMeEngine, FilesystemEngine, TensorStore
+from .optimizer import AdamConfig, OffloadedAdam
+from .overflow import baseline_overflow_check, fused_overflow_check
+from .pinned_alloc import (AlignmentFreeAllocator, PinnedAllocatorBase,
+                           PowerOfTwoCachingAllocator)
+from .swapper import ParameterSwapper
+
+
+# ---------------------------------------------------------------------------
+# Model-side interface
+# ---------------------------------------------------------------------------
+
+@dataclass
+class OffloadUnit:
+    """One streamable unit: the embedding, one transformer block, or the head.
+
+    ``params`` are the fp32 initial values; ``kind`` is "standalone" or
+    "block" (block units share shape classes; standalone units get dedicated
+    pool slots, per paper §IV-B).
+    """
+
+    name: str
+    kind: str                       # "standalone" | "block"
+    params: dict[str, np.ndarray]
+
+
+@dataclass
+class OffloadableModel:
+    """Pure-function model description consumed by the engine.
+
+    apply signatures (all jittable; ``params`` is {name: jnp.ndarray}):
+      embed_apply(params, tokens)              -> h
+      block_apply(params, h)                   -> h
+      head_loss(params, h, labels)             -> scalar loss (pre-scaling)
+    ``class_of(param_key)`` maps a parameter to its pool shape class.
+    """
+
+    units: list[OffloadUnit]
+    embed_apply: Callable
+    block_apply: Callable
+    head_loss: Callable
+    class_of: Callable[[str], str]
+
+    def census(self, inflight_blocks: int = 2,
+               bytes_per_elem: int = 2) -> PoolCensus:
+        """Shape-class census over the units (drives both pool designs)."""
+        per_block: dict[str, int] = {}
+        standalone: dict[str, int] = {}
+        nbytes: dict[str, int] = {}
+        block_seen = False
+        for unit in self.units:
+            counts: dict[str, int] = {}
+            for key, value in unit.params.items():
+                cls = self.class_of(key)
+                compute_nbytes = value.size * bytes_per_elem  # compute dtype
+                nbytes[cls] = max(nbytes.get(cls, 0), compute_nbytes)
+                counts[cls] = counts.get(cls, 0) + 1
+            if unit.kind == "block":
+                block_seen = True
+                for cls, c in counts.items():
+                    per_block[cls] = max(per_block.get(cls, 0), c)
+            else:
+                for cls, c in counts.items():
+                    standalone[cls] = standalone.get(cls, 0) + c
+        del block_seen
+        classes = []
+        for cls in sorted(nbytes):
+            classes.append(ShapeClass(cls, nbytes[cls],
+                                      per_block.get(cls, 0),
+                                      standalone.get(cls, 0)))
+        return PoolCensus(tuple(classes), inflight_blocks)
+
+
+# ---------------------------------------------------------------------------
+# Policies (baseline vs MemAscend)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class OffloadPolicy:
+    name: str
+    allocator_cls: type
+    pool_cls: type
+    fused_overflow: bool
+    store_factory: Callable[[str], TensorStore]
+    adam: AdamConfig = field(default_factory=AdamConfig)
+    inflight_blocks: int = 2
+    offload_checkpoints: bool = True   # offloaded gradient checkpointing
+
+
+def zero_infinity_policy(root: str, **adam_kw) -> OffloadPolicy:
+    return OffloadPolicy(
+        name="zero-infinity",
+        allocator_cls=PowerOfTwoCachingAllocator,
+        pool_cls=FixedBufferPool,
+        fused_overflow=False,
+        store_factory=lambda r=root: FilesystemEngine(os.path.join(r, "fs_store")),
+        adam=AdamConfig(**adam_kw),
+    )
+
+
+def memascend_policy(root: str, *, bf16_optimizer: bool = False,
+                     n_devices: int = 2, **adam_kw) -> OffloadPolicy:
+    adam_kw.setdefault("state_dtype",
+                       "bfloat16" if bf16_optimizer else "float32")
+    return OffloadPolicy(
+        name="memascend",
+        allocator_cls=AlignmentFreeAllocator,
+        pool_cls=AdaptiveBufferPool,
+        fused_overflow=True,
+        store_factory=lambda r=root: DirectNVMeEngine(
+            os.path.join(r, "raw_store"), n_devices=n_devices),
+        adam=AdamConfig(**adam_kw),
+    )
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+class OffloadedTrainer:
+    """Layer-streaming fwd/bwd + host optimizer over an OffloadableModel."""
+
+    def __init__(self, model: OffloadableModel, policy: OffloadPolicy,
+                 *, tracker: MemoryTracker | None = None) -> None:
+        self.model = model
+        self.policy = policy
+        self.tracker = tracker or MemoryTracker()
+        self.store = policy.store_factory()
+        self.allocator = policy.allocator_cls(
+            tracker=self.tracker, component="pinned", backing="numpy")
+        census = model.census(
+            policy.inflight_blocks,
+            bytes_per_elem=policy.adam.compute_np_dtype.itemsize)
+        self.pool = policy.pool_cls(census, self.allocator)
+        class_of = {}
+        for unit in model.units:
+            for key in unit.params:
+                cls = model.class_of(key)
+                class_of[f"{unit.name}/{key}{OffloadedAdam.COMPUTE}"] = (
+                    cls if isinstance(self.pool, AdaptiveBufferPool)
+                    else FixedBufferPool.SLOT_CLASS)
+        # For the fixed pool every request maps to the monolithic class via
+        # the pool itself; pass the true class and let the pool decide.
+        self.swapper = ParameterSwapper(self.store, self.pool, class_of={
+            k: model.class_of(k.split("/", 1)[1].rsplit(".", 1)[0])
+            for k in class_of})
+        self.optimizer = OffloadedAdam(self.store, policy.adam,
+                                       tracker=self.tracker)
+        self.scaler = DynamicLossScaler()
+        if policy.adam.compute_dtype != "float16":
+            self.scaler.scale = 1.0  # only fp16 needs scaling; check stays on
+        self.compute_dtype = {"bfloat16": jnp.bfloat16,
+                              "float16": jnp.float16,
+                              "float32": jnp.float32}[
+            policy.adam.compute_dtype]
+
+        # Register all parameters with the store/optimizer.
+        self._unit_param_meta: list[tuple[OffloadUnit, dict]] = []
+        total_params = 0
+        for unit in model.units:
+            meta = {}
+            for key, value in unit.params.items():
+                skey = f"{unit.name}/{key}"
+                self.optimizer.register(skey, value)
+                meta[key] = (value.shape, value.size)
+                total_params += value.size
+            self._unit_param_meta.append((unit, meta))
+        self.total_params = total_params
+
+        # Gradient flat buffer: fp32, whole partition, lives for the run.
+        self._flat_buf = self.allocator.alloc(total_params * 4,
+                                              tag="gradient_flat_buffer")
+        self.flat = self._flat_buf.view(np.float32, (total_params,))
+        self._flat_offsets: dict[str, tuple[int, int, tuple]] = {}
+        off = 0
+        for unit, meta in self._unit_param_meta:
+            for key, (shape, size) in meta.items():
+                self._flat_offsets[f"{unit.name}/{key}"] = (off, size, shape)
+                off += size
+
+        # jitted per-block functions (shared across blocks of equal shapes)
+        self._jit_embed = jax.jit(model.embed_apply)
+        self._jit_block = jax.jit(model.block_apply)
+        self._jit_head = jax.jit(self._head_loss_and_grads)
+        self._jit_block_bwd = jax.jit(self._block_bwd)
+        self._jit_embed_bwd = jax.jit(
+            lambda p, t, dy: jax.vjp(model.embed_apply, p, t)[1](dy)[0])
+
+        self.metrics: dict = {}
+
+    # -- jitted helpers ----------------------------------------------------------
+
+    def _head_loss_and_grads(self, params, h, labels, scale):
+        def scaled(params, h):
+            return self.model.head_loss(params, h, labels) * scale
+        (sloss), vjp = jax.vjp(scaled, params, h)
+        dparams, dh = vjp(jnp.ones((), sloss.dtype))
+        return sloss / scale, dparams, dh
+
+    def _block_bwd(self, params, x, dy):
+        _, vjp = jax.vjp(self.model.block_apply, params, x)
+        dparams, dx = vjp(dy)
+        return dparams, dx
+
+    # -- weight streaming ----------------------------------------------------------
+
+    def _fetch_unit_device_params(self, unit: OffloadUnit, meta: dict):
+        """Stream one unit's compute weights SSD→pool→device."""
+        cd = self.policy.adam.compute_np_dtype
+        for key, (shape, _size) in meta.items():
+            skey = f"{unit.name}/{key}{OffloadedAdam.COMPUTE}"
+            self.swapper.prefetch(skey, cd, shape)
+        device_params = {}
+        for key, (shape, _size) in meta.items():
+            skey = f"{unit.name}/{key}{OffloadedAdam.COMPUTE}"
+            ticket = self.swapper.get(skey, cd, shape)
+            host_view = ticket.buf.view(cd, shape)
+            # H2D transfer. copy=True is essential: on the CPU backend jax
+            # may alias host memory, and the pool slot is reused as soon as
+            # it is released (the paper's lifecycle) — an alias would race
+            # with async dispatch.
+            device_params[key] = jnp.array(host_view, copy=True)
+            ticket.release()                              # slot back to pool
+        return device_params
+
+    # -- checkpoint offload ----------------------------------------------------------
+
+    def _save_checkpoint(self, h) -> tuple:
+        if self.policy.offload_checkpoints:
+            host = np.asarray(h)   # D2H into host memory
+            handle = self.tracker.alloc("activation_checkpoints", host.nbytes,
+                                        tag="block_input")
+            return ("host", host, handle, h.dtype)
+        return ("device", h, None, h.dtype)
+
+    def _restore_checkpoint(self, ckpt):
+        kind, payload, handle, dtype = ckpt
+        if kind == "host":
+            arr = jnp.asarray(payload, dtype=dtype)
+            self.tracker.free(handle)
+            return arr
+        return payload
+
+    # -- the step -------------------------------------------------------------------
+
+    def train_step(self, tokens: np.ndarray, labels: np.ndarray) -> dict:
+        model, meta_list = self.model, self._unit_param_meta
+        embed_unit, embed_meta = meta_list[0]
+        head_unit, head_meta = meta_list[-1]
+        block_list = meta_list[1:-1]
+
+        # ---- forward, block-streamed ----
+        params = self._fetch_unit_device_params(embed_unit, embed_meta)
+        h = self._jit_embed(params, jnp.asarray(tokens))
+        del params
+        checkpoints = []
+        for unit, meta in block_list:
+            checkpoints.append(self._save_checkpoint(h))
+            params = self._fetch_unit_device_params(unit, meta)
+            h = self._jit_block(params, h)
+            del params
+
+        # ---- head loss + initial cotangent ----
+        params = self._fetch_unit_device_params(head_unit, head_meta)
+        loss, head_grads, dh = self._jit_head(
+            params, h, jnp.asarray(labels), jnp.asarray(
+                self.scaler.scale, dtype=jnp.float32))
+        del params
+        self._write_grads(head_unit, head_meta, head_grads)
+
+        # ---- backward, reverse block-streamed (recompute via vjp) ----
+        for (unit, meta), ckpt in zip(reversed(block_list),
+                                      reversed(checkpoints)):
+            x = self._restore_checkpoint(ckpt)
+            params = self._fetch_unit_device_params(unit, meta)
+            dparams, dh = self._jit_block_bwd(params, x, dh)
+            del params
+            self._write_grads(unit, meta, dparams)
+
+        # ---- embedding backward ----
+        params = self._fetch_unit_device_params(embed_unit, embed_meta)
+        dembed = self._jit_embed_bwd(params, jnp.asarray(tokens), dh)
+        del params
+        self._write_grads(embed_unit, embed_meta, dembed)
+
+        # ---- overflow check on the flat buffer ----
+        if self.policy.fused_overflow:
+            overflowed = fused_overflow_check(self.flat, tracker=self.tracker)
+        else:
+            overflowed = baseline_overflow_check(self.flat, tracker=self.tracker)
+        apply_step = self.scaler.update(overflowed)
+
+        # ---- host optimizer, subgroup-streamed ----
+        if apply_step:
+            self.optimizer.begin_step()
+            inv_scale = 1.0 / self.scaler.scale
+            for unit, meta in meta_list:
+                for key, (shape, size) in meta.items():
+                    skey = f"{unit.name}/{key}"
+                    off, size, shape = self._flat_offsets[skey]
+                    grad = self.flat[off:off + size].reshape(shape) * np.float32(
+                        inv_scale)
+                    self.optimizer.step_subgroup(skey, grad)
+
+        return {
+            "loss": float(loss),
+            "overflowed": overflowed,
+            "applied": apply_step,
+            "loss_scale": self.scaler.scale,
+            "optimizer_io_bytes": self.optimizer.last_io_bytes,
+            "peak_host_bytes": self.tracker.peak_allocated,
+        }
+
+    def _write_grads(self, unit: OffloadUnit, meta: dict, grads: dict) -> None:
+        """Accumulate device grads into the fp32 host flat buffer."""
+        for key in meta:
+            off, size, shape = self._flat_offsets[f"{unit.name}/{key}"]
+            g = np.asarray(grads[key], dtype=np.float32).reshape(-1)  # D2H
+            self.flat[off:off + size] = g
+
+    # -- eval / weights access ---------------------------------------------------------
+
+    def eval_loss(self, tokens: np.ndarray, labels: np.ndarray) -> float:
+        meta_list = self._unit_param_meta
+        params = self._fetch_unit_device_params(*meta_list[0])
+        h = self._jit_embed(params, jnp.asarray(tokens))
+        for unit, meta in meta_list[1:-1]:
+            params = self._fetch_unit_device_params(unit, meta)
+            h = self._jit_block(params, h)
+        params = self._fetch_unit_device_params(*meta_list[-1])
+        loss = jax.jit(self.model.head_loss)(params, h, jnp.asarray(labels))
+        return float(loss)
+
+    def master_param(self, unit_name: str, key: str) -> np.ndarray:
+        meta = next(m for u, m in self._unit_param_meta if u.name == unit_name)
+        shape, _ = meta[key]
+        sd = self.policy.adam.state_np_dtype
+        return self.store.read_new(f"{unit_name}/{key}.master", sd, shape)
+
+    def close(self) -> None:
+        self.swapper.drain()
+        self.pool.close()
+        self._flat_buf.free()
+        self.store.close()

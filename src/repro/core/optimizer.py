@@ -1,0 +1,182 @@
+"""Host (CPU) Adam with SSD-resident state: the paper's optimizer substrate.
+
+ZeRO-Infinity executes the optimizer on the CPU (DeepSpeedCPUAdam: fused
+AVX512/AVX2 + OpenMP) because Adam's arithmetic intensity never justifies
+shipping optimizer states over PCIe.  States live on NVMe and are streamed
+through host subgroup buffers.
+
+This module provides:
+
+* :func:`adam_update` — the vectorized numpy update (our AVX analogue),
+  with bias correction and decoupled weight decay, dtype-templated like the
+  DeepSpeed C++ backend (fp32 or bf16 optimizer states).
+* :class:`OffloadedAdam` — streams (master, m, v) subgroups from a
+  :class:`~repro.core.nvme.TensorStore`, updates on host, writes back, and
+  emits new half-precision compute weights.  Counts per-iteration I/O volume
+  (paper Fig. 20) and supports the **bf16 half-precision optimizer** mode
+  (paper §VI-B-3a): master/m/v stored and transferred in bf16, cutting I/O
+  per parameter from 26 B to 14 B (−46%; with fp16 grads counted the paper
+  reports −58%).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+import ml_dtypes
+
+BF16 = np.dtype(ml_dtypes.bfloat16)
+
+
+@dataclass
+class AdamConfig:
+    lr: float = 1e-4
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    state_dtype: str = "float32"      # "float32" | "bfloat16"  (paper's bf16 mode)
+    compute_dtype: str = "bfloat16"   # precision of weights used by fwd/bwd
+
+    @property
+    def state_np_dtype(self):
+        return BF16 if self.state_dtype == "bfloat16" else np.dtype(np.float32)
+
+    @property
+    def compute_np_dtype(self):
+        return {"bfloat16": BF16, "float16": np.dtype(np.float16),
+                "float32": np.dtype(np.float32)}[self.compute_dtype]
+
+    @property
+    def state_bytes_per_param(self) -> int:
+        return self.state_np_dtype.itemsize
+
+
+def adam_update(master: np.ndarray, grad: np.ndarray, m: np.ndarray,
+                v: np.ndarray, step: int, cfg: AdamConfig) -> None:
+    """In-place Adam step on fp32 working copies.
+
+    ``master``, ``m``, ``v`` are fp32 views; callers holding bf16 state
+    upcast before and truncate after (exactly the paper's direct-truncation
+    scheme).  ``grad`` is fp32 (already unscaled).
+    """
+    b1, b2 = cfg.beta1, cfg.beta2
+    m *= b1
+    m += (1.0 - b1) * grad
+    v *= b2
+    v += (1.0 - b2) * np.square(grad)
+    bias1 = 1.0 - b1 ** step
+    bias2 = 1.0 - b2 ** step
+    denom = np.sqrt(v / bias2) + cfg.eps
+    update = (m / bias1) / denom
+    if cfg.weight_decay:
+        update += cfg.weight_decay * master
+    master -= cfg.lr * update
+
+
+@dataclass
+class SubgroupMeta:
+    key: str            # base key; store keys are f"{key}.master" etc.
+    shape: tuple
+    size: int           # element count
+
+
+class OffloadedAdam:
+    """Adam whose full state lives on the tensor store, streamed per subgroup.
+
+    One "subgroup" = one parameter tensor (the paper streams optimizer-state
+    subgroups through a fixed host buffer; tensor granularity matches its
+    description and keeps peak host usage to max-tensor-size × 3).
+    """
+
+    MASTER, M, V, COMPUTE = ".master", ".m", ".v", ".compute"
+
+    def __init__(self, store, cfg: AdamConfig, *, tracker=None,
+                 component: str = "optimizer_stream") -> None:
+        from .memory_tracker import GLOBAL_TRACKER
+        self.store = store
+        self.cfg = cfg
+        self.tracker = tracker or GLOBAL_TRACKER
+        self.component = component
+        self.step_count = 0
+        self.subgroups: dict[str, SubgroupMeta] = {}
+        self.last_io_bytes = 0   # I/O volume of the most recent step
+
+    # -- registration ------------------------------------------------------------
+
+    def register(self, key: str, init_value: np.ndarray) -> None:
+        """Seed master weights + zero moments on the store; emit compute copy."""
+        sd = self.cfg.state_np_dtype
+        meta = SubgroupMeta(key, init_value.shape, init_value.size)
+        self.subgroups[key] = meta
+        master = init_value.astype(np.float32)
+        self.store.write(key + self.MASTER, master.astype(sd))
+        zeros = np.zeros(meta.shape, dtype=sd)
+        self.store.write(key + self.M, zeros)
+        self.store.write(key + self.V, zeros)
+        self.store.write(key + self.COMPUTE,
+                         master.astype(self.cfg.compute_np_dtype))
+
+    # -- the streamed step ---------------------------------------------------------
+
+    def step_subgroup(self, key: str, grad_f32: np.ndarray) -> np.ndarray:
+        """Stream one subgroup: read states, update, write back.
+
+        Returns the refreshed compute-precision weights (also written to the
+        store for the next iteration's parameter prefetch).
+        """
+        meta = self.subgroups[key]
+        sd = self.cfg.state_np_dtype
+        cd = self.cfg.compute_np_dtype
+        state_bytes = meta.size * sd.itemsize
+
+        # Host staging for (master, m, v): charged to the tracker.
+        h = self.tracker.alloc(self.component, 3 * meta.size * 4,
+                               tag=key)  # fp32 working copies
+        try:
+            master = self.store.read_new(key + self.MASTER, sd, meta.shape)
+            m = self.store.read_new(key + self.M, sd, meta.shape)
+            v = self.store.read_new(key + self.V, sd, meta.shape)
+            io = 3 * state_bytes
+
+            master32 = master.astype(np.float32)
+            m32 = m.astype(np.float32)
+            v32 = v.astype(np.float32)
+            adam_update(master32, grad_f32.reshape(meta.shape), m32, v32,
+                        self.step_count, self.cfg)
+
+            self.store.write(key + self.MASTER, master32.astype(sd))
+            self.store.write(key + self.M, m32.astype(sd))
+            self.store.write(key + self.V, v32.astype(sd))
+            compute = master32.astype(cd)
+            self.store.write(key + self.COMPUTE, compute)
+            io += 3 * state_bytes + meta.size * cd.itemsize
+            self.last_io_bytes += io
+            return compute
+        finally:
+            self.tracker.free(h)
+
+    def begin_step(self) -> None:
+        self.step_count += 1
+        self.last_io_bytes = 0
+
+    # -- static accounting (paper Fig. 20, at any model scale) ---------------------
+
+    @staticmethod
+    def io_bytes_per_param(cfg: AdamConfig, *, include_grad_offload: bool = True) -> int:
+        """Per-parameter optimizer-step I/O volume for a given precision mode.
+
+        The paper's Fig. 20 counts everything the optimizer step moves over
+        NVMe: (master, m, v) read+write at state precision, the refreshed
+        compute-precision weights, and — when gradients spill to SSD — the
+        gradient write+read.  ZeRO-Infinity's gradient flat buffer is fp32,
+        so the bf16-optimizer mode shrinks the gradient traffic too (the
+        paper transfers "parameters, gradients, and momentum in
+        half-precision")."""
+        s = cfg.state_bytes_per_param
+        c = cfg.compute_np_dtype.itemsize
+        io = 3 * s + 3 * s + c          # read m/v/master + write back + compute wts
+        if include_grad_offload:
+            io += 2 * s                  # grad spill w+r at state precision
+        return io

@@ -1,0 +1,160 @@
+"""Gradient-overflow checking: the paper's §III-C (problem) / §IV-D (fix).
+
+Mixed-precision training with dynamic loss scaling must test, every
+iteration, whether any gradient became Inf/NaN.  The ZeRO-Infinity/PyTorch
+baseline does this with a chain of whole-tensor ops on the fp32 gradient
+flat buffer::
+
+    abs(G) -> isinf -> any   then   isnan(G) -> any
+
+``isinf`` internally calls ``abs`` first, so the chain materializes a full
+fp32 temporary (1.0x) plus boolean masks (0.25x each), pushing peak memory
+to ~2.25x the flat buffer (67.3 GiB for an 8B model vs 29.9 GiB payload) and
+costing seconds of latency per iteration.
+
+MemAscend's fused check exploits IEEE-754: a value is Inf or NaN **iff its
+exponent bits are all ones**.  One bitwise pass over the raw words — no
+temporaries, early exit:
+
+    overflow = any((bits & EXP_MASK) == EXP_MASK)
+
+This module provides:
+
+* :func:`baseline_overflow_check` — the faithful chained version.  In
+  ``accounting`` mode it charges the temporaries to a MemoryTracker at any
+  model scale; in real mode it also executes them on numpy (the host/AVX
+  analogue).
+* :func:`fused_overflow_check` — single-pass bitwise check, chunked so the
+  working set stays cache-resident (the OpenMP-tile analogue), with early
+  exit between chunks.
+* jnp variants used inside jitted train steps; the TPU Pallas kernel lives in
+  :mod:`repro.kernels.overflow_check` and is wrapped by
+  :mod:`repro.kernels.ops`.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .memory_tracker import MemoryTracker, GLOBAL_TRACKER
+
+# IEEE-754 exponent masks per dtype (all-ones exponent <=> Inf or NaN).
+_EXP_MASK = {
+    np.dtype(np.float32): (np.uint32, np.uint32(0x7F80_0000)),
+    np.dtype(np.float16): (np.uint16, np.uint16(0x7C00)),
+}
+# bfloat16: same exponent layout as fp32, packed in the top 16 bits.
+_BF16_MASK = np.uint16(0x7F80)
+
+#: chunk size (elements) for the fused pass — 4 MiB of fp32 stays in LLC,
+#: mirroring the paper's OpenMP tile.
+FUSED_CHUNK = 1 << 20
+
+
+def _masks_for(dtype: np.dtype):
+    dtype = np.dtype(dtype)
+    if dtype == np.dtype(np.float32) or dtype == np.dtype(np.float16):
+        return _EXP_MASK[dtype]
+    # ml_dtypes bfloat16 (jax's host repr) — detect by name to avoid a hard dep.
+    if dtype.name == "bfloat16":
+        return (np.uint16, _BF16_MASK)
+    raise TypeError(f"overflow check only defined for float types, got {dtype}")
+
+
+def baseline_overflow_check(grad: np.ndarray, *,
+                            tracker: MemoryTracker | None = None,
+                            component: str = "overflow_tmp",
+                            execute: bool = True) -> bool:
+    """Chained isinf/isnan check, charging its temporaries.
+
+    Timeline (matches the paper's Fig. 3):
+      step 2: ``abs(G)``    -> full-size fp temporary          (+1.0x)
+      step 3: ``isinf``     -> boolean mask                    (+0.25x for fp32)
+      step 4: ``any``       -> scalar; abs temp still live
+      step 5: ``isnan(G)``  -> boolean mask                    (+0.25x)
+      step 6: ``any``       -> scalar
+    Peak = payload * (1 + 1 + 0.25) = 2.25x for fp32.
+    """
+    tracker = tracker or GLOBAL_TRACKER
+    nbytes = grad.nbytes
+    bool_bytes = grad.size  # numpy/torch bool = 1 byte/elem
+
+    h_abs = tracker.alloc(component, nbytes, tag="abs_tmp")
+    try:
+        a = np.abs(grad) if execute else None
+        h_inf = tracker.alloc(component, bool_bytes, tag="isinf_mask")
+        try:
+            inf_any = bool(np.isinf(a).any()) if execute else False
+        finally:
+            tracker.free(h_inf)
+    finally:
+        tracker.free(h_abs)
+        a = None
+
+    h_nan = tracker.alloc(component, bool_bytes, tag="isnan_mask")
+    try:
+        nan_any = bool(np.isnan(grad).any()) if execute else False
+    finally:
+        tracker.free(h_nan)
+    return inf_any or nan_any
+
+
+def fused_overflow_check(grad: np.ndarray, *,
+                         tracker: MemoryTracker | None = None,
+                         component: str = "overflow_tmp",
+                         chunk: int = FUSED_CHUNK) -> bool:
+    """MemAscend's single-pass bitwise check (Algorithm 1), chunked.
+
+    Peak extra memory is one chunk's boolean intermediate (<= 1 MiB),
+    charged to the tracker for honest comparison; early-exits on the first
+    overflowing chunk.
+    """
+    tracker = tracker or GLOBAL_TRACKER
+    uint_t, mask = _masks_for(grad.dtype)
+    flat = grad.reshape(-1).view(uint_t)
+    n = flat.size
+    chunk_bytes = min(chunk, n) * np.dtype(uint_t).itemsize
+    handle = tracker.alloc(component, chunk_bytes, tag="fused_chunk")
+    try:
+        for start in range(0, n, chunk):
+            piece = flat[start:start + chunk]
+            # (bits & EXP_MASK) == EXP_MASK  <=> exponent all-ones <=> Inf/NaN
+            if np.any((piece & mask) == mask):
+                return True
+        return False
+    finally:
+        tracker.free(handle)
+
+
+# ---------------------------------------------------------------------------
+# jnp variants (used inside jitted steps; the Pallas kernel in
+# repro.kernels.overflow_check implements the same contract with explicit
+# VMEM tiling).
+# ---------------------------------------------------------------------------
+
+def baseline_overflow_check_jnp(grad):
+    """The chained formulation, for inclusion in a jitted graph.
+
+    Note XLA may fuse this anyway on TPU — the paper's cost is on the *host*
+    (eager torch); we keep this as the semantic baseline.
+    """
+    import jax.numpy as jnp
+    a = jnp.abs(grad)
+    return jnp.isinf(a).any() | jnp.isnan(grad).any()
+
+
+def fused_overflow_check_jnp(grad):
+    """Bitwise single-pass formulation in jnp."""
+    import jax.numpy as jnp
+    from jax import lax
+    dtype = np.dtype(grad.dtype)
+    if dtype == np.dtype(np.float32):
+        uint_t, mask = jnp.uint32, 0x7F80_0000
+    elif dtype.name == "bfloat16":
+        uint_t, mask = jnp.uint16, 0x7F80
+    elif dtype == np.dtype(np.float16):
+        uint_t, mask = jnp.uint16, 0x7C00
+    else:
+        raise TypeError(f"unsupported dtype {dtype}")
+    bits = lax.bitcast_convert_type(grad, uint_t)
+    return jnp.any((bits & uint_t(mask)) == uint_t(mask))

@@ -1,0 +1,103 @@
+"""Parameter swapper: the SSD→host prefetch pipeline (paper Fig. 5/6).
+
+The swapper sits between the tensor store (SSD) and the device: when the
+training engine is about to need block *i*'s weights, the swapper has
+already (a) checked a pool slot out of the parameter buffer pool, (b) issued
+the SSD read into that slot from a worker thread, and keeps (c) a bounded
+number of blocks "in flight" — the prefetch depth N that sizes the pool.
+
+The engine calls :meth:`prefetch` ahead of use and :meth:`get` at use time;
+``get`` blocks on the outstanding read, hands back a typed numpy view of the
+pool slot, and the engine releases the slot once the tensor has been copied
+to the device (H2D), returning capacity to the pool — exactly the lifecycle
+in §IV-A.
+"""
+
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future
+from dataclasses import dataclass
+
+import numpy as np
+
+from .buffer_pool import BufferPoolBase, PoolBuffer
+from .nvme import TensorStore
+
+
+@dataclass
+class FetchTicket:
+    key: str
+    buf: PoolBuffer
+    future: Future
+    dtype: object
+    shape: tuple
+
+    def wait(self) -> np.ndarray:
+        self.future.result()
+        return self.buf.view(self.dtype, self.shape)
+
+    def release(self) -> None:
+        self.buf.release()
+
+
+class ParameterSwapper:
+    """Bounded-depth asynchronous SSD→pool prefetcher."""
+
+    def __init__(self, store: TensorStore, pool: BufferPoolBase,
+                 *, class_of: dict[str, str] | None = None) -> None:
+        self.store = store
+        self.pool = pool
+        self.class_of = class_of or {}
+        self._inflight: dict[str, FetchTicket] = {}
+        self._lock = threading.Lock()
+
+    def _shape_class(self, key: str, explicit: str | None) -> str:
+        if explicit is not None:
+            return explicit
+        try:
+            return self.class_of[key]
+        except KeyError:
+            raise KeyError(
+                f"no shape class registered for {key!r}; pass class_name=") from None
+
+    def prefetch(self, key: str, dtype, shape, *,
+                 class_name: str | None = None) -> FetchTicket:
+        """Queue an async read of ``key`` into a pool slot; idempotent."""
+        with self._lock:
+            if key in self._inflight:
+                return self._inflight[key]
+        cls = self._shape_class(key, class_name)
+        nbytes = int(np.dtype(dtype).itemsize * np.prod(shape, dtype=np.int64))
+        buf = self.pool.acquire(cls, nbytes, tag=key)  # may block = backpressure
+        out = buf.view(dtype, shape)
+        future = self.store.read_async(key, out)
+        ticket = FetchTicket(key, buf, future, dtype, shape)
+        with self._lock:
+            self._inflight[key] = ticket
+        return ticket
+
+    def get(self, key: str, dtype, shape, *,
+            class_name: str | None = None) -> FetchTicket:
+        """Fetch (prefetched or not) and wait for the data to be resident."""
+        with self._lock:
+            ticket = self._inflight.pop(key, None)
+        if ticket is None:
+            ticket = self.prefetch(key, dtype, shape, class_name=class_name)
+            with self._lock:
+                self._inflight.pop(key, None)
+        else:
+            pass
+        ticket.wait()
+        return ticket
+
+    def drain(self) -> None:
+        """Wait out and release everything in flight (error paths/tests)."""
+        with self._lock:
+            tickets = list(self._inflight.values())
+            self._inflight.clear()
+        for t in tickets:
+            try:
+                t.wait()
+            finally:
+                t.release()

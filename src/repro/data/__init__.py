@@ -1,0 +1,3 @@
+from .pipeline import SyntheticTextDataset, DataLoader, make_batch_specs
+
+__all__ = ["SyntheticTextDataset", "DataLoader", "make_batch_specs"]

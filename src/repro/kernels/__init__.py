@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for MemAscend's compute hot-spots.
+
+* :mod:`overflow_check` — the paper's fused Inf/NaN scan (Algorithm 1),
+* :mod:`fused_adam` — the host-optimizer analogue: fused AdamW + bf16 emit,
+* :mod:`swa_attention` — banded flash attention for the long_500k shape.
+
+``ops`` holds jitted wrappers; ``ref`` the pure-jnp oracles the tests sweep
+against.  On this CPU container the kernels run in interpret mode; BlockSpec
+tiling targets TPU (8,128) fp32 tiles and MXU-aligned matmul dims.
+"""
+
+from . import ops, ref
+from .ops import fused_adam, overflow_check, swa_attention
+
+__all__ = ["ops", "ref", "overflow_check", "fused_adam", "swa_attention"]

@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: fused gradient-overflow check (paper Algorithm 1).
+
+TPU-native adaptation of MemAscend's fused overflow check (DESIGN §2): the
+flat gradient buffer streams HBM→VMEM in (block_m, 128) tiles; each tile is
+bit-cast and tested for the IEEE-754 all-ones exponent (Inf or NaN); a
+single (1,1) int32 flag accumulates across the sequential TPU grid.  No
+full-size temporaries are ever materialized — the kernel's extra footprint
+is one VMEM tile, vs the baseline chain's 2.25× HBM spike.
+
+The paper's early exit (Algorithm 1 line 7) maps to predicated *skipping*:
+once the flag is set, later tiles still stream but skip the test work
+(`pl.when`).  A TPU grid cannot abort, so bandwidth is still paid — the
+compute saving mirrors the OpenMP break semantics as closely as the
+hardware allows (noted in DESIGN.md).
+
+Exponent masks: fp32 0x7F80_0000; bf16 0x7F80; fp16 0x7C00.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128          # TPU lane width
+DEFAULT_BLOCK_M = 512   # (512, 128) fp32 tile = 256 KiB of VMEM
+
+_MASKS = {
+    jnp.dtype(jnp.float32): (jnp.uint32, 0x7F80_0000),
+    jnp.dtype(jnp.bfloat16): (jnp.uint16, 0x7F80),
+    jnp.dtype(jnp.float16): (jnp.uint16, 0x7C00),
+}
+
+
+def _overflow_kernel(x_ref, flag_ref, *, uint_t, mask):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        flag_ref[0, 0] = jnp.int32(0)
+
+    @pl.when(flag_ref[0, 0] == 0)   # "early exit": skip work once flagged
+    def _check():
+        bits = jax.lax.bitcast_convert_type(x_ref[...], uint_t)
+        hit = jnp.any((bits & uint_t(mask)) == uint_t(mask))
+        flag_ref[0, 0] = hit.astype(jnp.int32)
+
+
+def overflow_check_pallas(x, *, block_m: int = DEFAULT_BLOCK_M,
+                          interpret: bool = True):
+    """True iff any element of ``x`` is Inf or NaN.
+
+    ``x`` may be any shape/size; it is padded (with zeros, which never
+    trigger) to a (M, 128) layout.
+    """
+    dtype = jnp.dtype(x.dtype)
+    if dtype not in _MASKS:
+        raise TypeError(f"overflow check: unsupported dtype {dtype}")
+    uint_t, mask = _MASKS[dtype]
+
+    flat = x.reshape(-1)
+    n = flat.size
+    rows = -(-n // LANE)
+    rows = -(-rows // block_m) * block_m          # multiple of block_m
+    padded = jnp.zeros((rows * LANE,), dtype).at[:n].set(flat)
+    tiled = padded.reshape(rows, LANE)
+    grid = rows // block_m
+
+    flag = pl.pallas_call(
+        functools.partial(_overflow_kernel, uint_t=uint_t, mask=mask),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((block_m, LANE), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        interpret=interpret,
+    )(tiled)
+    return flag[0, 0] > 0

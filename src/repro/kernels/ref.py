@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_overflow_check(x) -> jnp.ndarray:
+    """Scalar bool: any Inf/NaN in x."""
+    x32 = x.astype(jnp.float32)
+    return jnp.isinf(x32).any() | jnp.isnan(x32).any()
+
+
+def ref_fused_adam(p, g, m, v, step, *, lr=1e-4, beta1=0.9, beta2=0.999,
+                   eps=1e-8, weight_decay=0.0, out_dtype=jnp.bfloat16):
+    p = p.astype(jnp.float32)
+    g = g.astype(jnp.float32)
+    m = beta1 * m + (1.0 - beta1) * g
+    v = beta2 * v + (1.0 - beta2) * jnp.square(g)
+    t = jnp.asarray(step, jnp.float32)
+    bias1 = 1.0 - beta1 ** t
+    bias2 = 1.0 - beta2 ** t
+    update = (m / bias1) / (jnp.sqrt(v / bias2) + eps)
+    if weight_decay:
+        update = update + weight_decay * p
+    p_new = p - lr * update
+    return p_new, m, v, p_new.astype(out_dtype)
+
+
+def ref_swa_attention(q, k, v, *, window: int = 0, causal: bool = True):
+    """Materialized-score banded attention.  Shapes as the kernel."""
+    b, h, s, d = q.shape
+    kh = k.shape[1]
+    n_rep = h // kh
+    k = jnp.repeat(k, n_rep, axis=1)
+    v = jnp.repeat(v, n_rep, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window:
+        mask = mask & (k_pos > q_pos - window)
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)

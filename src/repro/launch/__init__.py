@@ -1,0 +1,9 @@
+"""Launchers: mesh construction, multi-pod dry-run, roofline, training CLI.
+
+NOTE: do not import ``dryrun`` from here — it sets XLA_FLAGS at import time
+and must only be imported as the entry module of a dedicated process.
+"""
+
+from .mesh import make_production_mesh, make_host_mesh, batch_axes
+
+__all__ = ["make_production_mesh", "make_host_mesh", "batch_axes"]

@@ -1,0 +1,314 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape) pair this lowers + compiles the
+jitted step against the production mesh — 16x16 = 256 chips single-pod and
+2x16x16 = 512 chips multi-pod — using ShapeDtypeStruct stand-ins (no
+allocation).  ``compiled.memory_analysis()`` proves the layout fits;
+``cost_analysis()`` + an HLO collective-bytes parse feed §Roofline.
+
+The 512 placeholder host devices are forced by the XLA_FLAGS line ABOVE ANY
+OTHER IMPORT — jax locks the device count on first init.  Never set that
+flag globally: smoke tests and benchmarks must see 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh pod|multipod|both]
+Results are cached as JSON under experiments/dryrun/<mesh>/ (resumable).
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, INPUT_SHAPES, get_config
+from repro.models import build, shape_supported, variant_for_shape
+from repro.launch.mesh import make_production_mesh
+from repro.serve.decode import build_serve_step
+from repro.train.step import build_prefill_step, build_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+_ARRAY_RE = re.compile(r"\b(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+
+
+def _array_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _ARRAY_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result-shape bytes of every collective op in the HLO, by kind.
+
+    These are GLOBAL logical bytes (the result array of the collective);
+    per-chip link traffic is derived in roofline.py.
+    """
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        lhs, rhs = s.split("=", 1)
+        rhs = rhs.strip()
+        m = re.match(r"^(\([^)]*\)|\S+)\s+([a-z0-9-]+)", rhs)
+        if not m:
+            continue
+        op = m.group(2)
+        # normalize fusion/start/done variants: all-gather-start etc.
+        base = None
+        for kind in _COLLECTIVES:
+            if op == kind or op.startswith(kind + "-"):
+                base = kind
+                break
+        if base is None or op.endswith("-done"):
+            continue
+        out[base] += _array_bytes(m.group(1))
+        counts[base] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+def make_act_hint(mesh):
+    """Activation-sharding re-assertion: batch over ("pod","data")."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import batch_axes
+    dp = batch_axes(mesh)
+    sh3 = NamedSharding(mesh, P(dp, None, None))
+
+    def hint(x):
+        if getattr(x, "ndim", 0) == 3 and x.shape[0] % 16 == 0:
+            return jax.lax.with_sharding_constraint(x, sh3)
+        return x
+
+    return hint
+
+
+def _lower_one(cfg, shape, mesh, *, check_overflow=True, remat=True,
+               unroll=False, serve_param_mode="zero3", act_hint=False,
+               bf16_logits=False, device_params_bf16=False):
+    """Lower + compile one config; returns (compiled, t_lower, t_compile)."""
+    impl = build(cfg, remat=remat, unroll=unroll,
+                 hint=make_act_hint(mesh) if act_hint else None,
+                 bf16_logits=bf16_logits)
+    params_sds = jax.eval_shape(impl.init_params, jax.random.PRNGKey(0))
+    if device_params_bf16:
+        # ZeRO-Infinity device weights are half precision (the fp32 master
+        # lives on the host/SSD); lower the device program accordingly.
+        params_sds = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, jnp.bfloat16)
+            if a.dtype == jnp.float32 else a, params_sds)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        batch_sds = impl.input_specs(shape)
+        fn, in_sh, out_sh = build_train_step(
+            impl, mesh, batch_shape=batch_sds, check_overflow=check_overflow)
+        scale_sds = jax.ShapeDtypeStruct((), jnp.float32)
+        lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(
+            params_sds, batch_sds, scale_sds)
+    elif shape.kind == "prefill":
+        batch_sds = impl.input_specs(shape)
+        fn, in_sh, out_sh = build_prefill_step(impl, mesh,
+                                               batch_shape=batch_sds)
+        lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(
+            params_sds, batch_sds)
+    else:  # decode
+        fn, in_sh, out_sh, (cache_sds, tok_sds, len_sds) = build_serve_step(
+            impl, mesh, shape, param_mode=serve_param_mode)
+        lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=(1,)).lower(
+            params_sds, cache_sds, tok_sds, len_sds)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    return compiled, t_lower, time.time() - t0
+
+
+def _cost_record(compiled) -> dict:
+    cost = compiled.cost_analysis() or {}
+    return {k: float(v) for k, v in cost.items()
+            if isinstance(v, (int, float))
+            and k in ("flops", "bytes accessed", "transcendentals")}
+
+
+def _depth_variant(cfg, groups: int):
+    """Config with n_layers = groups * period (and scaled whisper encoder)."""
+    from dataclasses import replace
+    from repro.models.transformer import layer_period
+    if cfg.family == "audio":
+        return replace(cfg, n_layers=groups, encoder_layers=groups)
+    p = layer_period(cfg)
+    return replace(cfg, n_layers=groups * p)
+
+
+def lower_pair(arch: str, shape_name: str, mesh, *, check_overflow=True,
+               remat=True, calibrate=True, serve_param_mode="zero3",
+               act_hint=False, bf16_logits=False, device_params_bf16=False):
+    """Lower + compile one (arch, shape, mesh); returns the record dict.
+
+    Two-part measurement (see EXPERIMENTS.md §Dry-run methodology):
+
+    1. The FULL, DEPLOYABLE program — scan-over-layers + remat — is
+       compiled; its ``memory_analysis`` is the fits-proof and its HLO the
+       collective-schedule artifact.  XLA's cost analysis counts while-loop
+       bodies ONCE, so its flops/bytes/collectives under-count depth.
+    2. CALIBRATION: two shallow variants (1 and 2 layer-groups, layer scan
+       unrolled) are compiled with identical shapes/sharding.  The cost
+       delta is the exact per-group cost; total = C1 + (G-1)*(C2-C1).
+       Inner sequence scans (mamba chunks, sLSTM steps) remain rolled in
+       both — their unrolled-vs-rolled delta is an O(d_state/d_model)
+       relative error, bounded analytically in §Roofline.
+    """
+    shape = INPUT_SHAPES[shape_name]
+    base_cfg = get_config(arch)
+    ok, reason = shape_supported(base_cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": reason}
+    cfg = variant_for_shape(base_cfg, shape)
+
+    perf_kw = dict(serve_param_mode=serve_param_mode, act_hint=act_hint,
+                   bf16_logits=bf16_logits,
+                   device_params_bf16=device_params_bf16)
+    compiled, t_lower, t_compile = _lower_one(
+        cfg, shape, mesh, check_overflow=check_overflow, remat=remat,
+        **perf_kw)
+    mem = compiled.memory_analysis()
+    mem_rec = {}
+    if mem is not None:
+        for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+            mem_rec[field] = int(getattr(mem, field, 0) or 0)
+    raw_cost = _cost_record(compiled)
+    raw_coll = collective_bytes(compiled.as_text())
+
+    from repro.models.transformer import layer_period
+    n_groups = cfg.n_layers if cfg.family == "audio" \
+        else cfg.n_layers // layer_period(cfg)
+
+    extrap = None
+    if calibrate and n_groups >= 2:
+        c1, *_ = _lower_one(_depth_variant(cfg, 1), shape, mesh,
+                            check_overflow=check_overflow, remat=remat,
+                            unroll=True, **perf_kw)
+        c2, *_ = _lower_one(_depth_variant(cfg, 2), shape, mesh,
+                            check_overflow=check_overflow, remat=remat,
+                            unroll=True, **perf_kw)
+        cost1, cost2 = _cost_record(c1), _cost_record(c2)
+        coll1 = collective_bytes(c1.as_text())
+        coll2 = collective_bytes(c2.as_text())
+        extrap = {"cost": {}, "collectives": {"bytes": {}, "counts": {}}}
+        for k in set(cost1) | set(cost2):
+            a, b = cost1.get(k, 0.0), cost2.get(k, 0.0)
+            # clamped: per-group cost can't be negative, and the calibrated
+            # total can't be below the (counted-once) rolled measurement
+            est = a + (n_groups - 1) * max(b - a, 0.0)
+            extrap["cost"][k] = max(est, raw_cost.get(k, 0.0))
+        for k in _COLLECTIVES:
+            a, b = coll1["bytes"][k], coll2["bytes"][k]
+            est = a + (n_groups - 1) * max(b - a, 0)
+            extrap["collectives"]["bytes"][k] = max(
+                est, raw_coll["bytes"][k])
+            ca, cb = coll1["counts"][k], coll2["counts"][k]
+            extrap["collectives"]["counts"][k] = ca + \
+                (n_groups - 1) * max(cb - ca, 0)
+        extrap["collectives"]["total_bytes"] = sum(
+            extrap["collectives"]["bytes"].values())
+        extrap["n_groups"] = n_groups
+        extrap["calib_g1_cost"] = cost1
+        extrap["calib_g2_cost"] = cost2
+
+    n_chips = mesh.devices.size
+    return {
+        "arch": arch, "shape": shape_name, "status": "ok",
+        "kind": shape.kind,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "n_chips": n_chips,
+        "sliding_window": cfg.sliding_window,
+        "params_total": cfg.param_count(),
+        "params_active": cfg.param_count(active_only=True),
+        "lower_seconds": round(t_lower, 2),
+        "compile_seconds": round(t_compile, 2),
+        "memory": mem_rec,
+        "cost_raw": raw_cost,
+        "collectives_raw": raw_coll,
+        "cost": (extrap or {}).get("cost", raw_cost),
+        "collectives": (extrap or {}).get("collectives", raw_coll),
+        "calibrated": extrap is not None,
+    }
+
+
+def run_all(meshes: list[str], archs, shapes, out_dir: str,
+            *, force: bool = False):
+    for mesh_name in meshes:
+        mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+        mdir = os.path.join(out_dir, mesh_name)
+        os.makedirs(mdir, exist_ok=True)
+        with mesh:
+            for arch in archs:
+                for shape_name in shapes:
+                    path = os.path.join(
+                        mdir, f"{arch}__{shape_name}.json".replace("/", "_"))
+                    if os.path.exists(path) and not force:
+                        print(f"[cached] {mesh_name} {arch} {shape_name}")
+                        continue
+                    print(f"[dryrun] {mesh_name} {arch} {shape_name} ...",
+                          flush=True)
+                    try:
+                        rec = lower_pair(arch, shape_name, mesh)
+                    except Exception as e:  # a failure here is a real bug
+                        rec = {"arch": arch, "shape": shape_name,
+                               "status": "error", "error": repr(e),
+                               "traceback": traceback.format_exc()}
+                        print(f"  ERROR: {e}")
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=2)
+                    if rec["status"] == "ok":
+                        print(f"  ok: compile={rec['compile_seconds']}s "
+                              f"flops={rec['cost'].get('flops', 0):.3e} "
+                              f"coll={rec['collectives']['total_bytes']:.3e}B")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(OUT_DIR))
+    args = ap.parse_args()
+
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    archs = list(ARCHS) if args.arch is None else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape is None else [args.shape]
+    run_all(meshes, archs, shapes, args.out, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Production mesh definition (functions only — importing this module never
+touches jax device state; the dry-run sets XLA_FLAGS before first jax init).
+
+Target hardware: TPU v5e pods.
+  single pod : 16 x 16 = 256 chips, axes ("data", "model")
+  multi-pod  : 2 x 16 x 16 = 512 chips, axes ("pod", "data", "model")
+
+"pod" composes with "data" for gradient reduction (batch axes are
+("pod", "data")); "model" carries tensor/expert parallelism.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh for CPU smoke tests."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    """Mesh axes that carry the batch (data parallel + pod)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh, *names: str) -> int:
+    out = 1
+    for n in names:
+        out *= mesh.shape[n]
+    return out

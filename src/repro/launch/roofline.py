@@ -1,0 +1,181 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Hardware model (TPU v5e, per chip):
+    peak bf16 compute   197 TFLOP/s
+    HBM bandwidth       819 GB/s
+    ICI link bandwidth  ~50 GB/s/link
+
+Three terms per (arch x shape x mesh), in seconds per step:
+
+    compute    = HLO_FLOPs_per_chip / 197e12
+    memory     = HLO_bytes_per_chip / 819e9
+    collective = link_bytes_per_chip / 50e9
+
+Sources: the dry-run's calibrated ``cost_analysis`` (flops, bytes accessed;
+while-loop depth corrected by the G1/G2 calibration — see dryrun.py) and
+the HLO collective parse.  Collective *link* bytes per chip are derived
+from result-shape bytes with the standard ring factors:
+
+    all-gather          result x (n-1)/n      ~= result
+    all-reduce          2 x result            (reduce-scatter + all-gather)
+    reduce-scatter      result x (n-1)       ~= input
+    all-to-all          result x (n-1)/n      ~= result
+    collective-permute  result
+
+``n`` (the participant count) is not in the HLO text dump, so the ~=
+column is used (exact for large n; documented in EXPERIMENTS.md).  For
+reduce-scatter we conservatively use result x 1 — XLA's RS results here are
+full-shard outputs of grad reductions whose inputs were already counted by
+the paired all-gather.
+
+MODEL_FLOPS uses 6*N*D (train), 2*N*D (prefill), 2*N*B (decode), with
+N = active params; the ratio MODEL_FLOPS / (HLO_FLOPs x chips) flags remat
+and redundant-compute waste (ratio < 1 expected under remat: the extra
+forward puts HLO at ~8/6 of model flops before attention terms).
+
+Known under-count (documented): inner sequence scans (mamba chunk scan,
+sLSTM per-step scan) remain rolled in the calibration models; the missed
+terms are O(d_state/d_model) and O(1/slstm_every) relative — bounded in the
+per-arch notes emitted below.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from dataclasses import dataclass
+
+from repro.configs import ARCHS, INPUT_SHAPES
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+GiB = 1 << 30
+
+
+def link_bytes(coll: dict) -> float:
+    b = coll["bytes"]
+    return (b.get("all-gather", 0)
+            + 2 * b.get("all-reduce", 0)
+            + b.get("reduce-scatter", 0)
+            + b.get("all-to-all", 0)
+            + b.get("collective-permute", 0))
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = ARCHS[arch]
+    shape = INPUT_SHAPES[shape_name]
+    n = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch      # decode: one token per request
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops_global: float
+    useful_ratio: float
+    fits: bool
+    temp_gib_per_chip: float
+    note: str
+
+    def row(self) -> str:
+        return (f"| {self.arch} | {self.shape} | {self.compute_s:.3e} | "
+                f"{self.memory_s:.3e} | {self.collective_s:.3e} | "
+                f"**{self.dominant}** | {self.useful_ratio:.2f} | "
+                f"{self.temp_gib_per_chip:.1f} | {self.note} |")
+
+
+def _recommendation(r: "Roofline") -> str:
+    if r.dominant == "collective":
+        return ("collective-bound: cut all-gather/all-reduce volume "
+                "(reshard weights so the gather matches use, overlap with "
+                "compute)")
+    if r.dominant == "memory":
+        return ("HBM-bound: shrink activation traffic (fusion, smaller "
+                "remat working set, bf16 intermediates)")
+    return ("compute-bound: already at the useful-work ceiling; gains come "
+            "from cutting remat recompute or idle MXU (larger per-chip "
+            "batch)")
+
+
+def analyze(record: dict) -> Roofline | None:
+    if record.get("status") != "ok":
+        return None
+    chips = record["n_chips"]
+    flops = record["cost"].get("flops", 0.0)
+    bytes_acc = record["cost"].get("bytes accessed", 0.0)
+    lb = link_bytes(record["collectives"])
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_acc / HBM_BW
+    collective_s = lb / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(record["arch"], record["shape"])
+    hlo_global = flops * chips
+    ratio = mf / hlo_global if hlo_global else 0.0
+    temp = record["memory"].get("temp_size_in_bytes", 0) / GiB
+    r = Roofline(record["arch"], record["shape"], record["mesh"],
+                 compute_s, memory_s, collective_s, dominant, mf,
+                 hlo_global, ratio, temp < 16.0, temp, "")
+    r.note = _recommendation(r)
+    return r
+
+
+def load_records(out_dir: str, mesh: str) -> list[dict]:
+    recs = []
+    mdir = os.path.join(out_dir, mesh)
+    for f in sorted(os.listdir(mdir)):
+        if f.endswith(".json"):
+            recs.append(json.load(open(os.path.join(mdir, f))))
+    return recs
+
+
+def report(out_dir: str, mesh: str) -> str:
+    lines = [
+        f"### Roofline — {mesh} mesh",
+        "",
+        "| arch | shape | compute (s) | memory (s) | collective (s) | "
+        "dominant | useful ratio | temp GiB/chip | what would move it |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    skipped = []
+    for rec in load_records(out_dir, mesh):
+        r = analyze(rec)
+        if r is None:
+            skipped.append(f"{rec['arch']}/{rec['shape']}: "
+                           f"{rec.get('reason', rec.get('error', '?'))[:90]}")
+            continue
+        lines.append(r.row())
+    if skipped:
+        lines += ["", "Skipped:"] + [f"- {s}" for s in skipped]
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "..", "experiments",
+        "dryrun"))
+    ap.add_argument("--mesh", default="pod")
+    args = ap.parse_args()
+    print(report(os.path.abspath(args.out), args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,253 @@
+"""Sharding rules: parameter / batch / cache PartitionSpecs per architecture.
+
+ZeRO-3-flavored layout (DESIGN §5): every weight is sharded over BOTH the
+``data`` axis (stage-3 parameter partitioning — XLA inserts the per-layer
+all-gather that ZeRO-Infinity performs explicitly, paper Fig. 1) and the
+``model`` axis (tensor parallelism: column/row splits, vocab-sharded
+embeddings, expert parallelism for MoE stacks).
+
+All assignments are divisibility-gated: a dim is only sharded by an axis
+(set) whose total size divides it — whisper's 6 heads or MQA's single KV
+head simply stay replicated on that dim rather than failing to lower.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, InputShape
+from .mesh import batch_axes
+
+
+# ---------------------------------------------------------------------------
+# generic machinery
+# ---------------------------------------------------------------------------
+
+def _axes_size(mesh, cand) -> int:
+    names = cand if isinstance(cand, tuple) else (cand,)
+    return math.prod(mesh.shape[n] for n in names)
+
+
+def greedy_spec(mesh, shape, dim_prefs) -> P:
+    """Assign each dim the first candidate axis(es) that divide it, without
+    reusing any mesh axis across dims."""
+    used: set[str] = set()
+    parts = []
+    for dim, prefs in zip(shape, dim_prefs):
+        chosen = None
+        for cand in prefs or ():
+            names = cand if isinstance(cand, tuple) else (cand,)
+            if any(n not in mesh.axis_names or n in used for n in names):
+                continue
+            if dim % _axes_size(mesh, cand) == 0:
+                chosen = cand
+                used.update(names)
+                break
+        parts.append(chosen)
+    return P(*parts)
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+_COL_SUFFIXES = (  # (in, out) weights split column-wise: out -> model
+    "attn.w_q", "attn.w_k", "attn.w_v", "attn.w_dq", "attn.w_uq",
+    "attn.w_dkv", "attn.w_ukv", "xattn.w_q", "xattn.w_k", "xattn.w_v",
+    "ffn.w_up", "ffn.w_gate", "ssm.w_in_x", "ssm.w_in_z", "ssm.w_dt_in",
+    "ssm.w_b", "ssm.w_c", "ssm.w_dt",
+    "mlstm.w_q", "mlstm.w_k", "mlstm.w_v", "mlstm.w_gates", "slstm.w_x",
+    "moe.w_router", "moe.shared_up", "moe.shared_gate", "mtp_proj",
+)
+_ROW_SUFFIXES = (  # (in, out) weights split row-wise: in -> model
+    "attn.w_o", "xattn.w_o", "ffn.w_down", "ssm.w_out", "mlstm.w_o",
+    "slstm.w_o", "moe.shared_down",
+)
+
+
+def _param_dim_prefs(key: str, ndim: int, stacked: bool):
+    """Dim preferences for one parameter leaf (before group-stack prefix).
+
+    Each dim gets an ordered candidate list of axis names / axis tuples.
+    """
+    if key == "embed":
+        prefs = [["model"], ["data"]]          # (vocab, d)
+    elif key == "head":
+        prefs = [["data"], ["model"]]          # (d, vocab)
+    elif key in ("moe.w_up", "moe.w_gate"):
+        prefs = [["model"], ["data"], []]      # (E, d, F): expert parallel
+    elif key == "moe.w_down":
+        prefs = [["model"], [], ["data"]]      # (E, F, d)
+    elif key == "ssm.conv_w":
+        prefs = [[], ["model"]]                # (K, di)
+    elif key == "ssm.a_log":
+        prefs = [["model"], []]                # (di, ds)
+    elif key == "slstm.r":
+        prefs = [["model"], [], []]            # (H, hd, 4hd)
+    elif key in _COL_SUFFIXES:
+        prefs = [["data"], ["model"]]
+    elif key in _ROW_SUFFIXES:
+        prefs = [["model"], ["data"]]
+    elif ndim == 1:
+        prefs = [[]]                           # norms, biases: replicated
+    elif ndim == 2:
+        prefs = [["data"], ["model"]]          # default column split
+    else:
+        prefs = [[] for _ in range(ndim)]
+    if stacked:
+        prefs = [[]] + prefs                   # leading group axis: replicated
+    return prefs
+
+
+def _leaf_key(path) -> str:
+    """Last string key on a tree path ('attn.w_q', 'embed', ...)."""
+    for entry in reversed(path):
+        if hasattr(entry, "key") and isinstance(entry.key, str):
+            return entry.key
+    return ""
+
+
+def _is_stacked(path) -> bool:
+    for entry in path:
+        if hasattr(entry, "key") and entry.key == "groups":
+            return True
+        if hasattr(entry, "key") and entry.key in ("enc_layers", "dec_layers"):
+            return True
+    return False
+
+
+def param_specs(cfg: ModelConfig, params_shape, mesh, *,
+                mode: str = "zero3"):
+    """PartitionSpec tree for a params tree (or its eval_shape).
+
+    mode="zero3" (training default): weights sharded over BOTH data (ZeRO-3
+    stage-3 partitioning) and model (tensor parallel) — XLA all-gathers per
+    layer, exactly ZeRO-Infinity's schedule.
+
+    mode="tp" (serving, beyond-paper — EXPERIMENTS.md §Perf): weights
+    sharded over the model axis only and REPLICATED across data.  Decode
+    executes the same weight matmul every step; gathering a ZeRO-3 shard per
+    token makes every decode step collective-bound.  TP-only costs
+    (data_parallel-1)x more HBM for weights but removes the per-token
+    parameter all-gather entirely — the standard inference-engine layout.
+    """
+    if mode not in ("zero3", "tp"):
+        raise ValueError(f"unknown param mode {mode!r}")
+
+    def spec_for(path, leaf):
+        key = _leaf_key(path)
+        stacked = _is_stacked(path)
+        ndim = len(leaf.shape) - (1 if stacked else 0)
+        prefs = _param_dim_prefs(key, ndim, stacked)
+        if mode == "tp":
+            prefs = [[c for c in dim_prefs
+                      if "data" not in (c if isinstance(c, tuple) else (c,))
+                      and "pod" not in (c if isinstance(c, tuple) else (c,))]
+                     for dim_prefs in prefs]
+        return greedy_spec(mesh, leaf.shape, prefs)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+def param_shardings(cfg, params_shape, mesh, *, mode: str = "zero3"):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(cfg, params_shape, mesh, mode=mode))
+
+
+# ---------------------------------------------------------------------------
+# batches (train / prefill)
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, batch_shape, mesh):
+    """Shard the global batch over ("pod","data"); seq stays unsharded for
+    training (attention needs full-sequence locality per shard)."""
+    dp = batch_axes(mesh)
+
+    def spec_for(path, leaf):
+        prefs = [[dp]] + [[] for _ in leaf.shape[1:]]
+        return greedy_spec(mesh, leaf.shape, prefs)
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch_shape)
+
+
+def batch_shardings(cfg, batch_shape, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        batch_specs(cfg, batch_shape, mesh))
+
+
+# ---------------------------------------------------------------------------
+# decode caches
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, cache_shape, mesh):
+    """Decode-state sharding.
+
+    KV-ish caches (ndim>=3 with a seq dim): batch -> ("pod","data"), seq ->
+    "model" (scores contract over seq; XLA emits the partial-sum
+    all-reduce).  Recurrent states: batch -> dp, then the largest inner dim
+    -> "model".  When batch=1 (long_500k) the batch dim is unshardable and
+    inner dims pick up ("data","model") combos instead.
+    """
+    dp = batch_axes(mesh)
+
+    def spec_for(path, leaf):
+        shape = leaf.shape
+        stacked = _is_stacked_cache(path, shape)
+        dims = shape[1:] if stacked else shape
+        key = _leaf_key(path)
+        if key in ("k", "v", "xk", "xv", "ckv"):
+            # (B, S, heads..., D): batch over dp, seq over model.  The
+            # decode step consumes the PRE-UPDATE cache and merges the new
+            # token analytically (attention.gqa_decode) so the seq-sharded
+            # layout never forces a cache all-gather on the read path
+            # (§Perf decode iterations 1-3).
+            prefs = [[dp, ("data",)], [("model",), ("data", "model")]] + \
+                [[] for _ in dims[2:]]
+        elif key == "conv":
+            prefs = [[dp, ("data",)], [], [("model",), ("data", "model")]]
+        elif key == "ssm":
+            prefs = [[dp, ("data",)], [("model",), ("data", "model")], []]
+        elif key in ("c",):      # mlstm matrix state (B, H, dk, dv)
+            prefs = [[dp, ("data",)], [("model",)],
+                     [("data", "model"), ("model",)], []]
+        elif key in ("n", "h"):
+            prefs = [[dp, ("data",)], [("model",)],
+                     [("data", "model"), ("model",)]]
+        else:
+            prefs = [[dp]] + [[] for _ in dims[1:]]
+        prefs = prefs[:len(dims)] + [[] for _ in range(len(dims) - len(prefs))]
+        if stacked:
+            prefs = [[]] + prefs
+        return greedy_spec(mesh, shape, prefs)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shape)
+
+
+def _is_stacked_cache(path, shape) -> bool:
+    """Transformer caches are tuples-of-group-stacked; whisper's are
+    layer-stacked dicts.  Heuristic: tuple index present in path (the
+    per-position tuple) => stacked leading group dim."""
+    for entry in path:
+        if type(entry).__name__ == "SequenceKey":
+            return True
+        if hasattr(entry, "key") and entry.key in ("k", "v", "xk", "xv") \
+                and len(shape) == 5:
+            return True
+    return False
+
+
+def cache_shardings(cfg, cache_shape, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        cache_specs(cfg, cache_shape, mesh))
+
+
+def logits_spec(cfg: ModelConfig, mesh, global_batch: int) -> P:
+    dp = batch_axes(mesh)
+    dp_size = math.prod(mesh.shape[a] for a in dp)
+    batch_part = dp if global_batch % dp_size == 0 else None
+    vocab_ok = cfg.vocab % mesh.shape["model"] == 0
+    return P(batch_part, None, "model" if vocab_ok else None)

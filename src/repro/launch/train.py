@@ -1,0 +1,96 @@
+"""Distributed training launcher (pjit path).
+
+On real hardware this drives the (data, model) mesh via the jitted
+train_step, with the MemAscend host machinery (offloaded optimizer,
+direct-NVMe state store, fused overflow screen) wrapped around it.  In this
+container it runs reduced configs on the 1x1 host mesh — the same code
+path, one device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --steps 20 \
+      [--reduced] [--batch 4] [--seq 128]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.core.loss_scale import DynamicLossScaler
+from repro.data import DataLoader, SyntheticTextDataset
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import build
+from repro.train.step import build_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use the 16x16 mesh (requires 256 devices)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    impl = build(cfg)
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_host_mesh())
+
+    b, s = args.batch, args.seq
+    batch_sds = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    extra = {}
+    if cfg.family == "audio":
+        batch_sds["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        extra["frames"] = jnp.ones((b, cfg.encoder_seq, cfg.d_model),
+                                   jnp.bfloat16)
+    if cfg.prefix_len:
+        batch_sds["image_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.prefix_len, cfg.d_model), jnp.bfloat16)
+        extra["image_embeds"] = jnp.ones((b, cfg.prefix_len, cfg.d_model),
+                                         jnp.bfloat16)
+
+    with mesh:
+        fn, in_sh, out_sh = build_train_step(impl, mesh,
+                                             batch_shape=batch_sds)
+        step = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        params = impl.init_params(jax.random.PRNGKey(0))
+        scaler = DynamicLossScaler(scale=1.0)   # bf16 compute
+        # simple on-device SGD-on-grads demo loop (the offloaded-Adam path
+        # lives in examples/finetune_offloaded.py)
+        dl = DataLoader(SyntheticTextDataset(vocab=cfg.vocab, seed=0),
+                        batch=b, seq_len=s)
+        lr = args.lr
+        t0 = time.time()
+        for i in range(1, args.steps + 1):
+            hb = dl.next_batch()
+            batch = {"tokens": jnp.asarray(hb["tokens"]),
+                     "labels": jnp.asarray(hb["labels"]), **extra}
+            loss, grads, overflow = step(params, batch,
+                                         jnp.float32(scaler.scale))
+            if scaler.update(bool(overflow)):
+                inv = 1.0 / scaler.scale
+                params = jax.tree.map(
+                    lambda p, g: (p - lr * inv * g.astype(p.dtype)).astype(
+                        p.dtype), params, grads)
+            if i % 5 == 0 or i == 1:
+                tput = i * b * s / (time.time() - t0)
+                print(f"step {i:4d} loss {float(loss):.4f} "
+                      f"overflow={bool(overflow)} {tput:.0f} tok/s")
+    print("train loop done")
+
+
+if __name__ == "__main__":
+    main()

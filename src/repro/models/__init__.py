@@ -1,0 +1,12 @@
+"""Model zoo: dense/GQA/MLA, MoE, Mamba, xLSTM, whisper enc-dec, VLM prefix.
+
+See :mod:`repro.models.registry` for the uniform build interface.
+"""
+
+from .registry import (LONG_CONTEXT_WINDOW, ModelImpl, build,
+                       shape_supported, variant_for_shape)
+from . import transformer, whisper, layers, attention, moe, mamba, xlstm
+
+__all__ = ["build", "ModelImpl", "variant_for_shape", "shape_supported",
+           "LONG_CONTEXT_WINDOW", "transformer", "whisper", "layers",
+           "attention", "moe", "mamba", "xlstm"]

@@ -1,0 +1,245 @@
+"""Attention variants: GQA/MQA (optionally qk-norm), sliding-window, MLA.
+
+All functions take activations shaped (batch, seq, ...) and weights packed in
+plain dicts.  Decode paths consume/produce explicit KV caches so `serve_step`
+can be jitted with the cache as a donated argument.
+
+Sliding-window attention is the sub-quadratic variant used for the
+``long_500k`` shape on dense/MoE architectures (see DESIGN §4): during
+prefill the score matrix is banded (O(S·W)); during decode the cache is a
+rolling window of W entries.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, dense, rms_norm
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k, n_rep: int):
+    """(B, S, KH, D) -> (B, S, KH*n_rep, D) for GQA."""
+    if n_rep == 1:
+        return k
+    b, s, kh, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kh, n_rep, d)).reshape(
+        b, s, kh * n_rep, d)
+
+
+def attention_scores(q, k, v, *, causal: bool, window: int = 0,
+                     q_offset=0, prefix_len: int = 0):
+    """Plain softmax attention over full (or banded) scores.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, H, D).  ``q_offset`` is the absolute
+    position of q[0] (decode: cache length).  ``prefix_len`` marks a
+    bidirectional prefix (PaliGemma): positions < prefix_len attend freely.
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(d)
+    q_pos = jnp.arange(sq) + q_offset
+    k_pos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask = k_pos[None, :] <= q_pos[:, None]
+        if prefix_len:
+            # bidirectional prefix: queries in the prefix see the whole prefix
+            in_prefix = (q_pos[:, None] < prefix_len) & (k_pos[None, :] < prefix_len)
+            mask = mask | in_prefix
+    if window:
+        mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    return out.astype(q.dtype) if out.dtype != q.dtype else out
+
+
+# ---------------------------------------------------------------------------
+# GQA projection + attention (train/prefill and decode)
+# ---------------------------------------------------------------------------
+
+def gqa_project_qkv(params, x, cfg, positions):
+    """Project and rope q/k/v.  Returns (q, k, v) with heads unfolded."""
+    b, s, _ = x.shape
+    q = dense(x, params["attn.w_q"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = dense(x, params["attn.w_k"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = dense(x, params["attn.w_v"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["attn.q_norm"], cfg.rms_eps)
+        k = rms_norm(k, params["attn.k_norm"], cfg.rms_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_attention(params, x, cfg, *, causal=True, window=None,
+                  prefix_len: int = 0):
+    """Full-sequence GQA attention (train / prefill)."""
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = gqa_project_qkv(params, x, cfg, positions)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+    w = cfg.sliding_window if window is None else window
+    out = attention_scores(q, k, v, causal=causal, window=w,
+                           prefix_len=prefix_len)
+    return dense(out.reshape(b, s, -1), params["attn.w_o"])
+
+
+def gqa_decode(params, x, cfg, cache, cache_len):
+    """One-token decode against a KV cache.
+
+    cache: dict(k=(B, S_max, KH, D), v=...); ``cache_len`` — tokens already
+    cached (the new token is written at index cache_len % S_max for
+    sliding-window caches, plain cache_len otherwise).
+    Returns (out, new_cache).
+    """
+    b, one, _ = x.shape
+    assert one == 1
+    positions = jnp.full((b, 1), cache_len, dtype=jnp.int32)
+    q, k_new, v_new = gqa_project_qkv(params, x, cfg, positions)
+    s_max = cache["k"].shape[1]
+    slot = (cache_len % s_max) if cfg.sliding_window else cache_len
+
+    # Attention reads the PRE-UPDATE cache and merges the new token's
+    # contribution analytically (two-term softmax).  The updated cache is
+    # produced only as an OUTPUT: keeping the dynamic-update-slice result
+    # out of the attention dataflow lets SPMD keep the seq-sharded cache
+    # local instead of all-gathering it per layer per token (§Perf decode
+    # iteration 3 — the gather was ~77 GB/chip/token on qwen3-4b).
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    kk = _repeat_kv(cache["k"], n_rep)
+    vv = _repeat_kv(cache["v"], n_rep)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kk,
+                        preferred_element_type=jnp.float32) / math.sqrt(cfg.head_dim)
+    # valid OLD entries: first min(cache_len, s_max) slots (new token is
+    # handled separately below; for rolling caches the slot being
+    # overwritten is also stale)
+    n_valid = jnp.minimum(cache_len, s_max)
+    idx = jnp.arange(s_max)[None, None, None, :]
+    valid = idx < n_valid
+    if cfg.sliding_window:
+        valid = valid & (idx != slot)
+    scores = jnp.where(valid, scores, NEG_INF)
+
+    # two-term online-softmax merge with the new token's self-attention
+    s_new = (jnp.einsum("bqhd,bqhd->bhq", q, _repeat_kv(k_new, n_rep))
+             / math.sqrt(cfg.head_dim)).astype(jnp.float32)[..., None]
+    m_old = jnp.max(scores, axis=-1, keepdims=True)
+    m = jnp.maximum(m_old, s_new)
+    p_old = jnp.exp(scores - m)
+    p_new = jnp.exp(s_new - m)                           # (B,H,1,1)
+    denom = p_old.sum(-1, keepdims=True) + p_new
+    out_old = jnp.einsum("bhqk,bkhd->bqhd", (p_old / denom).astype(q.dtype),
+                         vv)
+    w_new = (p_new / denom)[:, :, 0].astype(q.dtype)     # (B,H,1)
+    out_new = w_new.transpose(0, 2, 1)[..., None] * _repeat_kv(v_new, n_rep)
+    out = (out_old + out_new).astype(x.dtype)
+    out = dense(out.reshape(b, 1, -1), params["attn.w_o"])
+
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, slot, 0, 0))
+    return out, {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLA: DeepSeek-V3 multi-head latent attention
+# ---------------------------------------------------------------------------
+
+def mla_project_q(params, x, cfg, positions):
+    m = cfg.mla
+    b, s, _ = x.shape
+    q_lat = dense(x, params["attn.w_dq"])                       # (B,S,q_rank)
+    if "attn.q_lat_norm" in params:
+        q_lat = rms_norm(q_lat, params["attn.q_lat_norm"], cfg.rms_eps)
+    q = dense(q_lat, params["attn.w_uq"]).reshape(
+        b, s, cfg.n_heads, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return jnp.concatenate([q_nope, q_rope], axis=-1)
+
+def mla_compress_kv(params, x, cfg, positions):
+    """Returns the cached latent: (c_kv, k_rope)."""
+    m = cfg.mla
+    ckv = dense(x, params["attn.w_dkv"])                        # (B,S,rank+rope)
+    c_kv, k_rope = jnp.split(ckv, [m.kv_lora_rank], axis=-1)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]             # shared head
+    return c_kv, k_rope
+
+def mla_expand_kv(params, c_kv, k_rope, cfg):
+    m = cfg.mla
+    b, s, _ = c_kv.shape
+    if "attn.kv_lat_norm" in params:
+        c_kv = rms_norm(c_kv, params["attn.kv_lat_norm"], cfg.rms_eps)
+    kv = dense(c_kv, params["attn.w_ukv"]).reshape(
+        b, s, cfg.n_heads, m.qk_nope_head_dim + m.v_head_dim)
+    k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
+    k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :],
+                                (b, s, cfg.n_heads, m.qk_rope_head_dim))
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    return k, v
+
+def mla_attention(params, x, cfg, *, causal=True, window=None):
+    m = cfg.mla
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q = mla_project_q(params, x, cfg, positions)
+    c_kv, k_rope = mla_compress_kv(params, x, cfg, positions)
+    k, v = mla_expand_kv(params, c_kv, k_rope, cfg)
+    w = cfg.sliding_window if window is None else window
+    out = attention_scores(q, k, v, causal=causal, window=w)
+    return dense(out.reshape(b, s, -1), params["attn.w_o"])
+
+def mla_decode(params, x, cfg, cache, cache_len):
+    """Decode with the compressed-latent cache (B, S_max, rank+rope)."""
+    m = cfg.mla
+    b = x.shape[0]
+    positions = jnp.full((b, 1), cache_len, dtype=jnp.int32)
+    q = mla_project_q(params, x, cfg, positions)
+    c_new, krope_new = mla_compress_kv(params, x, cfg, positions)
+    packed_new = jnp.concatenate([c_new, krope_new], axis=-1)
+    s_max = cache["ckv"].shape[1]
+    slot = (cache_len % s_max) if cfg.sliding_window else cache_len
+    ckv = jax.lax.dynamic_update_slice(
+        cache["ckv"], packed_new.astype(cache["ckv"].dtype), (0, slot, 0))
+    c_kv, k_rope = jnp.split(ckv, [m.kv_lora_rank], axis=-1)
+    k, v = mla_expand_kv(params, c_kv, k_rope, cfg)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    n_valid = jnp.minimum(cache_len + 1, s_max)
+    valid = jnp.arange(s_max)[None, None, None, :] < n_valid
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v).astype(x.dtype)
+    out = dense(out.reshape(b, 1, -1), params["attn.w_o"])
+    return out, {"ckv": ckv}
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attention(params, x, memory, cfg):
+    """Decoder-to-encoder attention; no rope, no mask."""
+    b, s, _ = x.shape
+    sm = memory.shape[1]
+    q = dense(x, params["xattn.w_q"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = dense(memory, params["xattn.w_k"]).reshape(b, sm, cfg.n_kv_heads,
+                                                   cfg.head_dim)
+    v = dense(memory, params["xattn.w_v"]).reshape(b, sm, cfg.n_kv_heads,
+                                                   cfg.head_dim)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+    out = attention_scores(q, k, v, causal=False)
+    return dense(out.reshape(b, s, -1), params["xattn.w_o"])

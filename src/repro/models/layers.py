@@ -1,0 +1,141 @@
+"""Shared neural-net primitives (pure jnp; no framework)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    """RMSNorm with fp32 statistics but dtype-preserving elementwise math.
+
+    Only the (…, 1) inverse-RMS is computed in fp32; the (B, S, D)-sized
+    multiply stays in x.dtype so backward cotangents stay 16-bit
+    (EXPERIMENTS.md §Perf iteration 3: full-size fp32 internals here were a
+    top source of fp32 activation collectives)."""
+    x32 = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+                          + eps)
+    return x * scale.astype(x.dtype) * (1.0 + weight).astype(x.dtype)
+
+
+def dense(x, w):
+    """x @ w.
+
+    With 16-bit operands the dot stays 16-bit end to end (the TPU MXU
+    accumulates fp32 internally for bf16 dots); an explicit
+    preferred_element_type=f32 + cast pair would force fp32 COTANGENTS in
+    the backward pass — measured as 2x activation-collective volume in the
+    gemma-7b train HLO (EXPERIMENTS.md §Perf iteration 2).  Mixed-precision
+    inputs still promote per jnp rules.
+    """
+    out = jnp.einsum("...i,io->...o", x, w)
+    return out.astype(x.dtype) if out.dtype != x.dtype else out
+
+
+def gated_mlp(x, w_up, w_down, kind: str, w_gate=None):
+    """SwiGLU / GeGLU / plain-GELU MLP.
+
+    Gate and up projections are SEPARATE tensors (not packed [gate; up]):
+    splitting a packed tensor along the tensor-parallel-sharded output dim
+    misaligns shards and forces an all-to-all per layer (§Perf iteration 4
+    — measured as the dominant activation collective in gemma-7b train).
+    """
+    h = dense(x, w_up)
+    if kind in ("swiglu", "geglu"):
+        gate = dense(x, w_gate)
+        act = jax.nn.silu(gate) if kind == "swiglu" else jax.nn.gelu(gate)
+        h = act * h
+    elif kind == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(f"unknown activation {kind!r}")
+    return dense(h, w_down)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (..., seq, heads, head_dim); positions: (..., seq).
+
+    Angles/cos/sin in fp32, rotation applied in x.dtype (16-bit cotangents;
+    see rms_norm note)."""
+    head_dim = x.shape[-1]
+    inv_freq = jnp.asarray(rope_frequencies(head_dim, theta), jnp.float32)
+    angles = positions[..., :, None].astype(jnp.float32) * inv_freq  # (.., S, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[..., :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1)
+
+
+def sinusoidal_positions(n_pos: int, dim: int):
+    """Whisper-style fixed sinusoidal embeddings."""
+    log_timescale = math.log(10_000.0) / (dim // 2 - 1)
+    inv = np.exp(-log_timescale * np.arange(dim // 2))
+    scaled = np.arange(n_pos)[:, None] * inv[None, :]
+    return np.concatenate([np.sin(scaled), np.cos(scaled)], axis=1).astype(
+        np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head / loss
+# ---------------------------------------------------------------------------
+
+def embed_lookup(table, tokens, *, scale: bool = False):
+    out = jnp.take(table, tokens, axis=0)
+    if scale:  # gemma multiplies by sqrt(d_model)
+        out = out * jnp.asarray(math.sqrt(table.shape[1]), out.dtype)
+    return out
+
+
+def lm_logits(h, table_or_head, *, transpose: bool = False):
+    """Final projection; ``transpose`` for tied embeddings (vocab, d).
+
+    The dot runs in the activation dtype and is upcast AFTER — a
+    preferred_element_type=f32 dot here seeds an fp32 cotangent that the
+    dot transpose then propagates through the ENTIRE backward pass,
+    doubling every activation collective (§Perf iteration 3: this one line
+    was the root cause).  CE still reduces in fp32 over the upcast logits.
+    """
+    w = table_or_head.T if transpose else table_or_head
+    return jnp.einsum("...d,dv->...v", h, w).astype(jnp.float32)
+
+
+def cross_entropy(logits, labels, *, mask=None):
+    """Mean token-level CE in fp32.  labels == -100 are ignored."""
+    logits = logits.astype(jnp.float32)
+    valid = (labels >= 0) if mask is None else mask
+    safe_labels = jnp.where(valid, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe_labels[..., None],
+                               axis=-1).squeeze(-1)
+    nll = (logz - gold) * valid.astype(jnp.float32)
+    return nll.sum() / jnp.maximum(valid.sum().astype(jnp.float32), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def trunc_normal(key, shape, std: float = 0.02, dtype=jnp.float32):
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def fan_in_init(key, shape, dtype=jnp.float32):
+    """1/sqrt(fan_in) trunc-normal; fan-in is the second-to-last axis so
+    stacked weights (experts (E, in, out), per-head (H, in, out)) scale by
+    their true contraction dim."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[0]
+    std = 1.0 / math.sqrt(fan_in)
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)

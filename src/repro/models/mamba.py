@@ -1,0 +1,178 @@
+"""Mamba (S6 selective SSM) mixer, chunked-parallel for TPU.
+
+The recurrence h_t = Ā_t h_{t-1} + B̄_t x_t is evaluated chunk-parallel:
+``lax.scan`` over chunks carries the (B, d_inner, d_state) state, while an
+associative scan runs inside each chunk — the TPU-idiomatic replacement for
+the CUDA selective-scan kernel (DESIGN §2: rethought for VMEM/MXU rather
+than ported).  Chunk boundaries are the only sequential dependency, so
+activation residuals stay O(L/chunk · state) instead of O(L · state).
+
+Decode carries (conv_state (B, K-1, d_inner), ssm_state (B, d_inner, d_state))
+explicitly — the constant-memory property that makes long_500k native for
+SSM/hybrid architectures.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense
+
+
+def _ssm_params(params, x, cfg):
+    """Input-dependent Δ, B, C from x: (B, L, d_inner).
+
+    Separate projections (not one packed w_x_proj) — packed-split sharding
+    note in layers.gated_mlp applies."""
+    dt = jax.nn.softplus(
+        dense(dense(x, params["ssm.w_dt_in"]), params["ssm.w_dt"])
+        + params["ssm.dt_bias"].astype(x.dtype))
+    b_in = dense(x, params["ssm.w_b"])
+    c_in = dense(x, params["ssm.w_c"])
+    return dt, b_in, c_in                                # (B,L,di), (B,L,ds) x2
+
+
+def _discretize(dt, b_in, x, a_log):
+    """Ā = exp(Δ·A) (ZOH), B̄x = Δ·B·x."""
+    a = -jnp.exp(a_log.astype(jnp.float32))              # (di, ds), negative
+    decay = jnp.exp(dt.astype(jnp.float32)[..., None] * a)        # (...,di,ds)
+    inp = (dt * x).astype(jnp.float32)[..., None] * \
+        b_in.astype(jnp.float32)[..., None, :, :].swapaxes(-2, -2)
+    return decay, inp
+
+
+def causal_conv1d(x, w, *, state=None):
+    """Depthwise causal conv, kernel K.  x: (B, L, C), w: (K, C).
+
+    With ``state`` (B, K-1, C) it is a streaming update; returns
+    (y, new_state).
+    """
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)               # (B, L+K-1, C)
+    wc = w.astype(x.dtype)
+    y = sum(xp[:, i:i + x.shape[1], :] * wc[i] for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else pad[:, :0]
+    return y, new_state
+
+
+def selective_scan(x, dt, b_in, c_in, a_log, d_skip, *, chunk: int,
+                   h0=None):
+    """Chunk-parallel selective scan.
+
+    x, dt: (B, L, di); b_in, c_in: (B, L, ds); a_log: (di, ds); d_skip: (di,).
+    Returns (y (B, L, di), h_final (B, di, ds)).
+    """
+    bsz, L, di = x.shape
+    ds = b_in.shape[-1]
+    chunk = min(chunk, L)
+    if L % chunk:
+        raise ValueError(f"seq len {L} not divisible by chunk {chunk}")
+    nc = L // chunk
+
+    a = -jnp.exp(a_log.astype(jnp.float32))                        # (di, ds)
+
+    # PERF (EXPERIMENTS.md §Perf, jamba iteration 1): the (B, L, di, ds)
+    # discretized decay/input tensors are NEVER materialized over the full
+    # sequence — Ā and B̄x are computed per chunk inside the (rematerialized)
+    # scan body, so the live working set is (B, chunk, di, ds).  The
+    # full-sequence formulation cost ~1.7 TiB/chip of XLA temps on
+    # jamba-52b train_4k; this form is the TPU-VMEM-sized equivalent of the
+    # CUDA selective-scan kernel's tiling.
+    def to_chunks(t):
+        return t.reshape(bsz, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    xc = to_chunks(x)
+    dtc = to_chunks(dt)
+    bc = to_chunks(b_in)
+    cc = to_chunks(c_in)
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, di, ds), jnp.float32)
+
+    def assoc(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    def chunk_body(h, xs):
+        x_i, dt_i, b_i, c_i = xs               # (B,chunk,di), ..., (B,chunk,ds)
+        dt32 = dt_i.astype(jnp.float32)
+        dch = jnp.exp(dt32[..., None] * a)     # (B,chunk,di,ds)
+        ich = (dt32 * x_i.astype(jnp.float32))[..., None] * \
+            b_i.astype(jnp.float32)[:, :, None, :]
+        cum_a, cum_b = jax.lax.associative_scan(assoc, (dch, ich), axis=1)
+        h_t = cum_a * h[:, None] + cum_b       # (B,chunk,di,ds)
+        y = jnp.einsum("bcds,bcs->bcd", h_t, c_i.astype(jnp.float32))
+        return h_t[:, -1], y
+
+    chunk_body = jax.checkpoint(chunk_body)
+    h_final, ys = jax.lax.scan(chunk_body, h0, (xc, dtc, bc, cc))
+    y = ys.swapaxes(0, 1).reshape(bsz, L, di)
+    y = y + d_skip.astype(jnp.float32) * x.astype(jnp.float32)
+    return y.astype(x.dtype), h_final
+
+
+def mamba_mixer(params, x, cfg):
+    """Full Mamba block mixer (train/prefill).  x: (B, L, D) -> (B, L, D)."""
+    s = cfg.ssm
+    xi = dense(x, params["ssm.w_in_x"])                  # (B,L,di)
+    z = dense(x, params["ssm.w_in_z"])
+    xi, _ = causal_conv1d(xi, params["ssm.conv_w"])
+    xi = jax.nn.silu(xi)
+    dt, b_in, c_in = _ssm_params(params, xi, cfg)
+    y, _ = selective_scan(xi, dt, b_in, c_in, params["ssm.a_log"],
+                          params["ssm.d_skip"], chunk=s.chunk)
+    y = y * jax.nn.silu(z)
+    return dense(y, params["ssm.w_out"])
+
+
+def mamba_decode(params, x, cfg, cache):
+    """One-token streaming update.  x: (B, 1, D).
+
+    cache: {"conv": (B, K-1, di), "ssm": (B, di, ds)} -> (out, new_cache).
+    """
+    xi = dense(x, params["ssm.w_in_x"])
+    z = dense(x, params["ssm.w_in_z"])
+    xi, conv_state = causal_conv1d(xi, params["ssm.conv_w"],
+                                   state=cache["conv"])
+    xi = jax.nn.silu(xi)
+    dt, b_in, c_in = _ssm_params(params, xi, cfg)
+    a = -jnp.exp(params["ssm.a_log"].astype(jnp.float32))
+    dt32 = dt[:, 0].astype(jnp.float32)                              # (B,di)
+    decay = jnp.exp(dt32[..., None] * a)                             # (B,di,ds)
+    inp = (dt32 * xi[:, 0].astype(jnp.float32))[..., None] * \
+        b_in[:, 0].astype(jnp.float32)[:, None, :]
+    h = cache["ssm"] * decay + inp
+    y = jnp.einsum("bds,bs->bd", h, c_in[:, 0].astype(jnp.float32))
+    y = y + params["ssm.d_skip"].astype(jnp.float32) * \
+        xi[:, 0].astype(jnp.float32)
+    y = (y.astype(x.dtype) * jax.nn.silu(z[:, 0]))[:, None, :]
+    out = dense(y, params["ssm.w_out"])
+    return out, {"conv": conv_state.astype(cache["conv"].dtype), "ssm": h}
+
+
+def init_mamba_params(key, cfg, dtype=jnp.float32):
+    from .layers import fan_in_init
+    s = cfg.ssm
+    d, di, ds = cfg.d_model, s.d_inner(cfg.d_model), s.d_state
+    dtr = s.dt_rank_for(d)
+    keys = jax.random.split(key, 8)
+    return {
+        "ssm.w_in_x": fan_in_init(keys[0], (d, di), dtype),
+        "ssm.w_in_z": fan_in_init(keys[5], (d, di), dtype),
+        "ssm.conv_w": fan_in_init(keys[1], (s.conv_kernel, di), dtype),
+        "ssm.w_dt_in": fan_in_init(keys[2], (di, dtr), dtype),
+        "ssm.w_b": fan_in_init(keys[6], (di, ds), dtype),
+        "ssm.w_c": fan_in_init(keys[7], (di, ds), dtype),
+        "ssm.w_dt": fan_in_init(keys[3], (dtr, di), dtype),
+        "ssm.dt_bias": jnp.full((di,), -4.6, dtype),   # softplus^-1(0.01)
+        "ssm.a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))),
+        "ssm.d_skip": jnp.ones((di,), dtype),
+        "ssm.w_out": fan_in_init(keys[4], (di, d), dtype),
+    }

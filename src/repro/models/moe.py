@@ -1,0 +1,100 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+Top-k softmax routing with an auxiliary load-balance loss; dispatch uses a
+sort + scatter formulation (no (T, E, C) one-hot tensors), so it scales to
+DeepSeek-V3's 256 experts at 64k tokens/device without materializing
+terabyte masks.  Expert weights are stacked (E, ...) so the expert axis can
+be sharded (expert parallelism over the ``model`` mesh axis -> XLA emits the
+all-to-all the paper's MoE discussion anticipates).
+
+Shared (always-on) experts, DeepSeek-style, run densely beside the routed
+path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense
+
+
+def router_topk(logits, top_k: int):
+    """Softmax-then-top-k routing.
+
+    Returns (weights (T, k) normalized over the chosen k, indices (T, k),
+    aux load-balance loss).
+    """
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)   # (T, E)
+    w, idx = jax.lax.top_k(probs, top_k)                          # (T, k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    # Switch-style aux loss: E * mean_e(frac_tokens_e * mean_prob_e)
+    n_experts = logits.shape[-1]
+    assign = jnp.zeros_like(probs).at[
+        jnp.arange(probs.shape[0])[:, None], idx].add(1.0) / top_k
+    aux = n_experts * jnp.mean(assign.mean(0) * probs.mean(0)) * top_k
+    return w.astype(jnp.float32), idx, aux
+
+
+def _positions_in_expert(flat_experts, n_tokens_k: int):
+    """Rank of each (token, choice) within its expert, via sort."""
+    order = jnp.argsort(flat_experts)                    # stable
+    sorted_e = flat_experts[order]
+    # position within run of equal expert ids
+    run_start = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos_sorted = jnp.arange(n_tokens_k) - run_start
+    pos = jnp.zeros_like(pos_sorted).at[order].set(pos_sorted)
+    return pos
+
+
+def moe_ffn(params, x, cfg):
+    """Routed expert FFN (+ shared experts).  x: (B, S, D) -> (B, S, D).
+
+    params: moe.w_router (D, E), moe.w_gate/w_up (E, D, F) each,
+    moe.w_down (E, F, D); optionally moe.shared_gate/up/down.
+    Returns (out, aux_loss).
+    """
+    e = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+
+    logits = dense(xf, params["moe.w_router"])
+    w, idx, aux = router_topk(logits, e.top_k)            # (T,k) fp32, (T,k)
+
+    capacity = int(max(e.top_k * t // e.n_experts * e.capacity_factor, 4))
+    flat_e = idx.reshape(-1)                              # (T*k,)
+    pos = _positions_in_expert(flat_e, t * e.top_k)       # (T*k,)
+    keep = pos < capacity
+    slot = jnp.where(keep, pos, 0)
+
+    token_of = jnp.repeat(jnp.arange(t), e.top_k)
+    # dispatch: (E, C, D) scatter of kept token activations
+    dispatched = jnp.zeros((e.n_experts, capacity, d), x.dtype)
+    contrib = jnp.where(keep[:, None], xf[token_of], 0).astype(x.dtype)
+    dispatched = dispatched.at[flat_e, slot].add(contrib)
+
+    # expert compute: gated MLP per expert, batched over E (gate and up
+    # are separate tensors — see layers.gated_mlp on packed-split reshards)
+    up = jnp.einsum("ecd,edf->ecf", dispatched,
+                    params["moe.w_up"]).astype(x.dtype)
+    gate = jnp.einsum("ecd,edf->ecf", dispatched,
+                      params["moe.w_gate"]).astype(x.dtype)
+    hid = jax.nn.silu(gate) * up
+    out_e = jnp.einsum("ecf,efd->ecd", hid,
+                       params["moe.w_down"]).astype(x.dtype)
+
+    # combine: gather each choice's expert output, weight, sum over k
+    gathered = out_e[flat_e, slot]                        # (T*k, D)
+    wk = (w.reshape(-1) * keep).astype(x.dtype)
+    yf = jnp.zeros((t, d), x.dtype).at[token_of].add(gathered * wk[:, None])
+
+    if "moe.shared_up" in params:
+        u = jnp.einsum("td,df->tf", xf,
+                       params["moe.shared_up"]).astype(x.dtype)
+        g = jnp.einsum("td,df->tf", xf,
+                       params["moe.shared_gate"]).astype(x.dtype)
+        yf = yf + jnp.einsum("tf,fd->td", jax.nn.silu(g) * u,
+                             params["moe.shared_down"]).astype(x.dtype)
+
+    return yf.reshape(b, s, d), aux * e.router_aux_weight

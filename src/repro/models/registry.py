@@ -1,0 +1,160 @@
+"""Model registry: one uniform interface over every assigned architecture.
+
+``build(cfg)`` returns a :class:`ModelImpl` bundling init / train-loss /
+prefill / decode functions plus ``input_specs`` (ShapeDtypeStruct stand-ins,
+no allocation) for each assigned input shape — the dry-run, smoke tests,
+and launchers all go through this.
+
+Decode semantics per family (DESIGN §4):
+* attention families — KV cache (rolling window when sliding_window>0),
+* MLA — compressed-latent cache,
+* mamba/mlstm/slstm — constant-size recurrent state,
+* whisper — decoder self-KV + precomputed cross-KV,
+* ``long_500k`` on dense/MoE archs uses the sliding-window variant
+  (window :data:`LONG_CONTEXT_WINDOW`), applied by :func:`variant_for_shape`.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, InputShape, INPUT_SHAPES
+from . import transformer as tfm
+from . import whisper as whs
+
+LONG_CONTEXT_WINDOW = 8192
+
+
+def variant_for_shape(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Config variant actually lowered for a given input shape."""
+    if shape.name == "long_500k" and cfg.family in ("dense", "moe", "vlm") \
+            and not cfg.sliding_window:
+        # sub-quadratic requirement: sliding-window variant of the dense arch
+        return replace(cfg, sliding_window=LONG_CONTEXT_WINDOW)
+    if shape.name == "long_500k" and cfg.family == "hybrid" \
+            and not cfg.sliding_window:
+        # hybrid: mamba layers are native; window the sparse attention layers
+        return replace(cfg, sliding_window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def shape_supported(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """(supported, reason-if-not).  The documented skips from DESIGN §4."""
+    if cfg.family == "audio" and shape.name == "long_500k":
+        return False, ("whisper is an enc-dec audio model with an "
+                       "architectural decoder cap (~448 tokens); no "
+                       "sub-quadratic 500k-context variant exists")
+    return True, ""
+
+
+@dataclass
+class ModelImpl:
+    cfg: ModelConfig
+    init_params: Callable          # (key) -> params
+    loss_fn: Callable              # (params, batch) -> scalar
+    prefill_fn: Callable           # (params, batch) -> logits
+    init_cache: Callable           # (batch, cache_seq, dtype) -> cache
+    decode_fn: Callable            # (params, cache, tokens, cache_len)
+    input_specs: Callable          # (shape) -> batch dict of SDS
+
+    def decode_args_specs(self, shape: InputShape, dtype=jnp.bfloat16):
+        """(cache_specs, tokens_spec, cache_len_spec) for serve lowering."""
+        cache = jax.eval_shape(
+            lambda: self.init_cache(shape.global_batch, shape.seq_len, dtype))
+        tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        cache_len = jax.ShapeDtypeStruct((), jnp.int32)
+        return cache, tokens, cache_len
+
+
+# ---------------------------------------------------------------------------
+# builders
+# ---------------------------------------------------------------------------
+
+def _lm_input_specs(cfg: ModelConfig, shape: InputShape,
+                    compute_dtype=jnp.bfloat16) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    specs = {}
+    if cfg.family == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), compute_dtype)
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return specs
+    if cfg.prefix_len:
+        specs["image_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.prefix_len, cfg.d_model), compute_dtype)
+        s = s - cfg.prefix_len      # image tokens count toward the context
+    specs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return specs
+
+
+def build(cfg: ModelConfig, *, compute_dtype=jnp.bfloat16,
+          remat: bool = True, unroll: bool = False, hint=None,
+          bf16_logits: bool = False) -> ModelImpl:
+    if cfg.family == "audio":
+        def loss_fn(params, batch):
+            return whs.whisper_loss(cfg, params, batch,
+                                    compute_dtype=compute_dtype,
+                                    unroll=unroll)
+
+        def prefill_fn(params, batch):
+            memory = whs.encode(cfg, params,
+                                batch["frames"].astype(compute_dtype),
+                                unroll=unroll)
+            h = whs.decoder_forward(cfg, params, batch["tokens"], memory,
+                                    compute_dtype, unroll=unroll)
+            from .layers import lm_logits
+            return lm_logits(h, params["embed"], transpose=True)
+
+        return ModelImpl(
+            cfg=cfg,
+            init_params=lambda key: whs.init_whisper_params(key, cfg),
+            loss_fn=loss_fn,
+            prefill_fn=prefill_fn,
+            init_cache=lambda b, s, dtype=jnp.bfloat16:
+                whs.init_whisper_cache(cfg, b, s, dtype),
+            decode_fn=lambda params, cache, tokens, cache_len:
+                whs.whisper_decode_step(cfg, params, cache, tokens, cache_len,
+                                        compute_dtype=compute_dtype,
+                                        unroll=unroll),
+            input_specs=lambda shape: _lm_input_specs(cfg, shape,
+                                                      compute_dtype),
+        )
+
+    def loss_fn(params, batch):
+        return tfm.lm_loss(cfg, params, batch, compute_dtype=compute_dtype,
+                           remat=remat, unroll=unroll, hint=hint,
+                           bf16_logits=bf16_logits)
+
+    def prefill_fn(params, batch):
+        h = tfm.embed_tokens(cfg, params, batch["tokens"], compute_dtype)
+        prefix = 0
+        if cfg.prefix_len:
+            h = jnp.concatenate(
+                [batch["image_embeds"].astype(compute_dtype), h], axis=1)
+            prefix = cfg.prefix_len
+        if hint is not None:
+            h = hint(h)
+        h, _ = tfm.forward(cfg, params, h, prefix_len=prefix, remat=remat,
+                           unroll=unroll, hint=hint)
+        logits = tfm.logits_fn(cfg, params, h)
+        return logits.astype(jnp.bfloat16) if bf16_logits else logits
+
+    return ModelImpl(
+        cfg=cfg,
+        init_params=lambda key: tfm.init_params(key, cfg),
+        loss_fn=loss_fn,
+        prefill_fn=prefill_fn,
+        init_cache=lambda b, s, dtype=jnp.bfloat16:
+            tfm.init_cache(cfg, b, s, dtype),
+        decode_fn=lambda params, cache, tokens, cache_len:
+            tfm.decode_step(cfg, params, cache, tokens, cache_len,
+                            compute_dtype=compute_dtype, unroll=unroll),
+        input_specs=lambda shape: _lm_input_specs(cfg, shape, compute_dtype),
+    )

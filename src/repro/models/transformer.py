@@ -1,0 +1,421 @@
+"""Unified decoder LM covering every assigned family.
+
+One implementation, parameterized by :class:`~repro.configs.base.ModelConfig`:
+
+* dense / GQA / MQA / qk-norm / GeGLU / sliding-window (gemma, starcoder2,
+  qwen3-*, paligemma decoder),
+* MoE with sort-based expert dispatch (phi-3.5-moe, deepseek-v3, jamba),
+* MLA latent attention + MTP (deepseek-v3),
+* Mamba mixers (jamba hybrid interleave),
+* xLSTM mLSTM/sLSTM mixers (xlstm-1.3b),
+* bidirectional-prefix VLM masking (paligemma; vision tower stubbed),
+* whisper enc-dec lives in :mod:`repro.models.whisper` on top of the same
+  blocks.
+
+**Scan-over-layers**: layers repeat with period
+``p = lcm(attn_period, moe_period, slstm_every)``; parameters are stacked
+(G = n_layers/p groups) and the forward pass is a single ``lax.scan`` over
+groups whose (rematerialized) body unrolls the p positions.  HLO size is
+O(p), not O(n_layers) — DeepSeek's 61 layers compile as fast as 2.
+
+Decode (`decode_step`) threads per-position caches through the same scan:
+KV caches for attention (rolling-window when cfg.sliding_window>0), latent
+caches for MLA, (conv, ssm) states for Mamba, (C, n) matrix states for
+mLSTM, (h, c, n) for sLSTM.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from . import mamba as mamba_mod
+from . import xlstm as xlstm_mod
+from .attention import (gqa_attention, gqa_decode, mla_attention, mla_decode)
+from .layers import (cross_entropy, dense, embed_lookup, fan_in_init,
+                     gated_mlp, lm_logits, rms_norm, trunc_normal)
+from .moe import moe_ffn
+
+
+# ---------------------------------------------------------------------------
+# Layer taxonomy
+# ---------------------------------------------------------------------------
+
+def mixer_kind(cfg: ModelConfig, layer: int) -> str:
+    if cfg.family == "ssm":
+        if cfg.ssm.kind == "xlstm":
+            return "slstm" if layer % cfg.ssm.slstm_every == \
+                cfg.ssm.slstm_every - 1 else "mlstm"
+        return "mamba"
+    if cfg.family == "hybrid" and not cfg.is_attention_layer(layer):
+        return "mamba"
+    return "mla" if cfg.mla is not None else "attn"
+
+
+def ffn_kind(cfg: ModelConfig, layer: int) -> str:
+    if cfg.moe is not None and layer % cfg.moe_period == cfg.moe_period - 1:
+        return "moe"
+    return "dense" if cfg.d_ff else "none"
+
+
+def layer_period(cfg: ModelConfig) -> int:
+    p = math.lcm(cfg.attn_period, cfg.moe_period)
+    if cfg.ssm is not None and cfg.ssm.kind == "xlstm":
+        p = math.lcm(p, cfg.ssm.slstm_every)
+    return min(p, cfg.n_layers)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init
+# ---------------------------------------------------------------------------
+
+def init_layer_params(key, cfg: ModelConfig, layer: int, dtype=jnp.float32):
+    mk, fk = mixer_kind(cfg, layer), ffn_kind(cfg, layer)
+    keys = iter(jax.random.split(key, 16))
+    d = cfg.d_model
+    p: dict = {"norm_mixer": jnp.zeros((d,), dtype)}
+
+    if mk == "attn":
+        p.update({
+            "attn.w_q": fan_in_init(next(keys), (d, cfg.q_dim), dtype),
+            "attn.w_k": fan_in_init(next(keys), (d, cfg.kv_dim), dtype),
+            "attn.w_v": fan_in_init(next(keys), (d, cfg.kv_dim), dtype),
+            "attn.w_o": fan_in_init(next(keys), (cfg.q_dim, d), dtype),
+        })
+        if cfg.qk_norm:
+            p["attn.q_norm"] = jnp.zeros((cfg.head_dim,), dtype)
+            p["attn.k_norm"] = jnp.zeros((cfg.head_dim,), dtype)
+    elif mk == "mla":
+        m = cfg.mla
+        qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+        p.update({
+            "attn.w_dq": fan_in_init(next(keys), (d, m.q_lora_rank), dtype),
+            "attn.q_lat_norm": jnp.zeros((m.q_lora_rank,), dtype),
+            "attn.w_uq": fan_in_init(next(keys),
+                                     (m.q_lora_rank, cfg.n_heads * qk_head),
+                                     dtype),
+            "attn.w_dkv": fan_in_init(
+                next(keys), (d, m.kv_lora_rank + m.qk_rope_head_dim), dtype),
+            "attn.kv_lat_norm": jnp.zeros((m.kv_lora_rank,), dtype),
+            "attn.w_ukv": fan_in_init(
+                next(keys),
+                (m.kv_lora_rank,
+                 cfg.n_heads * (m.qk_nope_head_dim + m.v_head_dim)), dtype),
+            "attn.w_o": fan_in_init(next(keys),
+                                    (cfg.n_heads * m.v_head_dim, d), dtype),
+        })
+    elif mk == "mamba":
+        p.update(mamba_mod.init_mamba_params(next(keys), cfg, dtype))
+    elif mk == "mlstm":
+        p.update(xlstm_mod.init_mlstm_params(next(keys), cfg, dtype))
+    elif mk == "slstm":
+        p.update(xlstm_mod.init_slstm_params(next(keys), cfg, dtype))
+
+    if fk != "none":
+        p["norm_ffn"] = jnp.zeros((d,), dtype)
+    if fk == "dense":
+        if cfg.gated_act in ("swiglu", "geglu"):
+            p["ffn.w_gate"] = fan_in_init(next(keys), (d, cfg.d_ff), dtype)
+        p["ffn.w_up"] = fan_in_init(next(keys), (d, cfg.d_ff), dtype)
+        p["ffn.w_down"] = fan_in_init(next(keys), (cfg.d_ff, d), dtype)
+    elif fk == "moe":
+        e = cfg.moe
+        p["moe.w_router"] = fan_in_init(next(keys), (d, e.n_experts), dtype)
+        p["moe.w_gate"] = fan_in_init(next(keys),
+                                      (e.n_experts, d, e.d_ff_expert), dtype)
+        p["moe.w_up"] = fan_in_init(next(keys),
+                                    (e.n_experts, d, e.d_ff_expert), dtype)
+        p["moe.w_down"] = fan_in_init(next(keys),
+                                      (e.n_experts, e.d_ff_expert, d), dtype)
+        if e.n_shared:
+            p["moe.shared_gate"] = fan_in_init(
+                next(keys), (d, e.n_shared * e.d_ff_expert), dtype)
+            p["moe.shared_up"] = fan_in_init(
+                next(keys), (d, e.n_shared * e.d_ff_expert), dtype)
+            p["moe.shared_down"] = fan_in_init(
+                next(keys), (e.n_shared * e.d_ff_expert, d), dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    """Full parameter tree with period-stacked layer groups."""
+    p = layer_period(cfg)
+    n_groups = cfg.n_layers // p
+    assert n_groups * p == cfg.n_layers, \
+        f"{cfg.name}: n_layers={cfg.n_layers} not divisible by period={p}"
+    keys = jax.random.split(key, p + 3)
+    params: dict = {
+        "embed": trunc_normal(keys[0], (cfg.vocab, cfg.d_model), 0.02, dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = fan_in_init(keys[1], (cfg.d_model, cfg.vocab), dtype)
+    groups = []
+    for j in range(p):
+        gkeys = jax.random.split(keys[2 + j], n_groups)
+        stacked = jax.vmap(
+            lambda k: init_layer_params(k, cfg, j, dtype))(gkeys)
+        groups.append(stacked)
+    params["groups"] = groups
+    if cfg.mtp:
+        mtp_key = keys[-1]
+        k1, k2 = jax.random.split(mtp_key)
+        params["mtp"] = init_layer_params(k1, cfg, cfg.n_layers - 1, dtype)
+        params["mtp_norm"] = jnp.zeros((cfg.d_model,), dtype)
+        params["mtp_proj"] = fan_in_init(k2, (2 * cfg.d_model, cfg.d_model),
+                                         dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Layer application (full-sequence)
+# ---------------------------------------------------------------------------
+
+def apply_layer(cfg: ModelConfig, kinds: tuple[str, str], params, h, *,
+                prefix_len: int = 0, causal: bool = True):
+    """Pre-norm residual block: mixer + FFN.  Returns (h, aux_loss)."""
+    mk, fk = kinds
+    hn = rms_norm(h, params["norm_mixer"], cfg.rms_eps)
+    if mk == "attn":
+        mix = gqa_attention(params, hn, cfg, causal=causal,
+                            prefix_len=prefix_len)
+    elif mk == "mla":
+        mix = mla_attention(params, hn, cfg, causal=causal)
+    elif mk == "mamba":
+        mix = mamba_mod.mamba_mixer(params, hn, cfg)
+    elif mk == "mlstm":
+        mix = xlstm_mod.mlstm_mixer(params, hn, cfg)
+    elif mk == "slstm":
+        mix = xlstm_mod.slstm_mixer(params, hn, cfg)
+    else:
+        raise ValueError(mk)
+    h = h + mix
+    aux = jnp.zeros((), jnp.float32)
+    if fk != "none":
+        hn = rms_norm(h, params["norm_ffn"], cfg.rms_eps)
+        if fk == "dense":
+            out = gated_mlp(hn, params["ffn.w_up"], params["ffn.w_down"],
+                            cfg.gated_act, w_gate=params.get("ffn.w_gate"))
+        else:
+            out, aux = moe_ffn(params, hn, cfg)
+        h = h + out
+    return h, aux
+
+
+def forward(cfg: ModelConfig, params, h, *, prefix_len: int = 0,
+            causal: bool = True, remat: bool = True, unroll: bool = False,
+            hint=None):
+    """Run the layer stack over embedded inputs h: (B, S, D).
+
+    ``unroll=True`` unrolls the group scan (used by the dry-run so XLA's
+    cost analysis counts every layer instead of one while-loop body).
+    ``hint`` (optional) re-asserts the activation sharding after every
+    layer group — PERF iteration (EXPERIMENTS.md §Perf): without it the
+    SPMD partitioner may reshard/replicate full-batch activations in the
+    backward pass, which showed up as tens-of-GB fp32 collective-permutes
+    in the gemma-7b train HLO.
+    """
+    p = layer_period(cfg)
+    kinds = [(mixer_kind(cfg, j), ffn_kind(cfg, j)) for j in range(p)]
+    hint = hint or (lambda x: x)
+
+    def group_body(carry, gparams):
+        h, aux = carry
+        for j in range(p):
+            h, a = apply_layer(cfg, kinds[j], gparams[j], h,
+                               prefix_len=prefix_len, causal=causal)
+            aux = aux + a
+        return (hint(h), aux), None
+
+    body = jax.checkpoint(group_body) if remat else group_body
+    carry = (h, jnp.zeros((), jnp.float32))
+    if unroll:
+        # straight-line unroll (python loop, NOT scan-unroll): the dry-run's
+        # cost calibration needs the BACKWARD pass unrolled too, and jax
+        # lowers the grad of a scan to a rolled reverse scan regardless of
+        # the fwd unroll setting.
+        n_groups = jax.tree.leaves(params["groups"])[0].shape[0]
+        for g in range(n_groups):
+            gparams = jax.tree.map(lambda a: a[g], tuple(params["groups"]))
+            carry, _ = body(carry, gparams)
+        h, aux = carry
+    else:
+        (h, aux), _ = jax.lax.scan(body, carry, tuple(params["groups"]))
+    return rms_norm(h, params["final_norm"], cfg.rms_eps), aux
+
+
+def logits_fn(cfg: ModelConfig, params, h):
+    if cfg.tie_embeddings:
+        return lm_logits(h, params["embed"], transpose=True)
+    return lm_logits(h, params["head"])
+
+
+def embed_tokens(cfg: ModelConfig, params, tokens, dtype):
+    return embed_lookup(params["embed"], tokens,
+                        scale=cfg.embed_scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Training losses
+# ---------------------------------------------------------------------------
+
+def lm_loss(cfg: ModelConfig, params, batch, *, compute_dtype=jnp.bfloat16,
+            remat: bool = True, unroll: bool = False, hint=None,
+            bf16_logits: bool = False):
+    """Causal-LM loss.  batch: tokens (B,S), labels (B,S) [+ image_embeds].
+
+    For VLM configs, ``image_embeds`` (B, prefix, D) are concatenated ahead
+    of the text embeddings (bidirectional prefix); loss is taken on text
+    positions only (labels already -100-masked for the prefix is the
+    caller's choice — we mask structurally here).
+    """
+    tokens, labels = batch["tokens"], batch["labels"]
+    hint = hint or (lambda x: x)
+    h = hint(embed_tokens(cfg, params, tokens, compute_dtype))
+    prefix = 0
+    if cfg.prefix_len:
+        img = batch["image_embeds"].astype(compute_dtype)
+        h = jnp.concatenate([img, h], axis=1)
+        prefix = cfg.prefix_len
+    h, aux = forward(cfg, params, h, prefix_len=prefix, remat=remat,
+                     unroll=unroll, hint=hint)
+    if prefix:
+        h = h[:, prefix:]
+    logits = logits_fn(cfg, params, h)
+    if bf16_logits:
+        # PERF (§Perf): keep the (B, S, vocab) tensor 16-bit; the CE below
+        # still reduces in fp32.  Halves the largest activation tensor and
+        # every collective that touches it.
+        logits = logits.astype(jnp.bfloat16)
+    loss = cross_entropy(logits, labels)
+
+    if cfg.mtp:
+        # DeepSeek MTP: one extra depth predicting t+2, weighted 0.3.
+        emb_next = embed_tokens(cfg, params, jnp.roll(tokens, -1, axis=1),
+                                compute_dtype)
+        h_in = dense(jnp.concatenate(
+            [rms_norm(h, params["mtp_norm"], cfg.rms_eps), emb_next], axis=-1),
+            params["mtp_proj"])
+        kinds = (mixer_kind(cfg, cfg.n_layers - 1),
+                 ffn_kind(cfg, cfg.n_layers - 1))
+        h_mtp, a2 = apply_layer(cfg, kinds, params["mtp"], h_in)
+        logits2 = logits_fn(cfg, params, h_mtp)
+        loss2 = cross_entropy(logits2, jnp.roll(labels, -1, axis=1))
+        loss = loss + 0.3 * loss2
+        aux = aux + a2
+    return loss + aux
+
+
+# ---------------------------------------------------------------------------
+# Decode: caches + one-token step
+# ---------------------------------------------------------------------------
+
+def init_layer_cache(cfg: ModelConfig, layer: int, batch: int,
+                     cache_seq: int, dtype=jnp.bfloat16):
+    mk = mixer_kind(cfg, layer)
+    if mk == "attn":
+        s = min(cache_seq, cfg.sliding_window) if cfg.sliding_window \
+            else cache_seq
+        shape = (batch, s, cfg.n_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if mk == "mla":
+        m = cfg.mla
+        s = min(cache_seq, cfg.sliding_window) if cfg.sliding_window \
+            else cache_seq
+        return {"ckv": jnp.zeros(
+            (batch, s, m.kv_lora_rank + m.qk_rope_head_dim), dtype)}
+    if mk == "mamba":
+        s = cfg.ssm
+        di = s.d_inner(cfg.d_model)
+        return {"conv": jnp.zeros((batch, s.conv_kernel - 1, di), dtype),
+                "ssm": jnp.zeros((batch, di, s.d_state), jnp.float32)}
+    if mk == "mlstm":
+        di = cfg.ssm.d_inner(cfg.d_model)
+        dk = di // cfg.n_heads
+        return {"c": jnp.zeros((batch, cfg.n_heads, dk, dk), jnp.float32),
+                "n": jnp.zeros((batch, cfg.n_heads, dk), jnp.float32)}
+    if mk == "slstm":
+        hd = cfg.d_model // cfg.n_heads
+        z = jnp.zeros((batch, cfg.n_heads, hd), jnp.float32)
+        return {"h": z, "c": z, "n": jnp.ones_like(z)}
+    raise ValueError(mk)
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_seq: int,
+               dtype=jnp.bfloat16):
+    """Stacked cache tree mirroring params['groups'] layout."""
+    p = layer_period(cfg)
+    n_groups = cfg.n_layers // p
+    caches = []
+    for j in range(p):
+        one = init_layer_cache(cfg, j, batch, cache_seq, dtype)
+        caches.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_groups, *a.shape)), one))
+    return tuple(caches)
+
+
+def apply_layer_decode(cfg, kinds, params, h, cache, cache_len):
+    mk, fk = kinds
+    hn = rms_norm(h, params["norm_mixer"], cfg.rms_eps)
+    if mk == "attn":
+        mix, cache = gqa_decode(params, hn, cfg, cache, cache_len)
+    elif mk == "mla":
+        mix, cache = mla_decode(params, hn, cfg, cache, cache_len)
+    elif mk == "mamba":
+        mix, cache = mamba_mod.mamba_decode(params, hn, cfg, cache)
+    elif mk == "mlstm":
+        mix, cache = xlstm_mod.mlstm_decode(params, hn, cfg, cache)
+    elif mk == "slstm":
+        mix, cache = xlstm_mod.slstm_decode(params, hn, cfg, cache)
+    else:
+        raise ValueError(mk)
+    h = h + mix
+    if fk != "none":
+        hn = rms_norm(h, params["norm_ffn"], cfg.rms_eps)
+        if fk == "dense":
+            out = gated_mlp(hn, params["ffn.w_up"], params["ffn.w_down"],
+                            cfg.gated_act, w_gate=params.get("ffn.w_gate"))
+        else:
+            out, _ = moe_ffn(params, hn, cfg)
+        h = h + out
+    return h, cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, cache_len,
+                *, compute_dtype=jnp.bfloat16, unroll: bool = False):
+    """One decode step: tokens (B, 1) + cache -> (logits (B,1,V), cache)."""
+    p = layer_period(cfg)
+    kinds = [(mixer_kind(cfg, j), ffn_kind(cfg, j)) for j in range(p)]
+    h = embed_tokens(cfg, params, tokens, compute_dtype)
+
+    def group_body(h, xs):
+        gparams, gcache = xs
+        new_caches = []
+        for j in range(p):
+            h, c = apply_layer_decode(cfg, kinds[j], gparams[j], h,
+                                      gcache[j], cache_len)
+            new_caches.append(c)
+        return h, tuple(new_caches)
+
+    if unroll:
+        n_groups = jax.tree.leaves(params["groups"])[0].shape[0]
+        new_cache = cache
+        for g in range(n_groups):
+            xs = jax.tree.map(lambda a: a[g],
+                              (tuple(params["groups"]), cache))
+            h, newc = group_body(h, xs)
+            # write back along the (unsharded) leading layer axis — a
+            # jnp.stack here would gather the seq-sharded caches and
+            # contaminate the calibration measurement
+            new_cache = jax.tree.map(
+                lambda full, one: full.at[g].set(one), new_cache, newc)
+    else:
+        h, new_cache = jax.lax.scan(group_body, h,
+                                    (tuple(params["groups"]), cache))
+    h = rms_norm(h, params["final_norm"], cfg.rms_eps)
+    return logits_fn(cfg, params, h), new_cache

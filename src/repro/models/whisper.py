@@ -1,0 +1,196 @@
+"""Whisper-style encoder-decoder backbone [arXiv:2212.04356].
+
+Per the assignment, the mel-spectrogram + conv feature extractor is a STUB:
+``input_specs`` provides precomputed frame embeddings (B, encoder_seq, D).
+This module implements everything downstream: sinusoidal positions, the
+bidirectional encoder stack, and the causal decoder with cross-attention,
+all reusing the shared attention/MLP primitives.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .attention import cross_attention, gqa_attention, gqa_decode
+from .layers import (cross_entropy, dense, embed_lookup, fan_in_init,
+                     gated_mlp, lm_logits, rms_norm, sinusoidal_positions,
+                     trunc_normal)
+
+
+def _attn_params(key, cfg, prefix="attn"):
+    k = jax.random.split(key, 4)
+    d = cfg.d_model
+    return {
+        f"{prefix}.w_q": fan_in_init(k[0], (d, cfg.q_dim)),
+        f"{prefix}.w_k": fan_in_init(k[1], (d, cfg.kv_dim)),
+        f"{prefix}.w_v": fan_in_init(k[2], (d, cfg.kv_dim)),
+        f"{prefix}.w_o": fan_in_init(k[3], (cfg.q_dim, d)),
+    }
+
+
+def _ffn_params(key, cfg):
+    k1, k2 = jax.random.split(key)
+    up_mult = 2 if cfg.gated_act in ("swiglu", "geglu") else 1
+    return {"ffn.w_up": fan_in_init(k1, (cfg.d_model, up_mult * cfg.d_ff)),
+            "ffn.w_down": fan_in_init(k2, (cfg.d_ff, cfg.d_model))}
+
+
+def init_whisper_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    keys = jax.random.split(key, 6)
+
+    def enc_layer(k):
+        a, b, c = jax.random.split(k, 3)
+        return {"norm_mixer": jnp.zeros((cfg.d_model,)),
+                "norm_ffn": jnp.zeros((cfg.d_model,)),
+                **_attn_params(a, cfg), **_ffn_params(b, cfg)}
+
+    def dec_layer(k):
+        a, b, c = jax.random.split(k, 3)
+        return {"norm_mixer": jnp.zeros((cfg.d_model,)),
+                "norm_xattn": jnp.zeros((cfg.d_model,)),
+                "norm_ffn": jnp.zeros((cfg.d_model,)),
+                **_attn_params(a, cfg),
+                **_attn_params(b, cfg, prefix="xattn"),
+                **_ffn_params(c, cfg)}
+
+    enc_keys = jax.random.split(keys[0], cfg.encoder_layers)
+    dec_keys = jax.random.split(keys[1], cfg.n_layers)
+    return {
+        "embed": trunc_normal(keys[2], (cfg.vocab, cfg.d_model)),
+        "enc_final_norm": jnp.zeros((cfg.d_model,)),
+        "final_norm": jnp.zeros((cfg.d_model,)),
+        "enc_layers": jax.vmap(enc_layer)(enc_keys),
+        "dec_layers": jax.vmap(dec_layer)(dec_keys),
+    }
+
+
+def encode(cfg: ModelConfig, params, frames, *, unroll: bool = False):
+    """frames: (B, T_enc, D) stub embeddings -> encoder memory."""
+    t = frames.shape[1]
+    pos = jnp.asarray(sinusoidal_positions(t, cfg.d_model), frames.dtype)
+    h = frames + pos[None]
+
+    def body(h, lp):
+        hn = rms_norm(h, lp["norm_mixer"], cfg.rms_eps)
+        h = h + gqa_attention(lp, hn, cfg, causal=False)
+        hn = rms_norm(h, lp["norm_ffn"], cfg.rms_eps)
+        h = h + gated_mlp(hn, lp["ffn.w_up"], lp["ffn.w_down"], cfg.gated_act)
+        return h, None
+
+    ckpt = jax.checkpoint(body)
+    if unroll:
+        for g in range(cfg.encoder_layers):
+            h, _ = ckpt(h, jax.tree.map(lambda a: a[g], params["enc_layers"]))
+    else:
+        h, _ = jax.lax.scan(ckpt, h, params["enc_layers"])
+    return rms_norm(h, params["enc_final_norm"], cfg.rms_eps)
+
+
+def _dec_layer(cfg, lp, h, memory):
+    hn = rms_norm(h, lp["norm_mixer"], cfg.rms_eps)
+    h = h + gqa_attention(lp, hn, cfg, causal=True)
+    hn = rms_norm(h, lp["norm_xattn"], cfg.rms_eps)
+    h = h + cross_attention(lp, hn, memory, cfg)
+    hn = rms_norm(h, lp["norm_ffn"], cfg.rms_eps)
+    return h + gated_mlp(hn, lp["ffn.w_up"], lp["ffn.w_down"], cfg.gated_act)
+
+
+def decoder_forward(cfg: ModelConfig, params, tokens, memory,
+                    compute_dtype=jnp.bfloat16, *, unroll: bool = False):
+    s = tokens.shape[1]
+    pos = jnp.asarray(sinusoidal_positions(s, cfg.d_model), compute_dtype)
+    h = embed_lookup(params["embed"], tokens).astype(compute_dtype) + pos[None]
+
+    def body(h, lp):
+        return _dec_layer(cfg, lp, h, memory), None
+
+    ckpt = jax.checkpoint(body)
+    if unroll:
+        for g in range(cfg.n_layers):
+            h, _ = ckpt(h, jax.tree.map(lambda a: a[g], params["dec_layers"]))
+    else:
+        h, _ = jax.lax.scan(ckpt, h, params["dec_layers"])
+    return rms_norm(h, params["final_norm"], cfg.rms_eps)
+
+
+def whisper_loss(cfg: ModelConfig, params, batch, *,
+                 compute_dtype=jnp.bfloat16, unroll: bool = False):
+    """batch: frames (B, T_enc, D), tokens (B, S), labels (B, S)."""
+    memory = encode(cfg, params, batch["frames"].astype(compute_dtype),
+                    unroll=unroll)
+    h = decoder_forward(cfg, params, batch["tokens"], memory, compute_dtype,
+                        unroll=unroll)
+    logits = lm_logits(h, params["embed"], transpose=True)
+    return cross_entropy(logits, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_whisper_cache(cfg: ModelConfig, batch: int, cache_seq: int,
+                       dtype=jnp.bfloat16):
+    """Self-attn KV caches (per decoder layer) + precomputed cross K/V."""
+    kv = (cfg.n_layers, batch, cache_seq, cfg.n_kv_heads, cfg.head_dim)
+    xkv = (cfg.n_layers, batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype),
+            "xk": jnp.zeros(xkv, dtype), "xv": jnp.zeros(xkv, dtype)}
+
+
+def prefill_cross_cache(cfg, params, memory, cache):
+    """Fill the cross-attention K/V from encoder memory (once per request)."""
+    def one(lp):
+        b, sm = memory.shape[:2]
+        k = dense(memory, lp["xattn.w_k"]).reshape(b, sm, cfg.n_kv_heads,
+                                                   cfg.head_dim)
+        v = dense(memory, lp["xattn.w_v"]).reshape(b, sm, cfg.n_kv_heads,
+                                                   cfg.head_dim)
+        return k, v
+
+    xk, xv = jax.vmap(one)(params["dec_layers"])
+    return {**cache, "xk": xk.astype(cache["xk"].dtype),
+            "xv": xv.astype(cache["xv"].dtype)}
+
+
+def whisper_decode_step(cfg: ModelConfig, params, cache, tokens, cache_len,
+                        *, compute_dtype=jnp.bfloat16, unroll: bool = False):
+    """One decoder token against self-KV + cross-KV caches."""
+    from .attention import _repeat_kv, attention_scores
+    b = tokens.shape[0]
+    pos_table = jnp.asarray(
+        sinusoidal_positions(cache["k"].shape[2] + 1, cfg.d_model),
+        compute_dtype)
+    h = embed_lookup(params["embed"], tokens).astype(compute_dtype)
+    h = h + jax.lax.dynamic_slice_in_dim(pos_table, cache_len, 1)[None]
+
+    def body(h, xs):
+        lp, k_c, v_c, xk, xv = xs
+        hn = rms_norm(h, lp["norm_mixer"], cfg.rms_eps)
+        mix, new_kv = gqa_decode(lp, hn, cfg, {"k": k_c, "v": v_c}, cache_len)
+        h = h + mix
+        hn = rms_norm(h, lp["norm_xattn"], cfg.rms_eps)
+        q = dense(hn, lp["xattn.w_q"]).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+        n_rep = cfg.n_heads // cfg.n_kv_heads
+        out = attention_scores(q, _repeat_kv(xk, n_rep),
+                               _repeat_kv(xv, n_rep), causal=False)
+        h = h + dense(out.reshape(b, 1, -1), lp["xattn.w_o"])
+        hn = rms_norm(h, lp["norm_ffn"], cfg.rms_eps)
+        h = h + gated_mlp(hn, lp["ffn.w_up"], lp["ffn.w_down"], cfg.gated_act)
+        return h, (new_kv["k"], new_kv["v"])
+
+    xs_all = (params["dec_layers"], cache["k"], cache["v"],
+              cache["xk"], cache["xv"])
+    if unroll:
+        new_k, new_v = cache["k"], cache["v"]
+        for g in range(cfg.n_layers):
+            h, (nk, nv) = body(h, jax.tree.map(lambda a: a[g], xs_all))
+            # layer-axis write-back (a stack would gather sharded caches)
+            new_k = new_k.at[g].set(nk)
+            new_v = new_v.at[g].set(nv)
+    else:
+        h, (new_k, new_v) = jax.lax.scan(body, h, xs_all)
+    h = rms_norm(h, params["final_norm"], cfg.rms_eps)
+    logits = lm_logits(h, params["embed"], transpose=True)
+    return logits, {**cache, "k": new_k, "v": new_v}

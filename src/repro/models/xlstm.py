@@ -1,0 +1,229 @@
+"""xLSTM blocks: chunk-parallel mLSTM + sequential sLSTM [arXiv:2405.04517].
+
+mLSTM is a matrix-memory linear-attention recurrence
+
+    C_t = f_t C_{t-1} + i_t k_t v_t^T,    n_t = f_t n_{t-1} + i_t k_t,
+    y_t = (q_t^T C_t) / max(|q_t^T n_t|, 1)
+
+evaluated chunkwise: within a chunk, the decay products form a banded
+matrix D_{ts} = exp(logcum_f_t − logcum_f_s)·i_s applied to q·kᵀ (a masked
+attention matmul — MXU-friendly); across chunks a ``lax.scan`` carries the
+(heads, d_k, d_v) matrix state.  This is the TPU-native replacement for the
+paper's fused CUDA kernels.
+
+sLSTM has genuine recurrent (h_{t-1}-dependent) gating, so it runs as a
+``lax.scan`` over time — cheap because xLSTM-1.3b places only one sLSTM
+block per 8.
+
+Simplifications vs the release (noted in DESIGN.md): sigmoid input gate
+(instead of exp with stabilizer state) and headwise RMS output norm without
+the learned output gate.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, fan_in_init, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_mixer(params, x, cfg, *, state=None, return_state=False):
+    """x: (B, L, D) -> (B, L, D).  state: (C (B,H,dk,dv), n (B,H,dk))."""
+    s = cfg.ssm
+    b, L, d = x.shape
+    nh = cfg.n_heads
+    di = s.d_inner(d)
+    dk = di // nh
+
+    q = dense(x, params["mlstm.w_q"]).reshape(b, L, nh, dk)
+    k = dense(x, params["mlstm.w_k"]).reshape(b, L, nh, dk) / \
+        jnp.sqrt(jnp.asarray(dk, x.dtype))
+    v = dense(x, params["mlstm.w_v"]).reshape(b, L, nh, dk)
+
+    gates = dense(x, params["mlstm.w_gates"]).astype(jnp.float32)
+    i_gate = jax.nn.sigmoid(gates[..., :nh])                       # (B,L,H)
+    f_gate = jax.nn.sigmoid(gates[..., nh:] + 4.0)                 # long memory
+
+    chunk = min(s.chunk, L)
+    if L % chunk:
+        raise ValueError(f"L={L} % chunk={chunk}")
+    nc = L // chunk
+
+    def split_c(a):
+        return a.reshape(b, nc, chunk, *a.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = split_c(q), split_c(k), split_c(v)          # (nc,B,c,H,dk)
+    ic, fc = split_c(i_gate), split_c(f_gate)                # (nc,B,c,H)
+
+    if state is None:
+        c0 = jnp.zeros((b, nh, dk, dk), jnp.float32)
+        n0 = jnp.zeros((b, nh, dk), jnp.float32)
+    else:
+        c0, n0 = state
+
+    def chunk_body(carry, xs):
+        c_state, n_state = carry
+        qs, ks, vs, isg, fsg = xs
+        logf = jnp.log(fsg + 1e-9)                           # (B,c,H)
+        cum = jnp.cumsum(logf, axis=1)
+        # inter-chunk: q_t sees decayed initial state
+        q32 = qs.astype(jnp.float32)
+        y_inter = jnp.exp(cum)[..., None] * jnp.einsum(
+            "bchk,bhkv->bchv", q32, c_state)
+        n_inter = jnp.exp(cum)[..., None] * n_state[:, None]
+        # intra-chunk: banded decay attention
+        dmat = cum[:, :, None, :] - cum[:, None, :, :]       # (B,t,s,H)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        w = jnp.where(tri[None, :, :, None], jnp.exp(dmat), 0.0)
+        w = w * isg[:, None, :, :]                           # i_s weighting
+        scores = jnp.einsum("bthk,bshk->btsh", q32, ks.astype(jnp.float32))
+        aw = scores * w
+        y_intra = jnp.einsum("btsh,bshv->bthv", aw, vs.astype(jnp.float32))
+        n_intra = jnp.einsum("btsh,bshk->bthk", w, ks.astype(jnp.float32))
+        # state update to end of chunk
+        tail = cum[:, -1:, :] - cum                          # decay to chunk end
+        wk = (jnp.exp(tail) * isg)[..., None] * ks.astype(jnp.float32)
+        c_new = jnp.exp(cum[:, -1])[..., None, None] * c_state + \
+            jnp.einsum("bchk,bchv->bhkv", wk, vs.astype(jnp.float32))
+        n_new = jnp.exp(cum[:, -1])[..., None] * n_state + wk.sum(axis=1)
+        denom = jnp.maximum(
+            jnp.abs(jnp.einsum("bchk,bchk->bch", q32, n_inter + n_intra)),
+            1.0)[..., None]
+        y = (y_inter + y_intra) / denom
+        return (c_new, n_new), y
+
+    chunk_body = jax.checkpoint(chunk_body)
+    (c_f, n_f), ys = jax.lax.scan(chunk_body, (c0, n0), (qc, kc, vc, ic, fc))
+    y = ys.swapaxes(0, 1).reshape(b, L, nh, dk).astype(x.dtype)
+    y = rms_norm(y, params["mlstm.out_norm"], cfg.rms_eps)
+    out = dense(y.reshape(b, L, di), params["mlstm.w_o"])
+    if return_state:
+        return out, (c_f, n_f)
+    return out
+
+
+def mlstm_decode(params, x, cfg, cache):
+    """One-token mLSTM update.  cache: {"c": (B,H,dk,dk), "n": (B,H,dk)}."""
+    s = cfg.ssm
+    b, one, d = x.shape
+    nh = cfg.n_heads
+    di = s.d_inner(d)
+    dk = di // nh
+    q = dense(x, params["mlstm.w_q"])[:, 0].reshape(b, nh, dk).astype(
+        jnp.float32)
+    k = (dense(x, params["mlstm.w_k"])[:, 0].reshape(b, nh, dk)
+         / jnp.sqrt(jnp.asarray(dk, jnp.float32))).astype(jnp.float32)
+    v = dense(x, params["mlstm.w_v"])[:, 0].reshape(b, nh, dk).astype(
+        jnp.float32)
+    gates = dense(x, params["mlstm.w_gates"])[:, 0].astype(jnp.float32)
+    i_g = jax.nn.sigmoid(gates[..., :nh])[..., None]
+    f_g = jax.nn.sigmoid(gates[..., nh:] + 4.0)[..., None]
+    c = cache["c"] * f_g[..., None] + (i_g * k)[..., :, None] * v[..., None, :]
+    n = cache["n"] * f_g + i_g * k
+    y = jnp.einsum("bhk,bhkv->bhv", q, c)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, n)), 1.0)
+    y = (y / denom[..., None]).astype(x.dtype)
+    y = rms_norm(y, params["mlstm.out_norm"], cfg.rms_eps)
+    out = dense(y.reshape(b, 1, di), params["mlstm.w_o"])
+    return out, {"c": c, "n": n}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_mixer(params, x, cfg, *, state=None, return_state=False):
+    """Sequential sLSTM.  x: (B, L, D) -> (B, L, D); state (h, c, n)."""
+    b, L, d = x.shape
+    nh = cfg.n_heads
+    hd = d // nh
+    x_pre = dense(x, params["slstm.w_x"])                 # (B, L, 4D)
+    r = params["slstm.r"]                                 # (H, hd, 4hd)
+
+    if state is None:
+        h0 = jnp.zeros((b, nh, hd), jnp.float32)
+        c0 = jnp.zeros((b, nh, hd), jnp.float32)
+        n0 = jnp.ones((b, nh, hd), jnp.float32)
+    else:
+        h0, c0, n0 = state
+
+    def step(carry, xt):
+        h, c, n = carry                                   # (B,H,hd) each
+        rec = jnp.einsum("bhk,hkf->bhf", h, r.astype(jnp.float32))
+        pre = xt.reshape(b, nh, 4 * hd).astype(jnp.float32) + rec
+        i_g, f_g, z_g, o_g = jnp.split(pre, 4, axis=-1)
+        i_g = jax.nn.sigmoid(i_g)
+        f_g = jax.nn.sigmoid(f_g + 1.0)
+        z_g = jnp.tanh(z_g)
+        o_g = jax.nn.sigmoid(o_g)
+        c_new = f_g * c + i_g * z_g
+        n_new = f_g * n + i_g
+        h_new = o_g * c_new / jnp.maximum(n_new, 1.0)
+        return (h_new, c_new, n_new), h_new
+
+    (h_f, c_f, n_f), hs = jax.lax.scan(step, (h0, c0, n0),
+                                       x_pre.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).reshape(b, L, d).astype(x.dtype)
+    out = dense(y, params["slstm.w_o"])
+    if return_state:
+        return out, (h_f, c_f, n_f)
+    return out
+
+
+def slstm_decode(params, x, cfg, cache):
+    """One-token sLSTM.  cache: {"h","c","n"} each (B, H, hd)."""
+    b, one, d = x.shape
+    nh = cfg.n_heads
+    hd = d // nh
+    x_pre = dense(x, params["slstm.w_x"])[:, 0]
+    rec = jnp.einsum("bhk,hkf->bhf", cache["h"],
+                     params["slstm.r"].astype(jnp.float32))
+    pre = x_pre.reshape(b, nh, 4 * hd).astype(jnp.float32) + rec
+    i_g, f_g, z_g, o_g = jnp.split(pre, 4, axis=-1)
+    i_g = jax.nn.sigmoid(i_g)
+    f_g = jax.nn.sigmoid(f_g + 1.0)
+    z_g = jnp.tanh(z_g)
+    o_g = jax.nn.sigmoid(o_g)
+    c_new = f_g * cache["c"] + i_g * z_g
+    n_new = f_g * cache["n"] + i_g
+    h_new = o_g * c_new / jnp.maximum(n_new, 1.0)
+    y = h_new.reshape(b, 1, d).astype(x.dtype)
+    out = dense(y, params["slstm.w_o"])
+    return out, {"h": h_new, "c": c_new, "n": n_new}
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_mlstm_params(key, cfg, dtype=jnp.float32):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = cfg.n_heads
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    return {
+        "mlstm.w_q": fan_in_init(k1, (d, di), dtype),
+        "mlstm.w_k": fan_in_init(k4, (d, di), dtype),
+        "mlstm.w_v": fan_in_init(k5, (d, di), dtype),
+        "mlstm.w_gates": fan_in_init(k2, (d, 2 * nh), dtype),
+        "mlstm.out_norm": jnp.zeros((di // nh,), dtype),
+        "mlstm.w_o": fan_in_init(k3, (di, d), dtype),
+    }
+
+
+def init_slstm_params(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "slstm.w_x": fan_in_init(k1, (d, 4 * d), dtype),
+        "slstm.r": 0.1 * fan_in_init(k2, (nh, hd, 4 * hd), dtype),
+        "slstm.w_o": fan_in_init(k3, (d, d), dtype),
+    }

@@ -1,0 +1,3 @@
+from .decode import build_serve_step
+
+__all__ = ["build_serve_step"]

@@ -1,0 +1,48 @@
+"""Jitted decode (serving) step with explicit cache shardings.
+
+``serve_step(params, cache, tokens, cache_len) -> (logits, new_cache)``:
+one new token against a KV cache / recurrent state of ``seq_len`` context
+(the assigned ``decode_32k`` / ``long_500k`` shapes).  The cache is donated
+— decoding updates it in place, which is what keeps HBM flat at scale.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch import sharding as shd
+from repro.models.registry import ModelImpl
+from repro.configs.base import InputShape
+
+
+def build_serve_step(impl: ModelImpl, mesh, shape: InputShape,
+                     *, cache_dtype=jnp.bfloat16, param_mode: str = "zero3"):
+    """Returns (serve_fn, in_shardings, out_shardings, arg_specs).
+
+    ``param_mode="tp"`` serves with model-axis-only weight sharding (no
+    per-token ZeRO-3 all-gather) — see sharding.param_specs.
+    """
+    cfg = impl.cfg
+    cache_specs, tokens_spec, len_spec = impl.decode_args_specs(
+        shape, cache_dtype)
+
+    def serve(params, cache, tokens, cache_len):
+        return impl.decode_fn(params, cache, tokens, cache_len)
+
+    params_shape = jax.eval_shape(impl.init_params, jax.random.PRNGKey(0))
+    pshard = shd.param_shardings(cfg, params_shape, mesh, mode=param_mode)
+    cshard = shd.cache_shardings(cfg, cache_specs, mesh)
+    dp = shd.batch_axes(mesh)
+    b = shape.global_batch
+    tok_spec = P(dp, None) if b % __import__("math").prod(
+        mesh.shape[a] for a in dp) == 0 else P(None, None)
+    tshard = NamedSharding(mesh, tok_spec)
+    scalar = NamedSharding(mesh, P())
+    logits_shard = NamedSharding(mesh, shd.logits_spec(cfg, mesh,
+                                                       shape.global_batch))
+    in_shardings = (pshard, cshard, tshard, scalar)
+    out_shardings = (logits_shard, cshard)
+    arg_specs = (cache_specs, tokens_spec, len_spec)
+    return serve, in_shardings, out_shardings, arg_specs

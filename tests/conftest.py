@@ -1,0 +1,20 @@
+import os
+
+# Smoke tests and benches must see exactly ONE device; the 512-device flag
+# belongs to the dry-run process only (see launch/dryrun.py).
+assert "--xla_force_host_platform_device_count" not in \
+    os.environ.get("XLA_FLAGS", ""), \
+    "do not set the dry-run XLA_FLAGS globally"
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def tmp_store_root(tmp_path):
+    return str(tmp_path / "store")

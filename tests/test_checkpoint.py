@@ -1,0 +1,79 @@
+"""Checkpointing through the tensor stores."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DirectNVMeEngine, FilesystemEngine
+from repro.core.checkpoint import (load_pytree, restore_trainer_step,
+                                   save_pytree, snapshot_trainer)
+
+
+def _tree(key):
+    k1, k2 = jax.random.split(key)
+    return {"a": jax.random.normal(k1, (8, 16)),
+            "nested": {"b": jax.random.normal(k2, (4,)),
+                       "c": jnp.arange(6, dtype=jnp.int32).reshape(2, 3)},
+            "groups": [jnp.ones((2, 5), jnp.bfloat16)]}
+
+
+def test_pytree_roundtrip_direct(tmp_path):
+    store = DirectNVMeEngine(str(tmp_path), n_devices=2,
+                             device_capacity=1 << 22)
+    tree = _tree(jax.random.PRNGKey(0))
+    save_pytree(store, "ckpt0", tree)
+    like = jax.eval_shape(lambda: tree)
+    restored = load_pytree(store, "ckpt0", like)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a).view(np.uint8),
+                                      np.asarray(b).view(np.uint8))
+    store.close()
+
+
+def test_pytree_roundtrip_filesystem(tmp_path):
+    store = FilesystemEngine(str(tmp_path), fsync=False)
+    tree = _tree(jax.random.PRNGKey(1))
+    save_pytree(store, "ck", tree)
+    restored = load_pytree(store, "ck", jax.eval_shape(lambda: tree))
+    np.testing.assert_allclose(np.asarray(tree["a"]),
+                               np.asarray(restored["a"]))
+    store.close()
+
+
+def test_trainer_resume(tmp_path):
+    """Resume continues the exact trajectory: train 4 steps straight vs
+    2 steps + snapshot + resume + 2 steps."""
+    from repro.configs.base import ModelConfig
+    from repro.core import OffloadedTrainer, memascend_policy
+    from repro.core.model_adapter import make_offloadable_lm
+    from repro.data import DataLoader, SyntheticTextDataset
+
+    cfg = ModelConfig(name="ck", family="dense", n_layers=2, d_model=48,
+                      n_heads=4, n_kv_heads=2, d_ff=96, vocab=128)
+
+    def batches(n):
+        dl = DataLoader(SyntheticTextDataset(vocab=128, seed=5), batch=2,
+                        seq_len=16)
+        return [dl.next_batch() for _ in range(n)]
+
+    bs = batches(4)
+    # straight 4 steps
+    tr = OffloadedTrainer(make_offloadable_lm(cfg, jax.random.PRNGKey(0)),
+                          memascend_policy(str(tmp_path / "a"), lr=1e-3))
+    straight = [tr.train_step(b["tokens"], b["labels"])["loss"] for b in bs]
+    tr.close()
+
+    # 2 steps, snapshot, "restart" (fresh trainer objects over the SAME
+    # store root would re-register params; instead simulate resume by
+    # restoring scalar state on the live trainer after scale perturbation)
+    tr2 = OffloadedTrainer(make_offloadable_lm(cfg, jax.random.PRNGKey(0)),
+                           memascend_policy(str(tmp_path / "b"), lr=1e-3))
+    part1 = [tr2.train_step(b["tokens"], b["labels"])["loss"] for b in bs[:2]]
+    snapshot_trainer(tr2)
+    tr2.scaler.scale = 123.0           # clobber, then restore
+    tr2.optimizer.step_count = 999
+    state = restore_trainer_step(tr2)
+    assert state["optimizer_step"] == 2 and tr2.scaler.scale == 1.0
+    part2 = [tr2.train_step(b["tokens"], b["labels"])["loss"] for b in bs[2:]]
+    tr2.close()
+    np.testing.assert_allclose(straight, part1 + part2, atol=1e-6)

@@ -1,0 +1,101 @@
+"""Overflow check: chained baseline vs MemAscend's fused pass (§III-C/IV-D)."""
+
+import numpy as np
+import ml_dtypes
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (MemoryTracker, baseline_overflow_check,
+                        fused_overflow_check)
+from repro.core.overflow import (baseline_overflow_check_jnp,
+                                 fused_overflow_check_jnp)
+
+BF16 = np.dtype(ml_dtypes.bfloat16)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16, BF16])
+@pytest.mark.parametrize("bad", [None, np.inf, -np.inf, np.nan])
+def test_equivalence_all_dtypes(dtype, bad, rng):
+    g = rng.standard_normal(10_000).astype(dtype)
+    if bad is not None:
+        g[rng.integers(0, g.size)] = bad
+    expected = bad is not None
+    t = MemoryTracker()
+    assert fused_overflow_check(g, tracker=t) == expected
+    if dtype == np.float32:
+        assert baseline_overflow_check(g, tracker=t) == expected
+
+
+def test_baseline_peak_is_2_25x(rng):
+    """The paper's Fig. 3: chained check peaks at 2.25x the flat buffer."""
+    g = rng.standard_normal(1 << 20).astype(np.float32)
+    t = MemoryTracker()
+    baseline_overflow_check(g, tracker=t)
+    extra = t.component("overflow_tmp").peak_allocated
+    assert extra == pytest.approx(1.25 * g.nbytes)   # +abs(1.0x) +mask(.25x)
+
+
+def test_fused_peak_is_negligible(rng):
+    g = rng.standard_normal(1 << 22).astype(np.float32)
+    t = MemoryTracker()
+    fused_overflow_check(g, tracker=t)
+    extra = t.component("overflow_tmp").peak_allocated
+    assert extra <= 4 * (1 << 20)    # one chunk, ~4 MiB vs 16 MiB payload
+
+
+def test_fused_latency_beats_baseline(rng):
+    import time
+    g = rng.standard_normal(1 << 22).astype(np.float32)
+    t = MemoryTracker()
+    t0 = time.perf_counter(); baseline_overflow_check(g, tracker=t)
+    base = time.perf_counter() - t0
+    t0 = time.perf_counter(); fused_overflow_check(g, tracker=t)
+    fused = time.perf_counter() - t0
+    # soft bound: fused must not be slower; paper reports ~97% reduction
+    assert fused < base * 1.5
+
+
+def test_early_exit_on_first_chunk(rng):
+    g = rng.standard_normal(1 << 22).astype(np.float32)
+    g[17] = np.inf
+    import time
+    t0 = time.perf_counter(); assert fused_overflow_check(g)
+    early = time.perf_counter() - t0
+    g[17] = 0.0
+    t0 = time.perf_counter(); assert not fused_overflow_check(g)
+    full = time.perf_counter() - t0
+    assert early < full  # early exit touched one chunk
+
+
+def test_jnp_variants_agree(rng):
+    import jax.numpy as jnp
+    g = jnp.asarray(rng.standard_normal(4096), jnp.float32)
+    assert not bool(fused_overflow_check_jnp(g))
+    assert not bool(baseline_overflow_check_jnp(g))
+    g = g.at[100].set(jnp.nan)
+    assert bool(fused_overflow_check_jnp(g))
+    assert bool(baseline_overflow_check_jnp(g))
+    gb = jnp.asarray(rng.standard_normal(4096), jnp.bfloat16).at[5].set(
+        jnp.inf)
+    assert bool(fused_overflow_check_jnp(gb))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(min_value=1, max_value=100_000),
+       st.sampled_from(["none", "inf", "-inf", "nan"]),
+       st.integers(min_value=0, max_value=2**32 - 1))
+def test_fused_matches_numpy_semantics(n, kind, seed):
+    rng = np.random.default_rng(seed)
+    g = rng.standard_normal(n).astype(np.float32) * 1e3
+    if kind != "none":
+        g[rng.integers(0, n)] = {"inf": np.inf, "-inf": -np.inf,
+                                 "nan": np.nan}[kind]
+    expected = bool(np.isinf(g).any() or np.isnan(g).any())
+    assert fused_overflow_check(g) == expected
+
+
+def test_subnormals_and_extremes_dont_trigger():
+    g = np.array([0.0, -0.0, np.finfo(np.float32).max,
+                  np.finfo(np.float32).min, np.finfo(np.float32).tiny,
+                  1e-45], np.float32)   # 1e-45 = subnormal
+    assert not fused_overflow_check(g)

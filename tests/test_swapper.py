@@ -1,0 +1,69 @@
+"""Parameter swapper: prefetch pipeline over the buffer pool."""
+
+import numpy as np
+import pytest
+
+from repro.core import (AdaptiveBufferPool, AlignmentFreeAllocator,
+                        DirectNVMeEngine, MemoryTracker, ParameterSwapper,
+                        PoolCensus, ShapeClass)
+
+
+@pytest.fixture
+def setup(tmp_store_root, rng):
+    store = DirectNVMeEngine(tmp_store_root, n_devices=2,
+                             device_capacity=1 << 24)
+    census = PoolCensus((ShapeClass("w", 4096 * 4, 2),), inflight_blocks=2)
+    alloc = AlignmentFreeAllocator(tracker=MemoryTracker(), component="pool",
+                                   backing="numpy")
+    pool = AdaptiveBufferPool(census, alloc)
+    tensors = {f"t{i}": rng.standard_normal(4096).astype(np.float32)
+               for i in range(6)}
+    for k, v in tensors.items():
+        store.write(k, v)
+    swapper = ParameterSwapper(store, pool,
+                               class_of={k: "w" for k in tensors})
+    yield store, pool, swapper, tensors
+    swapper.drain()
+    pool.close()
+    store.close()
+
+
+def test_prefetch_then_get(setup):
+    store, pool, swapper, tensors = setup
+    swapper.prefetch("t0", np.float32, (4096,))
+    ticket = swapper.get("t0", np.float32, (4096,))
+    np.testing.assert_array_equal(ticket.buf.view(np.float32, (4096,)),
+                                  tensors["t0"])
+    ticket.release()
+
+
+def test_get_without_prefetch(setup):
+    store, pool, swapper, tensors = setup
+    ticket = swapper.get("t3", np.float32, (4096,))
+    np.testing.assert_array_equal(ticket.buf.view(np.float32, (4096,)),
+                                  tensors["t3"])
+    ticket.release()
+
+
+def test_prefetch_idempotent(setup):
+    store, pool, swapper, tensors = setup
+    a = swapper.prefetch("t1", np.float32, (4096,))
+    b = swapper.prefetch("t1", np.float32, (4096,))
+    assert a is b
+    t = swapper.get("t1", np.float32, (4096,))
+    t.release()
+
+
+def test_pipeline_over_all_tensors(setup):
+    """Stream 6 tensors through a 4-slot pool with prefetch depth 2."""
+    store, pool, swapper, tensors = setup
+    keys = list(tensors)
+    swapper.prefetch(keys[0], np.float32, (4096,))
+    for i, k in enumerate(keys):
+        if i + 1 < len(keys):
+            swapper.prefetch(keys[i + 1], np.float32, (4096,))
+        ticket = swapper.get(k, np.float32, (4096,))
+        np.testing.assert_array_equal(
+            ticket.buf.view(np.float32, (4096,)), tensors[k])
+        ticket.release()
+    assert pool.in_use_payload == 0
