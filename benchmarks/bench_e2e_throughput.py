@@ -2,7 +2,9 @@
 baseline vs MemAscend, measured on REAL steps of a small model in this
 container (both policies run the identical compute; the deltas come from
 the overflow check, allocator, and storage paths — exactly the paper's
-claim)."""
+claim).  Plus the StreamPlan lookahead ablation: fetch-wait time with
+synchronous per-unit fetches (lookahead=1, the seed engine's behaviour)
+vs lookahead pipelining (block i+1's SSD read under block i's compute)."""
 
 from __future__ import annotations
 
@@ -13,8 +15,7 @@ import time
 import jax
 
 from repro.configs.base import ModelConfig
-from repro.core import (OffloadedTrainer, memascend_policy,
-                        zero_infinity_policy)
+from repro.core import OffloadPolicy, OffloadSession
 from repro.core.model_adapter import make_offloadable_lm
 from repro.data import DataLoader, SyntheticTextDataset
 
@@ -25,32 +26,44 @@ CFG = ModelConfig(name="bench-20m", family="dense", n_layers=4, d_model=256,
 BATCH, SEQ, STEPS = 4, 256, 4
 
 
-def _throughput(policy) -> tuple[float, float]:
+def _run_policy(policy) -> tuple[float, float, float]:
+    """(tokens/s, peak host bytes, fetch-wait seconds) over STEPS steps."""
     model = make_offloadable_lm(CFG, jax.random.PRNGKey(0))
-    tr = OffloadedTrainer(model, policy)
     dl = DataLoader(SyntheticTextDataset(vocab=CFG.vocab, seed=0),
                     batch=BATCH, seq_len=SEQ)
-    b = dl.next_batch()
-    tr.train_step(b["tokens"], b["labels"])    # warmup/compile
-    t0 = time.perf_counter()
-    for _ in range(STEPS):
+    with OffloadSession(model, policy) as s:
         b = dl.next_batch()
-        tr.train_step(b["tokens"], b["labels"])
-    dt = time.perf_counter() - t0
-    peak = tr.tracker.peak_allocated
-    tr.close()
-    return STEPS * BATCH * SEQ / dt, peak
+        s.train_step(b["tokens"], b["labels"])    # warmup/compile
+        wait0 = s.swapper.stats.wait_seconds
+        t0 = time.perf_counter()
+        for _ in range(STEPS):
+            b = dl.next_batch()
+            s.train_step(b["tokens"], b["labels"])
+        dt = time.perf_counter() - t0
+        fetch_wait = s.swapper.stats.wait_seconds - wait0
+        peak = s.tracker.peak_allocated
+    return STEPS * BATCH * SEQ / dt, peak, fetch_wait
+
+
+def _policy(name: str, root: str, **kw):
+    builder = OffloadPolicy.preset(name).with_store(root).with_adam(lr=1e-3)
+    if "lookahead" in kw:
+        builder = builder.with_lookahead(kw["lookahead"])
+    return builder.build()
 
 
 def run() -> None:
     root = tempfile.mkdtemp(prefix="bench_e2e_")
     try:
-        tput_base, peak_base = _throughput(
-            zero_infinity_policy(root + "/z", lr=1e-3))
-        tput_mem, peak_mem = _throughput(
-            memascend_policy(root + "/m", lr=1e-3))
-        tput_bf16, _ = _throughput(
-            memascend_policy(root + "/b", lr=1e-3, bf16_optimizer=True))
+        tput_base, peak_base, _ = _run_policy(
+            _policy("zero-infinity", root + "/z"))
+        tput_mem, peak_mem, wait_pipe = _run_policy(
+            _policy("memascend", root + "/m"))
+        tput_bf16, _, _ = _run_policy(
+            _policy("memascend-bf16", root + "/b"))
+        # lookahead ablation: same policy, prefetch window forced to 1
+        tput_sync, _, wait_sync = _run_policy(
+            _policy("memascend", root + "/s", lookahead=1))
         emit("e2e/throughput", 1e6 / tput_mem,
              f"baseline={tput_base:.0f}tok/s memascend={tput_mem:.0f}tok/s "
              f"improvement={tput_mem / tput_base - 1:+.1%} "
@@ -62,5 +75,10 @@ def run() -> None:
              f"baseline={peak_base / 1e6:.1f}MB "
              f"memascend={peak_mem / 1e6:.1f}MB "
              f"reduction={1 - peak_mem / peak_base:.1%}")
+        emit("e2e/fetch-wait", wait_pipe * 1e6 / STEPS,
+             f"sync={wait_sync * 1e3:.1f}ms lookahead={wait_pipe * 1e3:.1f}ms "
+             f"(per {STEPS} steps) reduction="
+             f"{1 - wait_pipe / max(wait_sync, 1e-12):.1%} "
+             f"sync_tput={tput_sync:.0f}tok/s pipe_tput={tput_mem:.0f}tok/s")
     finally:
         shutil.rmtree(root, ignore_errors=True)

@@ -3,12 +3,15 @@ offloading for a few hundred steps, ZeRO-Infinity baseline vs MemAscend.
 
 Every piece of the paper's pipeline runs for real in this container:
 weights+optimizer states live on the (raw-file) NVMe store, the host pool
-streams compute weights per block, gradients land in the fp32 flat buffer,
-the fused bitwise check screens them, and the subgroup-streamed CPU Adam
-updates SSD-resident state.
+streams compute weights per block with lookahead prefetch, gradients land
+in the fp32 flat buffer, the fused bitwise check screens them, and the
+subgroup-streamed CPU Adam updates SSD-resident state.
+
+Policies come from the registry and execution runs through OffloadSession
+(StreamPlan schedules + lookahead pipelining).
 
 Run:  PYTHONPATH=src python examples/finetune_offloaded.py \
-          [--steps 200] [--policy memascend|zero-infinity|both] [--bf16-opt]
+          [--steps 200] [--policy memascend|zero-infinity|memascend-bf16|both]
 """
 
 import argparse
@@ -18,8 +21,7 @@ import time
 import jax
 
 from repro.configs.base import ModelConfig
-from repro.core import (OffloadedTrainer, fmt_bytes, memascend_policy,
-                        zero_infinity_policy)
+from repro.core import OffloadPolicy, OffloadSession, fmt_bytes
 from repro.core.model_adapter import make_offloadable_lm
 from repro.data import DataLoader, SyntheticTextDataset
 
@@ -32,42 +34,45 @@ def run(policy, steps: int, seq_len: int = 512, batch: int = 4) -> None:
     print(f"\n=== policy: {policy.name} (state dtype "
           f"{policy.adam.state_dtype}) ===")
     model = make_offloadable_lm(CFG, jax.random.PRNGKey(0))
-    trainer = OffloadedTrainer(model, policy)
-    print(f"params: {trainer.total_params / 1e6:.1f}M  "
-          f"pool: {fmt_bytes(trainer.pool.pool_bytes)}  "
-          f"flat buffer: {fmt_bytes(trainer.flat.nbytes)}")
-    dl = DataLoader(SyntheticTextDataset(vocab=CFG.vocab, seed=0),
-                    batch=batch, seq_len=seq_len)
-    t0 = time.time()
-    for step in range(1, steps + 1):
-        b = dl.next_batch()
-        m = trainer.train_step(b["tokens"], b["labels"])
-        if step % 20 == 0 or step == 1:
-            tput = step * batch * seq_len / (time.time() - t0)
-            print(f"step {step:4d}  loss {m['loss']:.4f}  "
-                  f"scale {m['loss_scale']:.0f}  "
-                  f"opt-io {fmt_bytes(m['optimizer_io_bytes'])}/step  "
-                  f"{tput:.0f} tok/s")
-    print(f"peak host memory: {fmt_bytes(trainer.tracker.peak_allocated)}")
-    print(f"pool fragmentation: {trainer.pool.fragmentation():.1%}")
-    print(f"SSD io: written {fmt_bytes(trainer.store.stats.bytes_written)}, "
-          f"read {fmt_bytes(trainer.store.stats.bytes_read)}")
-    trainer.close()
+    with OffloadSession(model, policy) as s:
+        print(f"params: {s.total_params / 1e6:.1f}M  "
+              f"pool: {fmt_bytes(s.pool.pool_bytes)}  "
+              f"flat buffer: {fmt_bytes(s.flat.nbytes)}  "
+              f"lookahead: {s.lookahead}")
+        dl = DataLoader(SyntheticTextDataset(vocab=CFG.vocab, seed=0),
+                        batch=batch, seq_len=seq_len)
+        t0 = time.time()
+        for step in range(1, steps + 1):
+            b = dl.next_batch()
+            m = s.train_step(b["tokens"], b["labels"])
+            if step % 20 == 0 or step == 1:
+                tput = step * batch * seq_len / (time.time() - t0)
+                print(f"step {step:4d}  loss {m['loss']:.4f}  "
+                      f"scale {m['loss_scale']:.0f}  "
+                      f"opt-io {fmt_bytes(m['optimizer_io_bytes'])}/step  "
+                      f"fetch-wait {m['fetch_wait_s'] * 1e3:.0f}ms  "
+                      f"{tput:.0f} tok/s")
+        print(f"peak host memory: {fmt_bytes(s.tracker.peak_allocated)}")
+        print(f"pool fragmentation: {s.pool.fragmentation():.1%}")
+        print(f"SSD io: written {fmt_bytes(s.store.stats.bytes_written)}, "
+              f"read {fmt_bytes(s.store.stats.bytes_read)}")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--policy", default="both",
-                    choices=["memascend", "zero-infinity", "both"])
-    ap.add_argument("--bf16-opt", action="store_true")
+                    choices=OffloadPolicy.names() + ["both"])
+    ap.add_argument("--lr", type=float, default=1e-3)
     args = ap.parse_args()
+    names = (["zero-infinity", "memascend"] if args.policy == "both"
+             else [args.policy])
     with tempfile.TemporaryDirectory(prefix="ft_offload_") as root:
-        if args.policy in ("zero-infinity", "both"):
-            run(zero_infinity_policy(root + "/z", lr=1e-3), args.steps)
-        if args.policy in ("memascend", "both"):
-            run(memascend_policy(root + "/m", lr=1e-3,
-                                 bf16_optimizer=args.bf16_opt), args.steps)
+        for i, name in enumerate(names):
+            policy = (OffloadPolicy.preset(name)
+                      .with_store(f"{root}/{i}")
+                      .with_adam(lr=args.lr).build())
+            run(policy, args.steps)
 
 
 if __name__ == "__main__":

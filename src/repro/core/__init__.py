@@ -10,7 +10,9 @@ Public surface:
 * SSD tensor stores      — :mod:`repro.core.nvme` (§III-D/§IV-E)
 * host Adam              — :mod:`repro.core.optimizer`
 * prefetch swapper       — :mod:`repro.core.swapper`
-* the training engine    — :mod:`repro.core.offload_engine`
+* schedule IR            — :mod:`repro.core.stream_plan` (Fig. 5/6 as data)
+* the offload session    — :mod:`repro.core.session` (lookahead executor)
+* policies + trainer shim— :mod:`repro.core.offload_engine`
 """
 
 from .memory_tracker import MemoryTracker, GLOBAL_TRACKER, fmt_bytes
@@ -24,9 +26,15 @@ from .overflow import (baseline_overflow_check, fused_overflow_check,
 from .loss_scale import DynamicLossScaler
 from .nvme import DirectNVMeEngine, FilesystemEngine, TensorStore, IOStats
 from .optimizer import AdamConfig, OffloadedAdam, adam_update
-from .swapper import ParameterSwapper
+from .swapper import ParameterSwapper, SwapStats
+from .stream_plan import (ComputeOp, FetchOp, GradWriteOp, PlanError,
+                          ReleaseOp, StreamPlan, compile_decode, compile_eval,
+                          compile_train)
+from .session import OffloadSession
 from .offload_engine import (OffloadableModel, OffloadUnit, OffloadPolicy,
-                             OffloadedTrainer, memascend_policy,
+                             OffloadedTrainer, PolicyBuilder,
+                             memascend_bf16_policy, memascend_policy,
+                             policy_names, register_policy,
                              zero_infinity_policy)
 from .checkpoint import (load_pytree, restore_trainer_step, save_pytree,
                          snapshot_trainer)

@@ -62,15 +62,17 @@ def make_offloadable_lm(cfg: ModelConfig, key,
         out, _aux = apply_layer(cfg, kinds, params, h)
         return out
 
-    def head_loss(params, h, labels):
+    def head_logits(params, h):
         h = rms_norm(h, params["final_norm"].astype(compute_dtype),
                      cfg.rms_eps)
-        logits = lm_logits(h, params["head"].astype(compute_dtype))
-        return cross_entropy(logits, labels)
+        return lm_logits(h, params["head"].astype(compute_dtype))
+
+    def head_loss(params, h, labels):
+        return cross_entropy(head_logits(params, h), labels)
 
     def class_of(param_key: str) -> str:
         return ModelConfig.class_of_param(param_key)
 
     return OffloadableModel(units=units, embed_apply=embed_apply,
                             block_apply=block_apply, head_loss=head_loss,
-                            class_of=class_of)
+                            class_of=class_of, head_logits=head_logits)

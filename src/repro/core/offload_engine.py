@@ -1,13 +1,18 @@
 """The SSD-offloaded training engine (ZeRO-Infinity semantics + MemAscend).
 
-This is the end-to-end substrate the paper optimizes.  One training step:
+This module holds the model-side interface (:class:`OffloadableModel`), the
+policy layer (:class:`OffloadPolicy` — a validated, registry-addressable
+description of which allocator/pool/overflow/store implementations to run),
+and :class:`OffloadedTrainer`, kept as a thin back-compat shim.
 
-  1. **Forward**, block-streamed: for each unit (embedding, transformer
-     blocks, LM head) the swapper prefetches compute-precision weights
-     SSD→host pool slot; weights are put on device; the block runs; the slot
-     is released.  Block *inputs* are checkpointed (gradient checkpointing)
-     and — in offloaded-GC mode — held in host memory, charged to the
-     tracker (paper Eq. 1 term).
+The lifecycle itself — pool-slot checkout → async SSD read → H2D → compute
+→ release, per training step:
+
+  1. **Forward**, block-streamed: per unit (embedding, transformer blocks,
+     LM head) the swapper prefetches compute-precision weights SSD→host pool
+     slot; weights are put on device; the block runs; the slot is released.
+     Block *inputs* are checkpointed (gradient checkpointing) and — in
+     offloaded-GC mode — held in host memory, charged to the tracker.
   2. **Backward**, reverse-streamed: weights are re-fetched, the block is
      recomputed under ``jax.vjp``, and parameter gradients are written into
      the fp32 **gradient flat buffer** in host memory (ZeRO-Infinity's
@@ -15,37 +20,41 @@ This is the end-to-end substrate the paper optimizes.  One training step:
   3. **Overflow check** over the flat buffer — chained baseline or
      MemAscend's fused single pass — then the dynamic loss scaler decides
      whether to apply the step.
-  4. **Optimizer**, subgroup-streamed on the host: for each parameter, read
+  4. **Optimizer**, subgroup-streamed on the host: per parameter, read
      (master, m, v) from SSD, Adam-update, write back, emit fresh compute
-     weights (fp32 or bf16 state per config).
+     weights.
 
-Two :class:`OffloadPolicy` presets package the paper's comparison:
-``zero_infinity_policy()`` (fixed pool + pow2 pinned allocator + chained
-overflow check + per-tensor-file store) vs ``memascend_policy()`` (adaptive
-pool + alignment-free allocator + fused check + direct NVMe engine).
+— now lives in :mod:`repro.core.session` as an executable schedule
+(:mod:`repro.core.stream_plan`) with lookahead pipelining, shared by train,
+eval, and offloaded decode.
+
+Policies are selected by name through the registry::
+
+    policy = OffloadPolicy.preset("memascend").with_store(root).build()
+
+Two presets package the paper's comparison: ``zero-infinity`` (fixed pool +
+pow2 pinned allocator + chained overflow check + per-tensor-file store) vs
+``memascend`` (adaptive pool + alignment-free allocator + fused check +
+direct NVMe engine); ``memascend-bf16`` adds the half-precision optimizer.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import os
 from dataclasses import dataclass, field
 from typing import Callable
 
 import numpy as np
 
-import jax
-import jax.numpy as jnp
-
 from .buffer_pool import (AdaptiveBufferPool, BufferPoolBase, FixedBufferPool,
                           PoolCensus, ShapeClass)
-from .loss_scale import DynamicLossScaler
 from .memory_tracker import MemoryTracker
 from .nvme import DirectNVMeEngine, FilesystemEngine, TensorStore
-from .optimizer import AdamConfig, OffloadedAdam
-from .overflow import baseline_overflow_check, fused_overflow_check
+from .optimizer import AdamConfig
 from .pinned_alloc import (AlignmentFreeAllocator, PinnedAllocatorBase,
                            PowerOfTwoCachingAllocator)
-from .swapper import ParameterSwapper
+from .session import OffloadSession
 
 
 # ---------------------------------------------------------------------------
@@ -74,6 +83,8 @@ class OffloadableModel:
       embed_apply(params, tokens)              -> h
       block_apply(params, h)                   -> h
       head_loss(params, h, labels)             -> scalar loss (pre-scaling)
+      head_logits(params, h)                   -> logits (optional; required
+                                                  by decode StreamPlans)
     ``class_of(param_key)`` maps a parameter to its pool shape class.
     """
 
@@ -82,6 +93,7 @@ class OffloadableModel:
     block_apply: Callable
     head_loss: Callable
     class_of: Callable[[str], str]
+    head_logits: Callable | None = None
 
     def census(self, inflight_blocks: int = 2,
                bytes_per_elem: int = 2) -> PoolCensus:
@@ -89,7 +101,6 @@ class OffloadableModel:
         per_block: dict[str, int] = {}
         standalone: dict[str, int] = {}
         nbytes: dict[str, int] = {}
-        block_seen = False
         for unit in self.units:
             counts: dict[str, int] = {}
             for key, value in unit.params.items():
@@ -98,13 +109,11 @@ class OffloadableModel:
                 nbytes[cls] = max(nbytes.get(cls, 0), compute_nbytes)
                 counts[cls] = counts.get(cls, 0) + 1
             if unit.kind == "block":
-                block_seen = True
                 for cls, c in counts.items():
                     per_block[cls] = max(per_block.get(cls, 0), c)
             else:
                 for cls, c in counts.items():
                     standalone[cls] = standalone.get(cls, 0) + c
-        del block_seen
         classes = []
         for cls in sorted(nbytes):
             classes.append(ShapeClass(cls, nbytes[cls],
@@ -114,21 +123,184 @@ class OffloadableModel:
 
 
 # ---------------------------------------------------------------------------
-# Policies (baseline vs MemAscend)
+# Policies (baseline vs MemAscend): validated dataclass + named registry
 # ---------------------------------------------------------------------------
+
+_POLICY_REGISTRY: dict[str, Callable[..., "OffloadPolicy"]] = {}
+
+
+def register_policy(name: str):
+    """Decorator: make ``factory(root, **kw) -> OffloadPolicy`` addressable
+    as ``OffloadPolicy.preset(name)`` from launchers/benchmarks/examples."""
+    def deco(factory):
+        _POLICY_REGISTRY[name] = factory
+        return factory
+    return deco
+
+
+def policy_names() -> list[str]:
+    return sorted(_POLICY_REGISTRY)
+
 
 @dataclass
 class OffloadPolicy:
+    """Which allocator/pool/overflow/store to run, validated on build.
+
+    ``inflight_blocks`` is the prefetch depth N that sizes the pool (§IV-B);
+    ``lookahead`` bounds how many upcoming plan fetches the session issues
+    asynchronously (None → inflight_blocks; 1 → synchronous per-unit
+    fetches, the seed engine's behaviour).
+    """
+
     name: str
     allocator_cls: type
     pool_cls: type
     fused_overflow: bool
-    store_factory: Callable[[str], TensorStore]
+    store_factory: Callable[[], TensorStore]
     adam: AdamConfig = field(default_factory=AdamConfig)
     inflight_blocks: int = 2
+    lookahead: int | None = None
     offload_checkpoints: bool = True   # offloaded gradient checkpointing
 
+    def __post_init__(self) -> None:
+        if not self.name or not isinstance(self.name, str):
+            raise ValueError("policy name must be a non-empty string")
+        if not (isinstance(self.allocator_cls, type)
+                and issubclass(self.allocator_cls, PinnedAllocatorBase)):
+            raise ValueError(f"allocator_cls must be a PinnedAllocatorBase "
+                             f"subclass, got {self.allocator_cls!r}")
+        if not (isinstance(self.pool_cls, type)
+                and issubclass(self.pool_cls, BufferPoolBase)):
+            raise ValueError(f"pool_cls must be a BufferPoolBase subclass, "
+                             f"got {self.pool_cls!r}")
+        if not callable(self.store_factory):
+            raise ValueError("store_factory must be callable")
+        if self.inflight_blocks < 1:
+            raise ValueError(f"inflight_blocks must be >= 1, got "
+                             f"{self.inflight_blocks}")
+        if self.lookahead is not None and not (
+                1 <= self.lookahead <= self.inflight_blocks):
+            raise ValueError(
+                f"lookahead must be in [1, inflight_blocks="
+                f"{self.inflight_blocks}], got {self.lookahead} — a deeper "
+                f"window would oversubscribe the pool (§IV-B sizing)")
+        if self.adam.state_dtype not in ("float32", "bfloat16"):
+            raise ValueError(f"state_dtype must be float32|bfloat16, got "
+                             f"{self.adam.state_dtype!r}")
+        if self.adam.compute_dtype not in ("float32", "float16", "bfloat16"):
+            raise ValueError(f"compute_dtype must be float32|float16|"
+                             f"bfloat16, got {self.adam.compute_dtype!r}")
 
+    # -- registry access -----------------------------------------------------
+
+    @staticmethod
+    def preset(name: str, **kwargs) -> "PolicyBuilder":
+        """A builder seeded from the named registry preset."""
+        try:
+            factory = _POLICY_REGISTRY[name]
+        except KeyError:
+            raise KeyError(f"unknown offload policy {name!r}; registered: "
+                           f"{policy_names()}") from None
+        return PolicyBuilder(name, factory, **kwargs)
+
+    @staticmethod
+    def names() -> list[str]:
+        return policy_names()
+
+    def replace(self, **changes) -> "OffloadPolicy":
+        """A validated copy with ``changes`` applied (re-runs validation)."""
+        return dataclasses.replace(self, **changes)
+
+
+# with_adam/with_store route through one factory-kwargs dict; these names
+# let each method reject options that belong to the other group.
+_ADAM_FIELDS = frozenset(f.name for f in dataclasses.fields(AdamConfig))
+
+
+class PolicyBuilder:
+    """Fluent, validated construction of an :class:`OffloadPolicy`.
+
+    ``OffloadPolicy.preset("memascend").with_store(root)
+    .with_adam(lr=1e-3).with_lookahead(2).build()`` — every ``with_*``
+    returns the builder; :meth:`build` runs the preset factory and then the
+    dataclass validation.
+    """
+
+    def __init__(self, name: str, factory: Callable, **factory_kwargs):
+        self._name = name
+        self._factory = factory
+        self._factory_kwargs = dict(factory_kwargs)
+        self._root: str | None = None
+        self._store_factory: Callable[[], TensorStore] | None = None
+        self._overrides: dict = {}
+
+    def with_store(self, root: str | None = None, *,
+                   factory: Callable[[], TensorStore] | None = None,
+                   **store_kwargs) -> "PolicyBuilder":
+        """Point the policy at SSD storage: a root directory for the
+        preset's engine (``store_kwargs`` are forwarded to the preset
+        factory, e.g. ``n_devices=`` for memascend), or an explicit
+        zero-arg store factory."""
+        if (root is None) == (factory is None):
+            raise ValueError("with_store needs exactly one of root=/factory=")
+        if factory is not None and store_kwargs:
+            raise ValueError(
+                f"store option(s) {sorted(store_kwargs)} only apply with "
+                f"root= (they configure the preset's store engine); an "
+                f"explicit factory= is already fully configured")
+        misrouted = sorted(set(store_kwargs) & _ADAM_FIELDS)
+        if misrouted:
+            raise ValueError(f"with_store got Adam option(s) {misrouted}; "
+                             f"use with_adam()")
+        self._root = root
+        self._store_factory = factory
+        self._factory_kwargs.update(store_kwargs)
+        return self
+
+    def with_adam(self, **adam_kwargs) -> "PolicyBuilder":
+        unknown = sorted(set(adam_kwargs) - _ADAM_FIELDS)
+        if unknown:
+            raise ValueError(
+                f"with_adam got non-Adam option(s) {unknown}; AdamConfig "
+                f"fields: {sorted(_ADAM_FIELDS)} (preset/store options go "
+                f"via preset() or with_store())")
+        self._factory_kwargs.update(adam_kwargs)
+        return self
+
+    def with_inflight_blocks(self, n: int) -> "PolicyBuilder":
+        self._overrides["inflight_blocks"] = n
+        return self
+
+    def with_lookahead(self, n: int | None) -> "PolicyBuilder":
+        self._overrides["lookahead"] = n
+        return self
+
+    def with_overrides(self, **field_overrides) -> "PolicyBuilder":
+        """Override any OffloadPolicy field post-factory (validated)."""
+        self._overrides.update(field_overrides)
+        return self
+
+    def build(self) -> OffloadPolicy:
+        if self._root is None and self._store_factory is None:
+            raise ValueError(
+                f"policy {self._name!r} has no store: call .with_store(root)")
+        root = self._root if self._root is not None else "unused"
+        try:
+            policy = self._factory(root, **self._factory_kwargs)
+        except TypeError as e:
+            # Unknown kwargs would otherwise surface deep inside the preset
+            # (e.g. AdamConfig), far from the with_store()/with_adam() call
+            # that introduced them.
+            raise ValueError(
+                f"preset {self._name!r} rejected option(s) passed via "
+                f"preset()/with_store()/with_adam(): {e}") from e
+        changes = dict(self._overrides)
+        if self._store_factory is not None:
+            changes["store_factory"] = self._store_factory
+        return policy.replace(**changes) if changes else policy
+
+
+@register_policy("zero-infinity")
 def zero_infinity_policy(root: str, **adam_kw) -> OffloadPolicy:
     return OffloadPolicy(
         name="zero-infinity",
@@ -140,6 +312,7 @@ def zero_infinity_policy(root: str, **adam_kw) -> OffloadPolicy:
     )
 
 
+@register_policy("memascend")
 def memascend_policy(root: str, *, bf16_optimizer: bool = False,
                      n_devices: int = 2, **adam_kw) -> OffloadPolicy:
     adam_kw.setdefault("state_dtype",
@@ -155,232 +328,45 @@ def memascend_policy(root: str, *, bf16_optimizer: bool = False,
     )
 
 
+@register_policy("memascend-bf16")
+def memascend_bf16_policy(root: str, **kw) -> OffloadPolicy:
+    kw.setdefault("bf16_optimizer", True)
+    return memascend_policy(root, **kw).replace(name="memascend-bf16")
+
+
 # ---------------------------------------------------------------------------
-# The engine
+# Back-compat shim over OffloadSession
 # ---------------------------------------------------------------------------
 
 class OffloadedTrainer:
-    """Layer-streaming fwd/bwd + host optimizer over an OffloadableModel."""
+    """Thin shim: the seed trainer API, delegating to an OffloadSession.
+
+    Prefer the session directly (context management, StreamPlans, lookahead
+    control, serve mode); this class keeps the historical surface —
+    ``train_step`` / ``eval_loss`` / ``master_param`` / ``close`` plus the
+    ``store``/``pool``/``swapper``/``optimizer``/``scaler``/``flat``
+    attributes — for existing callers and checkpoints.
+    """
 
     def __init__(self, model: OffloadableModel, policy: OffloadPolicy,
                  *, tracker: MemoryTracker | None = None) -> None:
-        self.model = model
-        self.policy = policy
-        self.tracker = tracker or MemoryTracker()
-        self.store = policy.store_factory()
-        self.allocator = policy.allocator_cls(
-            tracker=self.tracker, component="pinned", backing="numpy")
-        census = model.census(
-            policy.inflight_blocks,
-            bytes_per_elem=policy.adam.compute_np_dtype.itemsize)
-        self.pool = policy.pool_cls(census, self.allocator)
-        class_of = {}
-        for unit in model.units:
-            for key in unit.params:
-                cls = model.class_of(key)
-                class_of[f"{unit.name}/{key}{OffloadedAdam.COMPUTE}"] = (
-                    cls if isinstance(self.pool, AdaptiveBufferPool)
-                    else FixedBufferPool.SLOT_CLASS)
-        # For the fixed pool every request maps to the monolithic class via
-        # the pool itself; pass the true class and let the pool decide.
-        self.swapper = ParameterSwapper(self.store, self.pool, class_of={
-            k: model.class_of(k.split("/", 1)[1].rsplit(".", 1)[0])
-            for k in class_of})
-        self.optimizer = OffloadedAdam(self.store, policy.adam,
-                                       tracker=self.tracker)
-        self.scaler = DynamicLossScaler()
-        if policy.adam.compute_dtype != "float16":
-            self.scaler.scale = 1.0  # only fp16 needs scaling; check stays on
-        self.compute_dtype = {"bfloat16": jnp.bfloat16,
-                              "float16": jnp.float16,
-                              "float32": jnp.float32}[
-            policy.adam.compute_dtype]
-
-        # Register all parameters with the store/optimizer.
-        self._unit_param_meta: list[tuple[OffloadUnit, dict]] = []
-        total_params = 0
-        for unit in model.units:
-            meta = {}
-            for key, value in unit.params.items():
-                skey = f"{unit.name}/{key}"
-                self.optimizer.register(skey, value)
-                meta[key] = (value.shape, value.size)
-                total_params += value.size
-            self._unit_param_meta.append((unit, meta))
-        self.total_params = total_params
-
-        # Gradient flat buffer: fp32, whole partition, lives for the run.
-        self._flat_buf = self.allocator.alloc(total_params * 4,
-                                              tag="gradient_flat_buffer")
-        self.flat = self._flat_buf.view(np.float32, (total_params,))
-        self._flat_offsets: dict[str, tuple[int, int, tuple]] = {}
-        off = 0
-        for unit, meta in self._unit_param_meta:
-            for key, (shape, size) in meta.items():
-                self._flat_offsets[f"{unit.name}/{key}"] = (off, size, shape)
-                off += size
-
-        # jitted per-block functions (shared across blocks of equal shapes)
-        self._jit_embed = jax.jit(model.embed_apply)
-        self._jit_block = jax.jit(model.block_apply)
-        self._jit_head = jax.jit(self._head_loss_and_grads)
-        self._jit_block_bwd = jax.jit(self._block_bwd)
-        self._jit_embed_bwd = jax.jit(
-            lambda p, t, dy: jax.vjp(model.embed_apply, p, t)[1](dy)[0])
-
-        self.metrics: dict = {}
-
-    # -- jitted helpers ----------------------------------------------------------
-
-    def _head_loss_and_grads(self, params, h, labels, scale):
-        def scaled(params, h):
-            return self.model.head_loss(params, h, labels) * scale
-        (sloss), vjp = jax.vjp(scaled, params, h)
-        dparams, dh = vjp(jnp.ones((), sloss.dtype))
-        return sloss / scale, dparams, dh
-
-    def _block_bwd(self, params, x, dy):
-        _, vjp = jax.vjp(self.model.block_apply, params, x)
-        dparams, dx = vjp(dy)
-        return dparams, dx
-
-    # -- weight streaming ----------------------------------------------------------
-
-    def _fetch_unit_device_params(self, unit: OffloadUnit, meta: dict):
-        """Stream one unit's compute weights SSD→pool→device."""
-        cd = self.policy.adam.compute_np_dtype
-        for key, (shape, _size) in meta.items():
-            skey = f"{unit.name}/{key}{OffloadedAdam.COMPUTE}"
-            self.swapper.prefetch(skey, cd, shape)
-        device_params = {}
-        for key, (shape, _size) in meta.items():
-            skey = f"{unit.name}/{key}{OffloadedAdam.COMPUTE}"
-            ticket = self.swapper.get(skey, cd, shape)
-            host_view = ticket.buf.view(cd, shape)
-            # H2D transfer. copy=True is essential: on the CPU backend jax
-            # may alias host memory, and the pool slot is reused as soon as
-            # it is released (the paper's lifecycle) — an alias would race
-            # with async dispatch.
-            device_params[key] = jnp.array(host_view, copy=True)
-            ticket.release()                              # slot back to pool
-        return device_params
-
-    # -- checkpoint offload ----------------------------------------------------------
-
-    def _save_checkpoint(self, h) -> tuple:
-        if self.policy.offload_checkpoints:
-            host = np.asarray(h)   # D2H into host memory
-            handle = self.tracker.alloc("activation_checkpoints", host.nbytes,
-                                        tag="block_input")
-            return ("host", host, handle, h.dtype)
-        return ("device", h, None, h.dtype)
-
-    def _restore_checkpoint(self, ckpt):
-        kind, payload, handle, dtype = ckpt
-        if kind == "host":
-            arr = jnp.asarray(payload, dtype=dtype)
-            self.tracker.free(handle)
-            return arr
-        return payload
-
-    # -- the step -------------------------------------------------------------------
+        self.session = OffloadSession(model, policy, tracker=tracker)
 
     def train_step(self, tokens: np.ndarray, labels: np.ndarray) -> dict:
-        model, meta_list = self.model, self._unit_param_meta
-        embed_unit, embed_meta = meta_list[0]
-        head_unit, head_meta = meta_list[-1]
-        block_list = meta_list[1:-1]
-
-        # ---- forward, block-streamed ----
-        params = self._fetch_unit_device_params(embed_unit, embed_meta)
-        h = self._jit_embed(params, jnp.asarray(tokens))
-        del params
-        checkpoints = []
-        for unit, meta in block_list:
-            checkpoints.append(self._save_checkpoint(h))
-            params = self._fetch_unit_device_params(unit, meta)
-            h = self._jit_block(params, h)
-            del params
-
-        # ---- head loss + initial cotangent ----
-        params = self._fetch_unit_device_params(head_unit, head_meta)
-        loss, head_grads, dh = self._jit_head(
-            params, h, jnp.asarray(labels), jnp.asarray(
-                self.scaler.scale, dtype=jnp.float32))
-        del params
-        self._write_grads(head_unit, head_meta, head_grads)
-
-        # ---- backward, reverse block-streamed (recompute via vjp) ----
-        for (unit, meta), ckpt in zip(reversed(block_list),
-                                      reversed(checkpoints)):
-            x = self._restore_checkpoint(ckpt)
-            params = self._fetch_unit_device_params(unit, meta)
-            dparams, dh = self._jit_block_bwd(params, x, dh)
-            del params
-            self._write_grads(unit, meta, dparams)
-
-        # ---- embedding backward ----
-        params = self._fetch_unit_device_params(embed_unit, embed_meta)
-        dembed = self._jit_embed_bwd(params, jnp.asarray(tokens), dh)
-        del params
-        self._write_grads(embed_unit, embed_meta, dembed)
-
-        # ---- overflow check on the flat buffer ----
-        if self.policy.fused_overflow:
-            overflowed = fused_overflow_check(self.flat, tracker=self.tracker)
-        else:
-            overflowed = baseline_overflow_check(self.flat, tracker=self.tracker)
-        apply_step = self.scaler.update(overflowed)
-
-        # ---- host optimizer, subgroup-streamed ----
-        if apply_step:
-            self.optimizer.begin_step()
-            inv_scale = 1.0 / self.scaler.scale
-            for unit, meta in meta_list:
-                for key, (shape, size) in meta.items():
-                    skey = f"{unit.name}/{key}"
-                    off, size, shape = self._flat_offsets[skey]
-                    grad = self.flat[off:off + size].reshape(shape) * np.float32(
-                        inv_scale)
-                    self.optimizer.step_subgroup(skey, grad)
-
-        return {
-            "loss": float(loss),
-            "overflowed": overflowed,
-            "applied": apply_step,
-            "loss_scale": self.scaler.scale,
-            "optimizer_io_bytes": self.optimizer.last_io_bytes,
-            "peak_host_bytes": self.tracker.peak_allocated,
-        }
-
-    def _write_grads(self, unit: OffloadUnit, meta: dict, grads: dict) -> None:
-        """Accumulate device grads into the fp32 host flat buffer."""
-        for key in meta:
-            off, size, shape = self._flat_offsets[f"{unit.name}/{key}"]
-            g = np.asarray(grads[key], dtype=np.float32).reshape(-1)  # D2H
-            self.flat[off:off + size] = g
-
-    # -- eval / weights access ---------------------------------------------------------
+        return self.session.train_step(tokens, labels)
 
     def eval_loss(self, tokens: np.ndarray, labels: np.ndarray) -> float:
-        meta_list = self._unit_param_meta
-        params = self._fetch_unit_device_params(*meta_list[0])
-        h = self._jit_embed(params, jnp.asarray(tokens))
-        for unit, meta in meta_list[1:-1]:
-            params = self._fetch_unit_device_params(unit, meta)
-            h = self._jit_block(params, h)
-        params = self._fetch_unit_device_params(*meta_list[-1])
-        loss = jax.jit(self.model.head_loss)(params, h, jnp.asarray(labels))
-        return float(loss)
+        return self.session.eval_loss(tokens, labels)
 
     def master_param(self, unit_name: str, key: str) -> np.ndarray:
-        meta = next(m for u, m in self._unit_param_meta if u.name == unit_name)
-        shape, _ = meta[key]
-        sd = self.policy.adam.state_np_dtype
-        return self.store.read_new(f"{unit_name}/{key}.master", sd, shape)
+        return self.session.master_param(unit_name, key)
 
     def close(self) -> None:
-        self.swapper.drain()
-        self.pool.close()
-        self._flat_buf.free()
-        self.store.close()
+        self.session.close()
+
+    def __getattr__(self, name: str):
+        # model/policy/tracker/store/pool/swapper/optimizer/scaler/flat/
+        # total_params/metrics/... all live on the session.
+        if name == "session":   # session construction itself failed
+            raise AttributeError(name)
+        return getattr(self.session, name)

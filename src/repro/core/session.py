@@ -1,0 +1,423 @@
+"""OffloadSession: owns the offload lifecycle and executes StreamPlans.
+
+One session = one open store/allocator/pool/swapper(/optimizer) stack over
+an :class:`~repro.core.offload_engine.OffloadableModel`.  It is a context
+manager — ``with OffloadSession(model, policy) as s: s.train_step(...)`` —
+so the pinned arena, gradient flat buffer, and in-flight SSD reads are
+always drained and returned, success or error.
+
+Execution is plan-driven (:mod:`repro.core.stream_plan`) with **lookahead-N
+pipelining**: when the executor reaches a :class:`FetchOp` it first issues
+async SSD reads for the next ``lookahead`` units in the plan's fetch order,
+then blocks only on the unit it needs *now*.  Block *i+1*'s read therefore
+overlaps block *i*'s H2D + compute; depth is bounded by
+``policy.inflight_blocks``, which is exactly what sizes the pool (paper
+§IV-B), so the prefetch window can never oversubscribe pool slots — the
+pool's own backpressure is the safety net.  ``lookahead=1`` degenerates to
+the seed engine's synchronous per-unit fetches (the benchmark baseline).
+
+The session runs three workloads through the same machinery:
+
+* ``train_step``   — compile_train plan + overflow screen + loss scaler +
+                     subgroup-streamed host Adam,
+* ``eval_loss``    — compile_eval plan (jitted head loss cached once),
+* ``decode_logits``— compile_decode plan (weight-streamed serving; see
+                     :mod:`repro.serve.offloaded`).
+
+``mode="serve"`` opens a leaner session: no optimizer state is written to
+the store and no gradient flat buffer is pinned — only the compute-precision
+weights stream.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .loss_scale import DynamicLossScaler
+from .memory_tracker import MemoryTracker
+from .optimizer import OffloadedAdam
+from .overflow import baseline_overflow_check, fused_overflow_check
+from .stream_plan import (ComputeOp, FetchOp, GradWriteOp, ReleaseOp,
+                          StreamPlan, compile_decode, compile_eval,
+                          compile_train)
+from .swapper import ParameterSwapper
+
+COMPUTE_SUFFIX = OffloadedAdam.COMPUTE
+
+
+class _ExecState:
+    """Per-plan-run bindings and carried activations/cotangents."""
+
+    __slots__ = ("tokens", "labels", "scale", "h", "dh", "loss", "logits",
+                 "live", "grads", "checkpoints")
+
+    def __init__(self, tokens=None, labels=None, scale=1.0):
+        self.tokens = None if tokens is None else jnp.asarray(tokens)
+        self.labels = None if labels is None else jnp.asarray(labels)
+        self.scale = jnp.asarray(scale, dtype=jnp.float32)
+        self.h = self.dh = self.loss = self.logits = None
+        self.live: dict[str, dict] = {}     # unit -> device params
+        self.grads: dict[str, dict] = {}    # unit -> device grads
+        self.checkpoints: dict[str, tuple] = {}  # unit -> saved block input
+
+
+class OffloadSession:
+    """Executes StreamPlans over one open offload stack (context manager)."""
+
+    def __init__(self, model, policy, *, tracker: MemoryTracker | None = None,
+                 mode: str = "train") -> None:
+        if mode not in ("train", "serve"):
+            raise ValueError(f"mode must be 'train' or 'serve', got {mode!r}")
+        self.model = model
+        self.policy = policy
+        self.mode = mode
+        self.tracker = tracker or MemoryTracker()
+        self.store = policy.store_factory()
+        # The store is open from here on: if any later construction step
+        # fails (disk-full while seeding optimizer state, MemoryError on
+        # the flat buffer), __enter__ never runs and no caller can close()
+        # — release whatever was acquired before re-raising.
+        self._closed = False
+        try:
+            self._construct(model, policy, mode)
+        except BaseException:
+            self.close()
+            raise
+
+    def _construct(self, model, policy, mode: str) -> None:
+        self.allocator = policy.allocator_cls(
+            tracker=self.tracker, component="pinned", backing="numpy")
+        census = model.census(
+            policy.inflight_blocks,
+            bytes_per_elem=policy.adam.compute_np_dtype.itemsize)
+        self.pool = policy.pool_cls(census, self.allocator)
+        self.swapper = ParameterSwapper(self.store, self.pool, class_of={
+            f"{unit.name}/{key}{COMPUTE_SUFFIX}": model.class_of(key)
+            for unit in model.units for key in unit.params})
+        self.scaler = DynamicLossScaler()
+        if policy.adam.compute_dtype != "float16":
+            self.scaler.scale = 1.0  # only fp16 needs scaling; check stays on
+        self.compute_dtype = {"bfloat16": jnp.bfloat16,
+                              "float16": jnp.float16,
+                              "float32": jnp.float32}[
+            policy.adam.compute_dtype]
+        lookahead = policy.lookahead or policy.inflight_blocks
+        self.lookahead = max(1, min(lookahead, policy.inflight_blocks))
+
+        # Register every parameter.  Train mode seeds master weights + Adam
+        # moments on the store; serve mode writes only compute weights.
+        self.optimizer = (OffloadedAdam(self.store, policy.adam,
+                                        tracker=self.tracker)
+                          if mode == "train" else None)
+        cd = policy.adam.compute_np_dtype
+        self._unit_param_meta: list[tuple] = []
+        self._units: dict[str, tuple] = {}
+        total_params = 0
+        for unit in model.units:
+            meta = {}
+            for key, value in unit.params.items():
+                if self.optimizer is not None:
+                    self.optimizer.register(f"{unit.name}/{key}", value)
+                else:
+                    self.store.write(f"{unit.name}/{key}{COMPUTE_SUFFIX}",
+                                     value.astype(cd))
+                meta[key] = (value.shape, value.size)
+                total_params += value.size
+            self._unit_param_meta.append((unit, meta))
+            self._units[unit.name] = (unit, meta)
+        self.total_params = total_params
+
+        # Gradient flat buffer: fp32, whole partition, lives for the session
+        # (train mode only — serving never materializes gradients).
+        if mode == "train":
+            self._flat_buf = self.allocator.alloc(total_params * 4,
+                                                  tag="gradient_flat_buffer")
+            self.flat = self._flat_buf.view(np.float32, (total_params,))
+            self._flat_offsets: dict[str, tuple[int, int, tuple]] = {}
+            off = 0
+            for unit, meta in self._unit_param_meta:
+                for key, (shape, size) in meta.items():
+                    self._flat_offsets[f"{unit.name}/{key}"] = (
+                        off, size, shape)
+                    off += size
+        else:
+            self._flat_buf = None
+            self.flat = None
+
+        # jitted per-stage functions (shared across blocks of equal shapes);
+        # the eval head loss is jitted ONCE here, not per eval_loss call.
+        self._jit_embed = jax.jit(model.embed_apply)
+        self._jit_block = jax.jit(model.block_apply)
+        self._jit_head = jax.jit(self._head_loss_and_grads)
+        self._jit_head_loss = jax.jit(model.head_loss)
+        self._jit_block_bwd = jax.jit(self._block_bwd)
+        self._jit_embed_bwd = jax.jit(
+            lambda p, t, dy: jax.vjp(model.embed_apply, p, t)[1](dy)[0])
+        self._jit_head_logits = (jax.jit(model.head_logits)
+                                 if getattr(model, "head_logits", None)
+                                 else None)
+
+        self._plans: dict[str, StreamPlan] = {}
+        self.metrics: dict = {}
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def __enter__(self) -> "OffloadSession":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+    def close(self) -> None:
+        """Drain in-flight reads, return the arena + flat buffer, close the
+        store.  Idempotent; runs on the error path via ``__exit__`` and on
+        partially-constructed sessions (attributes may not exist yet)."""
+        if getattr(self, "_closed", True):
+            return
+        self._closed = True
+        steps = []
+        if getattr(self, "swapper", None) is not None:
+            steps.append(self.swapper.drain)
+        if getattr(self, "pool", None) is not None:
+            steps.append(self.pool.close)
+        if getattr(self, "_flat_buf", None) is not None:
+            steps.append(self._flat_buf.free)
+        steps.append(self.store.close)
+        # every step must run even if an earlier one raises (e.g. an
+        # interrupt re-raised out of drain) — otherwise the arena/flat
+        # buffer/store leak with no way to retry; first failure re-raises.
+        failure = None
+        for step in steps:
+            try:
+                step()
+            except BaseException as e:
+                if failure is None:
+                    failure = e
+        if failure is not None:
+            raise failure
+
+    # -- plans --------------------------------------------------------------
+
+    def plan(self, name: str) -> StreamPlan:
+        """The session's compiled plan for ``name`` (train/eval/decode)."""
+        if name not in self._plans:
+            compiler = {"train": compile_train, "eval": compile_eval,
+                        "decode": compile_decode}[name]
+            self._plans[name] = compiler(self.model)
+        return self._plans[name]
+
+    # -- jitted helpers ------------------------------------------------------
+
+    def _head_loss_and_grads(self, params, h, labels, scale):
+        def scaled(params, h):
+            return self.model.head_loss(params, h, labels) * scale
+        sloss, vjp = jax.vjp(scaled, params, h)
+        dparams, dh = vjp(jnp.ones((), sloss.dtype))
+        return sloss / scale, dparams, dh
+
+    def _block_bwd(self, params, x, dy):
+        _, vjp = jax.vjp(self.model.block_apply, params, x)
+        dparams, dx = vjp(dy)
+        return dparams, dx
+
+    # -- weight streaming ----------------------------------------------------
+
+    def _param_keys(self, unit_name: str):
+        unit, meta = self._units[unit_name]
+        cd = self.policy.adam.compute_np_dtype
+        for key, (shape, _size) in meta.items():
+            yield key, f"{unit.name}/{key}{COMPUTE_SUFFIX}", cd, shape
+
+    def _prefetch_unit(self, unit_name: str) -> None:
+        for _key, skey, cd, shape in self._param_keys(unit_name):
+            self.swapper.prefetch(skey, cd, shape)
+
+    def _unit_in_flight(self, unit_name: str) -> bool:
+        return any(self.swapper.in_flight(skey)
+                   for _key, skey, _cd, _shape in
+                   self._param_keys(unit_name))
+
+    def _fetch_unit(self, unit_name: str) -> dict:
+        """Blocking half of the lifecycle: wait on the reads, H2D, release."""
+        device_params = {}
+        for key, skey, cd, shape in self._param_keys(unit_name):
+            ticket = self.swapper.get(skey, cd, shape)
+            try:
+                host_view = ticket.buf.view(cd, shape)
+                # H2D transfer. copy=True is essential: on the CPU backend
+                # jax may alias host memory, and the pool slot is reused as
+                # soon as it is released (the paper's lifecycle) — an alias
+                # would race with async dispatch.
+                device_params[key] = jnp.array(host_view, copy=True)
+            finally:
+                ticket.release()                          # slot back to pool
+        return device_params
+
+    # -- checkpoint offload --------------------------------------------------
+
+    def _save_checkpoint(self, h) -> tuple:
+        if self.policy.offload_checkpoints:
+            host = np.asarray(h)   # D2H into host memory
+            handle = self.tracker.alloc("activation_checkpoints", host.nbytes,
+                                        tag="block_input")
+            return ("host", host, handle, h.dtype)
+        return ("device", h, None, h.dtype)
+
+    def _restore_checkpoint(self, ckpt):
+        kind, payload, handle, dtype = ckpt
+        if kind == "host":
+            arr = jnp.asarray(payload, dtype=dtype)
+            self.tracker.free(handle)
+            return arr
+        return payload
+
+    def _discard_checkpoint(self, ckpt) -> None:
+        kind, _payload, handle, _dtype = ckpt
+        if kind == "host":
+            self.tracker.free(handle)
+
+    # -- the executor --------------------------------------------------------
+
+    def execute(self, plan: StreamPlan, state: _ExecState) -> _ExecState:
+        """Walk the plan with lookahead-N prefetch; drain on any error."""
+        if self._closed:
+            raise RuntimeError("session is closed")
+        fetch_order = plan.fetch_order
+        fetch_pos = 0       # index of the FetchOp being executed
+        next_prefetch = 0   # first fetch position not yet issued async
+        try:
+            for op in plan.ops:
+                if isinstance(op, FetchOp):
+                    limit = min(fetch_pos + self.lookahead, len(fetch_order))
+                    while next_prefetch < limit:
+                        unit = fetch_order[next_prefetch]
+                        # A unit can appear twice inside the window (forward
+                        # + backward re-fetch).  prefetch() is idempotent per
+                        # key, so issuing the later position while the earlier
+                        # ticket is still in flight would alias onto it and
+                        # the later FetchOp would fall back to a synchronous
+                        # read.  Stall the window here; the position is
+                        # re-tried at the next FetchOp, after the earlier
+                        # fetch has been consumed.
+                        if next_prefetch > fetch_pos and \
+                                self._unit_in_flight(unit):
+                            break
+                        self._prefetch_unit(unit)
+                        next_prefetch += 1
+                    state.live[op.unit] = self._fetch_unit(op.unit)
+                    fetch_pos += 1
+                elif isinstance(op, ComputeOp):
+                    self._compute(op, state)
+                elif isinstance(op, GradWriteOp):
+                    self._write_grads(op.unit, state.grads.pop(op.unit))
+                elif isinstance(op, ReleaseOp):
+                    state.live.pop(op.unit, None)
+        except BaseException:
+            # Error path: nothing may leak.  Outstanding reads are waited
+            # out and their slots returned; host-held checkpoints are freed.
+            for ckpt in state.checkpoints.values():
+                self._discard_checkpoint(ckpt)
+            state.checkpoints.clear()
+            state.live.clear()
+            self.swapper.drain()
+            raise
+        return state
+
+    def _compute(self, op: ComputeOp, state: _ExecState) -> None:
+        params = state.live[op.unit]
+        if op.kind == "embed":
+            state.h = self._jit_embed(params, state.tokens)
+        elif op.kind == "block":
+            if op.save_input:
+                state.checkpoints[op.unit] = self._save_checkpoint(state.h)
+            state.h = self._jit_block(params, state.h)
+        elif op.kind == "head_loss_grad":
+            state.loss, head_grads, state.dh = self._jit_head(
+                params, state.h, state.labels, state.scale)
+            state.grads[op.unit] = head_grads
+        elif op.kind == "head_loss":
+            state.loss = self._jit_head_loss(params, state.h, state.labels)
+        elif op.kind == "head_logits":
+            state.logits = self._jit_head_logits(params, state.h)
+        elif op.kind == "block_bwd":
+            x = self._restore_checkpoint(state.checkpoints.pop(op.unit))
+            state.grads[op.unit], state.dh = self._jit_block_bwd(
+                params, x, state.dh)
+        elif op.kind == "embed_bwd":
+            state.grads[op.unit] = self._jit_embed_bwd(
+                params, state.tokens, state.dh)
+        else:  # validated at plan build; defensive
+            raise ValueError(f"unknown compute kind {op.kind!r}")
+
+    def _write_grads(self, unit_name: str, grads: dict) -> None:
+        """Accumulate device grads into the fp32 host flat buffer."""
+        if self.flat is None:
+            raise RuntimeError("serve-mode session has no gradient buffer")
+        _unit, meta = self._units[unit_name]
+        for key in meta:
+            off, size, shape = self._flat_offsets[f"{unit_name}/{key}"]
+            g = np.asarray(grads[key], dtype=np.float32).reshape(-1)  # D2H
+            self.flat[off:off + size] = g
+
+    # -- workloads -----------------------------------------------------------
+
+    def train_step(self, tokens: np.ndarray, labels: np.ndarray) -> dict:
+        if self.mode != "train":
+            raise RuntimeError("train_step requires a train-mode session")
+        wait0 = self.swapper.stats.wait_seconds
+        hits0 = self.swapper.stats.prefetch_hits
+        grad_scale = self.scaler.scale   # the flat-buffer grads carry this
+        state = self.execute(self.plan("train"),
+                             _ExecState(tokens, labels, grad_scale))
+
+        # ---- overflow check on the flat buffer ----
+        if self.policy.fused_overflow:
+            overflowed = fused_overflow_check(self.flat, tracker=self.tracker)
+        else:
+            overflowed = baseline_overflow_check(self.flat,
+                                                 tracker=self.tracker)
+        apply_step = self.scaler.update(overflowed)
+
+        # ---- host optimizer, subgroup-streamed ----
+        if apply_step:
+            self.optimizer.begin_step()
+            # unscale with the scale the grads were produced under, not the
+            # post-update one — on a growth step they differ by 2x.
+            inv_scale = np.float32(1.0 / grad_scale)
+            for skey, (off, size, shape) in self._flat_offsets.items():
+                grad = self.flat[off:off + size].reshape(shape) * inv_scale
+                self.optimizer.step_subgroup(skey, grad)
+
+        self.metrics = {
+            "loss": float(state.loss),
+            "overflowed": overflowed,
+            "applied": apply_step,
+            "loss_scale": self.scaler.scale,
+            "optimizer_io_bytes": self.optimizer.last_io_bytes,
+            "peak_host_bytes": self.tracker.peak_allocated,
+            "fetch_wait_s": self.swapper.stats.wait_seconds - wait0,
+            "prefetch_hits": self.swapper.stats.prefetch_hits - hits0,
+        }
+        return self.metrics
+
+    def eval_loss(self, tokens: np.ndarray, labels: np.ndarray) -> float:
+        state = self.execute(self.plan("eval"), _ExecState(tokens, labels))
+        return float(state.loss)
+
+    def decode_logits(self, tokens: np.ndarray) -> np.ndarray:
+        """One weight-streamed decode step: logits for every position."""
+        state = self.execute(self.plan("decode"), _ExecState(tokens))
+        return np.asarray(state.logits)
+
+    # -- weights access ------------------------------------------------------
+
+    def master_param(self, unit_name: str, key: str) -> np.ndarray:
+        if self.mode != "train":
+            raise RuntimeError("serve-mode sessions hold no master weights")
+        _unit, meta = self._units[unit_name]
+        shape, _ = meta[key]
+        sd = self.policy.adam.state_np_dtype
+        return self.store.read_new(f"{unit_name}/{key}.master", sd, shape)

@@ -1,0 +1,230 @@
+"""StreamPlan: a declarative schedule IR for SSD-offloaded execution.
+
+The paper's pipeline (§IV-A, Fig. 5/6) is a *lifecycle* — pool-slot checkout
+→ async SSD read → H2D → compute → release — that the seed code hard-coded
+inside ``OffloadedTrainer.train_step``.  This module lifts that lifecycle
+into data: a :class:`StreamPlan` is a linear sequence of four op kinds
+
+* :class:`FetchOp`    — stream one unit's compute weights SSD→pool→device,
+* :class:`ComputeOp`  — run one jitted stage against the resident weights,
+* :class:`GradWriteOp`— spill the stage's parameter grads into the fp32
+                        host flat buffer (ZeRO-Infinity's partition buffer),
+* :class:`ReleaseOp`  — drop the unit's device weights,
+
+compiled once per workload from an ``OffloadableModel``:
+
+* :func:`compile_train`  — forward + head loss/cotangent + reverse-streamed
+                           backward with offloaded gradient checkpointing,
+* :func:`compile_eval`   — forward + head loss only,
+* :func:`compile_decode` — forward + head logits (weight-streamed serving).
+
+Because the schedule is explicit, the executor (:class:`~repro.core.session.
+OffloadSession`) can *look ahead*: while block *i* computes, the SSD reads
+for blocks *i+1 … i+N−1* are already in flight, with N bounded by
+``policy.inflight_blocks`` — the prefetch depth that sizes the buffer pool
+per §IV-B but that the seed engine never exploited.  SSDTrain
+(arXiv 2408.10013) and 10Cache (arXiv 2511.14124) structure offloading the
+same way: an explicit prefetch/eviction schedule rather than inline calls.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+# ComputeOp stage kinds understood by the session executor.
+COMPUTE_KINDS = frozenset({
+    "embed",         # h = embed_apply(params, tokens)
+    "block",         # h = block_apply(params, h)   [save_input => checkpoint]
+    "head_loss_grad",  # loss, head grads, dh = vjp(head_loss)
+    "head_loss",     # loss = head_loss(params, h, labels)        (eval)
+    "head_logits",   # logits = head_logits(params, h)            (decode)
+    "block_bwd",     # dparams, dh = vjp(block_apply)(restored checkpoint)
+    "embed_bwd",     # dembed = vjp(embed_apply)(tokens cotangent)
+})
+
+_GRAD_KINDS = frozenset({"head_loss_grad", "block_bwd", "embed_bwd"})
+
+
+@dataclass(frozen=True)
+class FetchOp:
+    """Check pool slots out, read the unit's weights from SSD, put on device."""
+
+    unit: str
+
+
+@dataclass(frozen=True)
+class ComputeOp:
+    """Run one jitted stage; ``save_input`` checkpoints the stage's
+    activation input, which the unit's ``block_bwd`` stage restores."""
+
+    unit: str
+    kind: str
+    save_input: bool = False
+
+
+@dataclass(frozen=True)
+class GradWriteOp:
+    """D2H-spill the unit's parameter grads into the fp32 flat buffer."""
+
+    unit: str
+
+
+@dataclass(frozen=True)
+class ReleaseOp:
+    """Drop the unit's device weights (its pool slots returned at H2D time)."""
+
+    unit: str
+
+
+Op = FetchOp | ComputeOp | GradWriteOp | ReleaseOp
+
+
+class PlanError(ValueError):
+    """A StreamPlan violates the checkout→compute→release lifecycle."""
+
+
+@dataclass(frozen=True)
+class StreamPlan:
+    """A validated linear schedule over a model's offload units."""
+
+    name: str
+    ops: tuple[Op, ...]
+
+    def __post_init__(self):
+        self.validate()
+
+    def __len__(self) -> int:
+        return len(self.ops)
+
+    @property
+    def fetch_order(self) -> tuple[str, ...]:
+        """Unit names in SSD-read order — the lookahead window walks this."""
+        return tuple(op.unit for op in self.ops if isinstance(op, FetchOp))
+
+    def validate(self) -> None:
+        """Enforce the §IV-A lifecycle statically.
+
+        * a unit's weights must be resident (fetched, not yet released)
+          for every ComputeOp that names it,
+        * no double fetch while resident, no release of a non-resident unit,
+        * every fetch is eventually released (pool capacity is returned),
+        * GradWriteOp must follow a grad-producing ComputeOp for its unit,
+        * ``block_bwd`` consumes a checkpoint a prior ``save_input`` op
+          saved for its unit, and every saved checkpoint is consumed
+          (host checkpoint memory is returned).
+        """
+        resident: set[str] = set()
+        pending_grads: set[str] = set()
+        saved_inputs: set[str] = set()
+        for i, op in enumerate(self.ops):
+            where = f"{self.name}[{i}]"
+            if isinstance(op, FetchOp):
+                if op.unit in resident:
+                    raise PlanError(f"{where}: fetch of already-resident "
+                                    f"unit {op.unit!r}")
+                resident.add(op.unit)
+            elif isinstance(op, ComputeOp):
+                if op.kind not in COMPUTE_KINDS:
+                    raise PlanError(f"{where}: unknown compute kind "
+                                    f"{op.kind!r}")
+                if op.unit not in resident:
+                    raise PlanError(f"{where}: compute on non-resident unit "
+                                    f"{op.unit!r}")
+                if op.save_input:
+                    if op.unit in saved_inputs:
+                        raise PlanError(f"{where}: {op.unit!r} already has a "
+                                        f"saved checkpoint")
+                    saved_inputs.add(op.unit)
+                if op.kind == "block_bwd":
+                    if op.unit not in saved_inputs:
+                        raise PlanError(f"{where}: block_bwd for {op.unit!r} "
+                                        f"with no saved checkpoint")
+                    saved_inputs.discard(op.unit)
+                if op.kind in _GRAD_KINDS:
+                    pending_grads.add(op.unit)
+            elif isinstance(op, GradWriteOp):
+                if op.unit not in pending_grads:
+                    raise PlanError(f"{where}: grad write for {op.unit!r} "
+                                    f"with no grads produced")
+                pending_grads.discard(op.unit)
+            elif isinstance(op, ReleaseOp):
+                if op.unit not in resident:
+                    raise PlanError(f"{where}: release of non-resident unit "
+                                    f"{op.unit!r}")
+                resident.discard(op.unit)
+            else:
+                raise PlanError(f"{where}: unknown op {op!r}")
+        if resident:
+            raise PlanError(f"{self.name}: units never released: "
+                            f"{sorted(resident)}")
+        if pending_grads:
+            raise PlanError(f"{self.name}: grads never written: "
+                            f"{sorted(pending_grads)}")
+        if saved_inputs:
+            raise PlanError(f"{self.name}: checkpoints never restored: "
+                            f"{sorted(saved_inputs)}")
+
+
+# ---------------------------------------------------------------------------
+# Compilers: OffloadableModel -> StreamPlan
+# ---------------------------------------------------------------------------
+
+def _unit_names(model) -> tuple[str, list[str], str]:
+    """(embed, [blocks...], head) unit names, seed layout order."""
+    names = [u.name for u in model.units]
+    if len(names) < 2:
+        raise PlanError("model needs at least an embedding and a head unit")
+    return names[0], names[1:-1], names[-1]
+
+
+def _forward_ops(model, *, checkpoint: bool) -> list[Op]:
+    embed, blocks, _head = _unit_names(model)
+    ops: list[Op] = [FetchOp(embed), ComputeOp(embed, "embed"),
+                     ReleaseOp(embed)]
+    for b in blocks:
+        ops += [FetchOp(b),
+                ComputeOp(b, "block", save_input=checkpoint),
+                ReleaseOp(b)]
+    return ops
+
+
+def compile_train(model) -> StreamPlan:
+    """Forward (checkpointing block inputs) + loss/cotangent + reverse
+    backward + embedding backward — the seed ``train_step`` streaming order,
+    now as data."""
+    embed, blocks, head = _unit_names(model)
+    ops = _forward_ops(model, checkpoint=True)
+    ops += [FetchOp(head), ComputeOp(head, "head_loss_grad"),
+            ReleaseOp(head), GradWriteOp(head)]
+    for b in reversed(blocks):
+        ops += [FetchOp(b), ComputeOp(b, "block_bwd"),
+                ReleaseOp(b), GradWriteOp(b)]
+    ops += [FetchOp(embed), ComputeOp(embed, "embed_bwd"),
+            ReleaseOp(embed), GradWriteOp(embed)]
+    return StreamPlan("train", tuple(ops))
+
+
+def compile_eval(model) -> StreamPlan:
+    """Forward + head loss; no checkpointing, no grads."""
+    _embed, _blocks, head = _unit_names(model)
+    ops = _forward_ops(model, checkpoint=False)
+    ops += [FetchOp(head), ComputeOp(head, "head_loss"), ReleaseOp(head)]
+    return StreamPlan("eval", tuple(ops))
+
+
+def compile_decode(model) -> StreamPlan:
+    """Forward + head logits: one weight-streamed decode step (serving)."""
+    if getattr(model, "head_logits", None) is None:
+        raise PlanError("model has no head_logits apply; decode plans need "
+                        "one (see model_adapter.make_offloadable_lm)")
+    _embed, _blocks, head = _unit_names(model)
+    ops = _forward_ops(model, checkpoint=False)
+    ops += [FetchOp(head), ComputeOp(head, "head_logits"), ReleaseOp(head)]
+    return StreamPlan("decode", tuple(ops))
+
+
+PLAN_COMPILERS = {
+    "train": compile_train,
+    "eval": compile_eval,
+    "decode": compile_decode,
+}

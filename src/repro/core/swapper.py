@@ -16,6 +16,7 @@ in §IV-A.
 from __future__ import annotations
 
 import threading
+import time
 from concurrent.futures import Future
 from dataclasses import dataclass
 
@@ -23,6 +24,29 @@ import numpy as np
 
 from .buffer_pool import BufferPoolBase, PoolBuffer
 from .nvme import TensorStore
+
+
+@dataclass
+class SwapStats:
+    """Prefetch-pipeline effectiveness counters (paper Fig. 5/6 overlap).
+
+    ``wait_seconds`` is the time :meth:`ParameterSwapper.get` spent blocked —
+    pool-slot backpressure plus outstanding SSD reads.  With lookahead
+    pipelining most reads complete under compute, so waits shrink,
+    ``prefetch_hits`` approaches ``n_gets``, and ``sync_fallbacks`` stays 0.
+    """
+
+    n_prefetches: int = 0     # async reads actually issued
+    n_gets: int = 0
+    prefetch_hits: int = 0    # read had already completed when get() asked
+    sync_fallbacks: int = 0   # get() found nothing in flight: synchronous read
+    wait_seconds: float = 0.0
+
+    def snapshot(self) -> dict:
+        return {"n_prefetches": self.n_prefetches, "n_gets": self.n_gets,
+                "prefetch_hits": self.prefetch_hits,
+                "sync_fallbacks": self.sync_fallbacks,
+                "wait_seconds": self.wait_seconds}
 
 
 @dataclass
@@ -49,6 +73,7 @@ class ParameterSwapper:
         self.store = store
         self.pool = pool
         self.class_of = class_of or {}
+        self.stats = SwapStats()
         self._inflight: dict[str, FetchTicket] = {}
         self._lock = threading.Lock()
 
@@ -75,20 +100,38 @@ class ParameterSwapper:
         ticket = FetchTicket(key, buf, future, dtype, shape)
         with self._lock:
             self._inflight[key] = ticket
+            self.stats.n_prefetches += 1
         return ticket
+
+    def in_flight(self, key: str) -> bool:
+        """True if an issued read for ``key`` has not been consumed yet."""
+        with self._lock:
+            return key in self._inflight
 
     def get(self, key: str, dtype, shape, *,
             class_name: str | None = None) -> FetchTicket:
         """Fetch (prefetched or not) and wait for the data to be resident."""
+        t0 = time.perf_counter()
         with self._lock:
             ticket = self._inflight.pop(key, None)
+        fallback = ticket is None
+        hit = ticket is not None and ticket.future.done()
         if ticket is None:
             ticket = self.prefetch(key, dtype, shape, class_name=class_name)
             with self._lock:
                 self._inflight.pop(key, None)
-        else:
-            pass
-        ticket.wait()
+        try:
+            ticket.wait()
+        except BaseException:
+            # The ticket left _inflight above, so drain() can no longer see
+            # it — release the pool slot here or it leaks for the session.
+            ticket.release()
+            raise
+        with self._lock:
+            self.stats.n_gets += 1
+            self.stats.prefetch_hits += int(hit)
+            self.stats.sync_fallbacks += int(fallback)
+            self.stats.wait_seconds += time.perf_counter() - t0
         return ticket
 
     def drain(self) -> None:
@@ -96,8 +139,18 @@ class ParameterSwapper:
         with self._lock:
             tickets = list(self._inflight.values())
             self._inflight.clear()
+        interrupt = None
         for t in tickets:
             try:
                 t.wait()
+            except (KeyboardInterrupt, SystemExit) as e:
+                interrupt = e   # finish releasing every slot first
+            except BaseException:
+                # the data is being discarded; a failed read must neither
+                # keep later slots checked out nor mask the error that
+                # brought us here
+                pass
             finally:
                 t.release()
+        if interrupt is not None:
+            raise interrupt

@@ -1,4 +1,4 @@
-"""Distributed training launcher (pjit path).
+"""Distributed training launcher (pjit path + SSD-offloaded path).
 
 On real hardware this drives the (data, model) mesh via the jitted
 train_step, with the MemAscend host machinery (offloaded optimizer,
@@ -6,14 +6,19 @@ direct-NVMe state store, fused overflow screen) wrapped around it.  In this
 container it runs reduced configs on the 1x1 host mesh — the same code
 path, one device.
 
+``--offload POLICY`` instead runs the arch through the SSD-offloaded
+OffloadSession (StreamPlan schedules, lookahead prefetch, host Adam on
+NVMe-resident state), with the policy selected by registry name.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --steps 20 \
-      [--reduced] [--batch 4] [--seq 128]
+      [--reduced] [--batch 4] [--seq 128] [--offload memascend]
 """
 
 from __future__ import annotations
 
 import argparse
+import tempfile
 import time
 
 import jax
@@ -22,10 +27,38 @@ import numpy as np
 
 from repro.configs import ARCHS, get_config
 from repro.core.loss_scale import DynamicLossScaler
+from repro.core.offload_engine import OffloadPolicy
+from repro.core.session import OffloadSession
 from repro.data import DataLoader, SyntheticTextDataset
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import build
 from repro.train.step import build_train_step
+
+
+def run_offloaded(cfg, args) -> None:
+    """The SSD-offloaded path: registry policy + OffloadSession."""
+    from repro.core.model_adapter import make_offloadable_lm
+    model = make_offloadable_lm(cfg, jax.random.PRNGKey(0))
+    b, s = args.batch, args.seq
+    dl = DataLoader(SyntheticTextDataset(vocab=cfg.vocab, seed=0),
+                    batch=b, seq_len=s)
+    with tempfile.TemporaryDirectory(prefix="launch_offload_") as root:
+        policy = (OffloadPolicy.preset(args.offload)
+                  .with_store(root).with_adam(lr=args.lr).build())
+        with OffloadSession(model, policy) as sess:
+            print(f"offload policy {policy.name}: "
+                  f"{sess.total_params / 1e6:.1f}M params, "
+                  f"lookahead {sess.lookahead}")
+            t0 = time.time()
+            for i in range(1, args.steps + 1):
+                hb = dl.next_batch()
+                m = sess.train_step(hb["tokens"], hb["labels"])
+                if i % 5 == 0 or i == 1:
+                    tput = i * b * s / (time.time() - t0)
+                    print(f"step {i:4d} loss {m['loss']:.4f} "
+                          f"fetch-wait {m['fetch_wait_s'] * 1e3:.0f}ms "
+                          f"{tput:.0f} tok/s")
+    print("offloaded train loop done")
 
 
 def main() -> None:
@@ -38,11 +71,19 @@ def main() -> None:
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--production-mesh", action="store_true",
                     help="use the 16x16 mesh (requires 256 devices)")
+    ap.add_argument("--offload", default=None,
+                    choices=OffloadPolicy.names(),
+                    help="run SSD-offloaded via this registry policy "
+                         "instead of the pjit path")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+
+    if args.offload:
+        run_offloaded(cfg, args)
+        return
     impl = build(cfg)
     mesh = (make_production_mesh() if args.production_mesh
             else make_host_mesh())

@@ -1,3 +1,4 @@
 from .decode import build_serve_step
+from .offloaded import OffloadedDecoder
 
-__all__ = ["build_serve_step"]
+__all__ = ["build_serve_step", "OffloadedDecoder"]

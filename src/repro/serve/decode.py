@@ -8,6 +8,8 @@ one new token against a KV cache / recurrent state of ``seq_len`` context
 
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -36,7 +38,7 @@ def build_serve_step(impl: ModelImpl, mesh, shape: InputShape,
     cshard = shd.cache_shardings(cfg, cache_specs, mesh)
     dp = shd.batch_axes(mesh)
     b = shape.global_batch
-    tok_spec = P(dp, None) if b % __import__("math").prod(
+    tok_spec = P(dp, None) if b % math.prod(
         mesh.shape[a] for a in dp) == 0 else P(None, None)
     tshard = NamedSharding(mesh, tok_spec)
     scalar = NamedSharding(mesh, P())

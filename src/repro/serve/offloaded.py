@@ -1,0 +1,67 @@
+"""Weight-streamed offloaded decode: serving through the offload session.
+
+Opens the paper's pipeline to a new workload: generation on a host whose
+DRAM cannot hold the model.  Weights stay on SSD; every decode step streams
+them block-by-block through the same pool-slot → async-read → H2D → compute
+→ release lifecycle as training, executed from a ``decode`` StreamPlan with
+lookahead pipelining (block *i+1*'s SSD read overlaps block *i*'s compute).
+
+This is throughput-oriented batch decoding: each emitted token re-runs the
+full prefix through the streamed stack (no KV cache — per-layer caches
+would pin host memory the offload budget doesn't have; a spill-able KV
+cache is a ROADMAP follow-on).  The jitted serve path with device-resident
+weights and donated caches lives in :mod:`repro.serve.decode`; this module
+is its SSD-offloaded counterpart.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.session import OffloadSession
+
+
+class OffloadedDecoder:
+    """Greedy batch decoding over an SSD-resident model.
+
+    Wraps a serve-mode :class:`OffloadSession` (no optimizer state on the
+    store, no gradient flat buffer) unless an open session is handed in.
+    Context manager; closing releases the pool arena and store.
+    """
+
+    def __init__(self, model, policy, *, session: OffloadSession | None = None):
+        self.session = session or OffloadSession(model, policy, mode="serve")
+        self._owns_session = session is None
+
+    def __enter__(self) -> "OffloadedDecoder":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+    def close(self) -> None:
+        if self._owns_session:
+            self.session.close()
+
+    def step_logits(self, tokens: np.ndarray) -> np.ndarray:
+        """Next-token logits for a (batch, time) prompt — one streamed pass."""
+        logits = self.session.decode_logits(tokens)
+        return logits[:, -1, :]
+
+    def generate(self, prompts: np.ndarray, new_tokens: int) -> np.ndarray:
+        """Greedy-decode ``new_tokens`` per request; returns (batch, new)."""
+        tokens = np.asarray(prompts, dtype=np.int32)
+        if tokens.ndim != 2:
+            raise ValueError(f"prompts must be (batch, time), got "
+                             f"{tokens.shape}")
+        out = []
+        for _ in range(new_tokens):
+            nxt = np.argmax(self.step_logits(tokens), axis=-1).astype(np.int32)
+            out.append(nxt)
+            tokens = np.concatenate([tokens, nxt[:, None]], axis=1)
+        return np.stack(out, axis=1)
+
+    @property
+    def fetch_stats(self) -> dict:
+        """Swapper counters — how well decode hides SSD latency."""
+        return self.session.swapper.stats.snapshot()

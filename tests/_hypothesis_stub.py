@@ -1,0 +1,178 @@
+"""Minimal in-repo fallback for ``hypothesis`` (loaded by conftest.py only
+when the real package is absent).
+
+The container this repo targets has no network access, so dev-only deps may
+be missing.  The property tests in this suite use a small slice of the
+hypothesis API — ``given``, ``settings``, ``HealthCheck`` and the
+``integers`` / ``floats`` / ``lists`` / ``tuples`` / ``sampled_from``
+strategies — which this stub reimplements as deterministic seeded random
+sampling (boundary-biased, no shrinking).  With real hypothesis installed
+(see requirements-dev.txt) the stub is never imported.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import types
+import zlib
+
+__version__ = "0.0.0-repro-stub"
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class HealthCheck:
+    """Name-compatible sentinel namespace; the stub has no health checks."""
+
+    function_scoped_fixture = "function_scoped_fixture"
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+
+
+class _Strategy:
+    """A draw function ``rng -> value`` with hypothesis-like combinators."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred):
+        def draw(rng):
+            for _ in range(1000):
+                value = self._draw(rng)
+                if pred(value):
+                    return value
+            raise ValueError("stub strategy filtered out every draw")
+        return _Strategy(draw)
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+
+
+def _strategy(fn):
+    setattr(strategies, fn.__name__, fn)
+    return fn
+
+
+@_strategy
+def integers(min_value=None, max_value=None) -> _Strategy:
+    lo = -(2 ** 63) if min_value is None else int(min_value)
+    hi = (2 ** 63) - 1 if max_value is None else int(max_value)
+    edges = sorted({lo, hi, min(max(0, lo), hi), min(max(1, lo), hi)})
+
+    def draw(rng):
+        r = rng.random()
+        if r < 0.2:                       # boundary bias, like hypothesis
+            return rng.choice(edges)
+        if r < 0.5 and hi - lo > 4096:    # log-uniform for huge ranges
+            span = hi - lo
+            return lo + min(span, int(span ** rng.random()))
+        return rng.randint(lo, hi)
+    return _Strategy(draw)
+
+
+@_strategy
+def floats(min_value=None, max_value=None, **_kw) -> _Strategy:
+    lo = -1e9 if min_value is None else float(min_value)
+    hi = 1e9 if max_value is None else float(max_value)
+
+    def draw(rng):
+        if rng.random() < 0.2:
+            return rng.choice((lo, hi))
+        return lo + (hi - lo) * rng.random()
+    return _Strategy(draw)
+
+
+@_strategy
+def sampled_from(elements) -> _Strategy:
+    pool = list(elements)
+    return _Strategy(lambda rng: rng.choice(pool))
+
+
+@_strategy
+def lists(elements: _Strategy, *, min_size: int = 0,
+          max_size: int | None = None, **_kw) -> _Strategy:
+    cap = (min_size + 8) if max_size is None else max_size
+
+    def draw(rng):
+        n = rng.randint(min_size, cap)
+        return [elements.draw(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+@_strategy
+def tuples(*parts: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(p.draw(rng) for p in parts))
+
+
+@_strategy
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+@_strategy
+def just(value) -> _Strategy:
+    return _Strategy(lambda rng: value)
+
+
+@_strategy
+def one_of(*options: _Strategy) -> _Strategy:
+    pool = list(options)
+    return _Strategy(lambda rng: rng.choice(pool).draw(rng))
+
+
+class settings:
+    """Decorator; only ``max_examples`` is honoured by the stub."""
+
+    def __init__(self, max_examples: int | None = None, deadline=None,
+                 suppress_health_check=(), **_kw):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        if self.max_examples is not None:
+            fn._stub_max_examples = self.max_examples
+        return fn
+
+
+def given(*arg_strategies: _Strategy, **kw_strategies: _Strategy):
+    """Run the test over ``max_examples`` deterministic random draws.
+
+    Positional strategies bind to the *rightmost* parameters of the test
+    function (hypothesis semantics, so pytest fixtures stay leftmost); the
+    wrapper's signature drops strategy-bound parameters so pytest injects
+    only real fixtures.
+    """
+
+    def deco(fn):
+        sig = inspect.signature(fn)
+        names = list(sig.parameters)
+        bound = dict(zip(names[len(names) - len(arg_strategies):],
+                         arg_strategies))
+        bound.update(kw_strategies)
+        unknown = set(bound) - set(names)
+        if unknown:
+            raise TypeError(f"@given strategies {sorted(unknown)} do not "
+                            f"match parameters of {fn.__name__}")
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            import random
+            n = getattr(wrapper, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                drawn = {name: strat.draw(rng)
+                         for name, strat in bound.items()}
+                fn(*args, **kwargs, **drawn)
+
+        wrapper.__signature__ = sig.replace(
+            parameters=[sig.parameters[p] for p in names if p not in bound])
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)  # marker
+        return wrapper
+    return deco

@@ -1,10 +1,26 @@
+import importlib.util
 import os
+import sys
 
 # Smoke tests and benches must see exactly ONE device; the 512-device flag
 # belongs to the dry-run process only (see launch/dryrun.py).
 assert "--xla_force_host_platform_device_count" not in \
     os.environ.get("XLA_FLAGS", ""), \
     "do not set the dry-run XLA_FLAGS globally"
+
+# Property tests use hypothesis when available (requirements-dev.txt); in
+# hermetic containers fall back to the deterministic in-repo stub so the
+# suite still collects and runs (see tests/_hypothesis_stub.py).
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis",
+        os.path.join(os.path.dirname(__file__), "_hypothesis_stub.py"))
+    _stub = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_stub)
+    sys.modules["hypothesis"] = _stub
+    sys.modules["hypothesis.strategies"] = _stub.strategies
 
 import numpy as np
 import pytest

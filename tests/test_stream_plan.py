@@ -1,0 +1,109 @@
+"""StreamPlan IR: compilers produce lifecycle-valid schedules; the
+validator rejects anything violating checkout→compute→release (§IV-A)."""
+
+import jax
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import (ComputeOp, FetchOp, GradWriteOp, PlanError, ReleaseOp,
+                        StreamPlan, compile_decode, compile_eval,
+                        compile_train)
+from repro.core.model_adapter import make_offloadable_lm
+
+CFG = ModelConfig(name="tiny", family="dense", n_layers=3, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab=256)
+
+
+@pytest.fixture(scope="module")
+def model():
+    return make_offloadable_lm(CFG, jax.random.PRNGKey(0))
+
+
+def test_train_plan_structure(model):
+    plan = compile_train(model)
+    blocks = [f"block_{i:03d}" for i in range(CFG.n_layers)]
+    # forward fetch order, then head, then reverse blocks, then embed again
+    assert plan.fetch_order == tuple(
+        ["embed"] + blocks + ["head"] + blocks[::-1] + ["embed"])
+    # every unit's grads are written exactly once
+    writes = [op.unit for op in plan.ops if isinstance(op, GradWriteOp)]
+    assert sorted(writes) == sorted(["embed", "head"] + blocks)
+    # forward blocks checkpoint their inputs; backward blocks restore them
+    fwd = [op for op in plan.ops
+           if isinstance(op, ComputeOp) and op.kind == "block"]
+    bwd = [op for op in plan.ops
+           if isinstance(op, ComputeOp) and op.kind == "block_bwd"]
+    assert all(op.save_input for op in fwd)
+    assert len(fwd) == len(bwd) == CFG.n_layers
+
+
+def test_eval_and_decode_plans(model):
+    ev = compile_eval(model)
+    assert ev.fetch_order[0] == "embed" and ev.fetch_order[-1] == "head"
+    assert not any(isinstance(op, GradWriteOp) for op in ev.ops)
+    assert not any(isinstance(op, ComputeOp) and op.save_input
+                   for op in ev.ops)
+    dec = compile_decode(model)
+    assert dec.fetch_order == ev.fetch_order
+    kinds = [op.kind for op in dec.ops if isinstance(op, ComputeOp)]
+    assert kinds[-1] == "head_logits"
+
+
+def test_decode_requires_head_logits(model):
+    import dataclasses
+    headless = dataclasses.replace(model, head_logits=None)
+    with pytest.raises(PlanError, match="head_logits"):
+        compile_decode(headless)
+
+
+def test_validator_compute_before_fetch():
+    with pytest.raises(PlanError, match="non-resident"):
+        StreamPlan("bad", (ComputeOp("u", "block"),))
+
+
+def test_validator_double_fetch():
+    with pytest.raises(PlanError, match="already-resident"):
+        StreamPlan("bad", (FetchOp("u"), FetchOp("u")))
+
+
+def test_validator_leaked_fetch():
+    with pytest.raises(PlanError, match="never released"):
+        StreamPlan("bad", (FetchOp("u"),))
+
+
+def test_validator_release_non_resident():
+    with pytest.raises(PlanError, match="release of non-resident"):
+        StreamPlan("bad", (ReleaseOp("u"),))
+
+
+def test_validator_grad_write_without_grads():
+    with pytest.raises(PlanError, match="no grads produced"):
+        StreamPlan("bad", (FetchOp("u"), ComputeOp("u", "block"),
+                           ReleaseOp("u"), GradWriteOp("u")))
+
+
+def test_validator_bwd_without_checkpoint():
+    with pytest.raises(PlanError, match="no saved checkpoint"):
+        StreamPlan("bad", (FetchOp("u"), ComputeOp("u", "block_bwd"),
+                           ReleaseOp("u"), GradWriteOp("u")))
+
+
+def test_validator_leaked_checkpoint():
+    with pytest.raises(PlanError, match="never restored"):
+        StreamPlan("bad", (FetchOp("u"),
+                           ComputeOp("u", "block", save_input=True),
+                           ReleaseOp("u")))
+
+
+def test_validator_double_checkpoint():
+    with pytest.raises(PlanError, match="already has a saved checkpoint"):
+        StreamPlan("bad", (FetchOp("u"),
+                           ComputeOp("u", "block", save_input=True),
+                           ComputeOp("u", "block", save_input=True),
+                           ReleaseOp("u")))
+
+
+def test_validator_unknown_kind():
+    with pytest.raises(PlanError, match="unknown compute kind"):
+        StreamPlan("bad", (FetchOp("u"), ComputeOp("u", "frobnicate"),
+                           ReleaseOp("u")))

@@ -54,6 +54,41 @@ def test_prefetch_idempotent(setup):
     t.release()
 
 
+def test_get_releases_slot_when_read_fails(setup):
+    """A read that fails after get() popped the ticket is invisible to
+    drain(); get() itself must return the pool slot (regression: the slot
+    leaked for the session lifetime)."""
+    store, pool, swapper, tensors = setup
+    with pytest.raises(KeyError, match="not in location"):
+        swapper.get("nope", np.float32, (4096,), class_name="w")
+    assert pool.in_use_payload == 0
+
+
+def test_stats_hit_fallback_discrimination(setup):
+    """prefetch_hits counts reads already complete at get() time; a get
+    with nothing in flight is a sync_fallback — the two must discriminate
+    pipelined from synchronous access."""
+    store, pool, swapper, tensors = setup
+    t = swapper.prefetch("t0", np.float32, (4096,))
+    t.future.result()                      # read fully landed before get
+    swapper.get("t0", np.float32, (4096,)).release()
+    assert swapper.stats.prefetch_hits == 1
+    assert swapper.stats.sync_fallbacks == 0
+    swapper.get("t1", np.float32, (4096,)).release()   # never prefetched
+    assert swapper.stats.prefetch_hits == 1
+    assert swapper.stats.sync_fallbacks == 1
+
+
+def test_drain_releases_all_slots_despite_failed_read(setup):
+    """drain() must return every in-flight slot even when one read failed —
+    it runs on error paths where stopping early would leak the rest."""
+    store, pool, swapper, tensors = setup
+    swapper.prefetch("nope", np.float32, (4096,), class_name="w")
+    swapper.prefetch("t0", np.float32, (4096,))
+    swapper.drain()      # must not raise, must not stop at the failed read
+    assert pool.in_use_payload == 0
+
+
 def test_pipeline_over_all_tensors(setup):
     """Stream 6 tensors through a 4-slot pool with prefetch depth 2."""
     store, pool, swapper, tensors = setup
