@@ -1,0 +1,328 @@
+"""Cached vs uncached offloaded decode: the O(T) serving ablation.
+
+Three configurations of the same model, prompts, and greedy loop:
+
+* ``uncached``     — PR-1 behaviour: every emitted token re-runs the full
+                     prefix (O(T^2) compute) and retraces the jitted stages
+                     as the (batch, time) shape grows.
+* ``cached``       — spill-able KV cache, every layer host-resident.
+* ``cached_spill`` — KV residency budget of 2 layers: cold layers round-trip
+                     through the SSD store, prefetched under compute.
+
+Reports tokens/s, retrace counts (cold compile count and warm retraces —
+the acceptance bar is zero warm retraces per bucket), peak host bytes,
+fetch-wait seconds, and a teacher-forced equivalence audit (cached logits
+within ~8 row-max bf16 ULPs of uncached at every step; greedy flips only
+at provable near-ties; spill round-trips token-exact), then writes
+``BENCH_decode.json`` for CI's ``benchmarks/check_regression.py`` gate
+(committed baseline in ``benchmarks/baselines/decode.json``).
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import DecodeSpec, OffloadPolicy
+from repro.core.model_adapter import make_offloadable_lm
+from repro.serve import OffloadedDecoder
+
+from .common import emit
+
+CFG = ModelConfig(
+    name="bench-20m",
+    family="dense",
+    n_layers=4,
+    d_model=256,
+    n_heads=8,
+    n_kv_heads=4,
+    d_ff=1024,
+    vocab=8192,
+)
+BATCH, PROMPT_LEN, NEW_TOKENS = 4, 32, 48
+BUCKET, MAX_SEQ = 32, 96
+OUT_PATH = "BENCH_decode.json"
+
+
+def _decode_compiles(session) -> int:
+    """Trace count across whichever stages this path jits."""
+    cached = session.decode_compiles()
+    uncached = session._jit_block._cache_size()
+    return cached + uncached
+
+
+def _prompts() -> np.ndarray:
+    return np.random.default_rng(0).integers(
+        3, CFG.vocab, size=(BATCH, PROMPT_LEN), dtype=np.int32
+    )
+
+
+def _run(root: str, spec: DecodeSpec | None) -> dict:
+    """One configuration: warmup generate, then a timed warm generate."""
+    model = make_offloadable_lm(CFG, jax.random.PRNGKey(0))
+    policy = OffloadPolicy.preset("memascend").with_store(root).build()
+    prompts = _prompts()
+    with OffloadedDecoder(model, policy, decode=spec) as dec:
+        session = dec.session
+        dec.generate(prompts, NEW_TOKENS)  # cold: compiles every stage
+        cold_compiles = _decode_compiles(session)
+        wait0 = session.swapper.stats.wait_seconds
+        t0 = time.perf_counter()
+        tokens = dec.generate(prompts, NEW_TOKENS)
+        dt = time.perf_counter() - t0
+        early, late = _per_token_profile(dec, prompts, spec)
+        result = {
+            "tokens": tokens.tolist(),   # full sequences: equivalence gate
+            "tokens_per_s": BATCH * NEW_TOKENS / dt,
+            "compiles_cold": cold_compiles,
+            "retraces_warm": _decode_compiles(session) - cold_compiles,
+            "peak_host_bytes": session.tracker.peak_allocated,
+            "fetch_wait_s": session.swapper.stats.wait_seconds - wait0,
+            "step_s_early": early,
+            "step_s_late": late,
+            "kv": dec.kv_stats,
+        }
+    return result
+
+
+def _uncached_reference(root: str, prompts) -> tuple[np.ndarray, list]:
+    """Greedy tokens + per-step logits from the uncached full-prefix path."""
+    model = make_offloadable_lm(CFG, jax.random.PRNGKey(0))
+    policy = OffloadPolicy.preset("memascend").with_store(root).build()
+    ctx = prompts
+    logits_seq = []
+    with OffloadedDecoder(model, policy) as dec:
+        for _ in range(NEW_TOKENS):
+            logits = dec.step_logits(ctx)
+            logits_seq.append(np.asarray(logits, np.float32))
+            nxt = np.argmax(logits, axis=-1).astype(np.int32)
+            ctx = np.concatenate([ctx, nxt[:, None]], axis=1)
+    return ctx[:, prompts.shape[1] :], logits_seq
+
+
+# Per-step tolerance: ~8 bf16 ULPs of each row's max logit.  The cached and
+# uncached paths run the same math through different matmul shapes, so XLA's
+# reduction tiling wobbles the last significand bit and four layers of bf16
+# compound it to a few ULPs (measured ~2e-2 on this model).  Real cache bugs
+# (stale/misplaced K/V, wrong masking) shift logits at row-max scale, an
+# order of magnitude past this bound.
+ULP_TOL = 8.0 * 2.0**-8
+
+
+def _cached_equivalence(root: str, spec: DecodeSpec, prompts, ref_logits) -> dict:
+    """Teacher-forced per-step check: cached logits must match the uncached
+    reference within ULP_TOL, and any greedy argmax flip must be a provable
+    near-tie (top tokens within tolerance in the reference logits)."""
+    model = make_offloadable_lm(CFG, jax.random.PRNGKey(0))
+    policy = OffloadPolicy.preset("memascend").with_store(root).build()
+    max_rel = 0.0
+    agree = flips_beyond_tol = 0
+    with OffloadedDecoder(model, policy, decode=spec) as dec:
+        session = dec.session
+        kv = session.open_kv_cache()
+        try:
+            logits = session.prefill(kv, prompts)
+            for t, ref in enumerate(ref_logits):
+                got = np.asarray(logits, np.float32)
+                # row-scaled: ULPs of the max logit, the unit greedy
+                # decode actually compares in
+                scale = np.maximum(np.abs(ref).max(-1, keepdims=True), 1.0)
+                rel = np.abs(got - ref) / scale
+                max_rel = max(max_rel, float(rel.max()))
+                if (rel > ULP_TOL).any():
+                    raise AssertionError(
+                        f"cached decode diverged from uncached at step {t}: "
+                        f"max row-scaled logit diff {rel.max():.3e} > "
+                        f"{ULP_TOL:.3e}"
+                    )
+                am_got, am_ref = got.argmax(-1), ref.argmax(-1)
+                agree += int((am_got == am_ref).sum())
+                for b in np.nonzero(am_got != am_ref)[0]:
+                    gap = ref[b, am_ref[b]] - ref[b, am_got[b]]
+                    if gap > ULP_TOL * scale[b, 0]:
+                        flips_beyond_tol += 1
+                if t + 1 < len(ref_logits):
+                    # teacher-forced on the reference's greedy choice
+                    step = np.argmax(ref, axis=-1).astype(np.int32)[:, None]
+                    logits = session.decode_step(kv, step)
+        finally:
+            kv.close()
+    if flips_beyond_tol:
+        raise AssertionError(
+            f"cached decode flipped {flips_beyond_tol} greedy argmaxes "
+            f"beyond the near-tie tolerance"
+        )
+    total = len(ref_logits) * prompts.shape[0]
+    return {
+        "logit_max_rel_diff": max_rel,
+        "argmax_agreement": agree / total,
+        "argmax_flips_beyond_tol": flips_beyond_tol,
+    }
+
+
+def _per_token_profile(dec, prompts, spec) -> tuple[float, float]:
+    """Mean per-token seconds for the first vs last quarter of a warm
+    generation — the O(T) acceptance probe: cached decode's per-token cost
+    must not depend on the emitted-token index, while the uncached path's
+    grows with the prefix it re-runs."""
+    times = []
+    if spec is not None:
+        session = dec.session
+        kv = session.open_kv_cache()
+        try:
+            logits = session.prefill(kv, prompts)
+            step = np.argmax(logits, axis=-1).astype(np.int32)[:, None]
+            for _ in range(NEW_TOKENS - 1):
+                t0 = time.perf_counter()
+                session.decode_step(kv, step)
+                times.append(time.perf_counter() - t0)
+        finally:
+            kv.close()
+    else:
+        ctx = prompts
+        for i in range(NEW_TOKENS - 1):
+            t0 = time.perf_counter()
+            logits = dec.step_logits(ctx)
+            times.append(time.perf_counter() - t0)
+            step = np.argmax(logits, axis=-1).astype(np.int32)
+            ctx = np.concatenate([ctx, step[:, None]], axis=1)
+    q = max(1, len(times) // 4)
+    return sum(times[:q]) / q, sum(times[-q:]) / q
+
+
+def run() -> None:
+    root = tempfile.mkdtemp(prefix="bench_decode_")
+    spec = DecodeSpec(batch=BATCH, max_seq=MAX_SEQ, bucket=BUCKET)
+    spill = DecodeSpec(batch=BATCH, max_seq=MAX_SEQ, bucket=BUCKET, resident_blocks=2)
+    try:
+        uncached = _run(root + "/u", None)
+        cached = _run(root + "/c", spec)
+        spilled = _run(root + "/s", spill)
+        _ref_tokens, ref_logits = _uncached_reference(root + "/r", _prompts())
+        equiv = _cached_equivalence(root + "/e", spec, _prompts(), ref_logits)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+    # Equivalence acceptance gates, every emitted step, every request:
+    # (1) spilling is lossless — the two cached variants run identical
+    #     jitted shapes, so their free-running tokens must match exactly;
+    # (2) cached-vs-uncached logits agree to within ~2 bf16 ULPs per step
+    #     (teacher-forced; raises inside _cached_equivalence), with greedy
+    #     argmax flips allowed only at provable near-ties — free-running
+    #     token equality alone is chaotic under 1-ULP matmul-shape wobble.
+    if spilled["tokens"] != cached["tokens"]:
+        raise AssertionError(
+            f"KV spill round-trip changed the decoded tokens: "
+            f"{spilled['tokens']} vs {cached['tokens']}"
+        )
+
+    speedup = cached["tokens_per_s"] / uncached["tokens_per_s"]
+    report = {
+        "bench": "decode",
+        "config": {
+            "model": CFG.name,
+            "n_layers": CFG.n_layers,
+            "batch": BATCH,
+            "prompt_len": PROMPT_LEN,
+            "new_tokens": NEW_TOKENS,
+            "bucket": BUCKET,
+            "max_seq": MAX_SEQ,
+            "spill_resident_blocks": 2,
+        },
+        "metrics": {
+            "tokens_per_s_cached": cached["tokens_per_s"],
+            "tokens_per_s_cached_spill": spilled["tokens_per_s"],
+            "tokens_per_s_uncached": uncached["tokens_per_s"],
+            "speedup_cached_vs_uncached": speedup,
+            "retraces_warm_cached": cached["retraces_warm"],
+            "retraces_warm_uncached": uncached["retraces_warm"],
+            "compiles_cold_cached": cached["compiles_cold"],
+            "compiles_cold_uncached": uncached["compiles_cold"],
+            "peak_host_bytes_cached": cached["peak_host_bytes"],
+            "peak_host_bytes_cached_spill": spilled["peak_host_bytes"],
+            "peak_host_bytes_uncached": uncached["peak_host_bytes"],
+            "fetch_wait_s_cached": cached["fetch_wait_s"],
+            "fetch_wait_s_uncached": uncached["fetch_wait_s"],
+            "step_time_late_vs_early_cached": (
+                cached["step_s_late"] / cached["step_s_early"]
+            ),
+            "step_time_late_vs_early_uncached": (
+                uncached["step_s_late"] / uncached["step_s_early"]
+            ),
+            "kv_spills": spilled["kv"]["spills"],
+            "kv_refills": spilled["kv"]["refills"],
+            "kv_prefetch_hits": spilled["kv"]["prefetch_hits"],
+            "kv_wait_s": spilled["kv"]["wait_seconds"],
+            "logit_max_rel_diff": equiv["logit_max_rel_diff"],
+            "argmax_agreement": equiv["argmax_agreement"],
+            "argmax_flips_beyond_tol": equiv["argmax_flips_beyond_tol"],
+        },
+        # tokens/s is the gate the issue asks for but is machine-dependent;
+        # the speedup ratio is measured within one run, so it holds across
+        # runner generations even when absolute throughput shifts.
+        "gates": {
+            "tokens_per_s_cached": "higher_is_better",
+            "speedup_cached_vs_uncached": "higher_is_better",
+            "peak_host_bytes_cached": "lower_is_better",
+            "retraces_warm_cached": "lower_is_better",
+            "argmax_flips_beyond_tol": "lower_is_better",
+            "argmax_agreement": "higher_is_better",
+        },
+        "threshold": 0.2,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+    emit(
+        "decode/throughput",
+        1e6 / cached["tokens_per_s"],
+        f"cached={cached['tokens_per_s']:.1f}tok/s "
+        f"uncached={uncached['tokens_per_s']:.1f}tok/s "
+        f"speedup={speedup:.2f}x",
+    )
+    emit(
+        "decode/retraces",
+        0.0,
+        f"warm_cached={cached['retraces_warm']} "
+        f"warm_uncached={uncached['retraces_warm']} "
+        f"cold_cached={cached['compiles_cold']} "
+        f"cold_uncached={uncached['compiles_cold']}",
+    )
+    emit(
+        "decode/kv-spill",
+        1e6 / spilled["tokens_per_s"],
+        f"spill_tput={spilled['tokens_per_s']:.1f}tok/s "
+        f"spills={spilled['kv']['spills']} "
+        f"refills={spilled['kv']['refills']} "
+        f"prefetch_hits={spilled['kv']['prefetch_hits']}",
+    )
+    emit(
+        "decode/peak-host",
+        0.0,
+        f"cached={cached['peak_host_bytes'] / 1e6:.1f}MB "
+        f"spill={spilled['peak_host_bytes'] / 1e6:.1f}MB "
+        f"uncached={uncached['peak_host_bytes'] / 1e6:.1f}MB",
+    )
+    emit(
+        "decode/equivalence",
+        0.0,
+        f"logit_max_rel_diff={equiv['logit_max_rel_diff']:.2e} "
+        f"argmax_agreement={equiv['argmax_agreement']:.3f} "
+        f"flips_beyond_tol={equiv['argmax_flips_beyond_tol']} "
+        f"(tol 8 row-max bf16 ULPs, teacher-forced)",
+    )
+    emit(
+        "decode/per-token-cost",
+        cached["step_s_late"] * 1e6,
+        f"cached late/early={cached['step_s_late'] / cached['step_s_early']:.2f} "
+        f"uncached late/early="
+        f"{uncached['step_s_late'] / uncached['step_s_early']:.2f} "
+        f"(O(1) vs O(T) per-token prefix cost)",
+    )

@@ -6,7 +6,7 @@ from __future__ import annotations
 from repro.configs import ALL_MODELS
 from repro.core import AdamConfig, OffloadedAdam
 
-from .common import emit, gib, time_us
+from .common import emit, gib
 
 
 def run() -> None:

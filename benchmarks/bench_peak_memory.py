@@ -3,7 +3,7 @@ from the byte-exact accounting model over the real policy objects."""
 
 from __future__ import annotations
 
-from repro.configs import ALL_MODELS, PAPER_MODELS
+from repro.configs import ALL_MODELS
 
 from .common import emit, gib, time_us
 from .memory_model import estimate_peak

@@ -15,7 +15,6 @@ def _long_lived_buffers(cfg, n_gpus=2):
     """Request sizes of every long-lived pinned buffer (per §IV-C)."""
     census = cfg.pool_census(inflight_blocks=1, shards=n_gpus)
     sizes = []
-    slab = census.max_tensor_bytes
     for cls in census.classes:
         sizes += [cls.nbytes] * cls.slots(census.inflight_blocks)
     sizes.append(cfg.param_count() * 4 // n_gpus)       # gradient flat buffer

@@ -1,0 +1,123 @@
+"""CI bench-regression gate: fresh BENCH_*.json vs committed baselines.
+
+Each benchmark that wants gating writes a JSON report containing
+
+* ``metrics``   — flat {name: number},
+* ``gates``     — {metric_name: "higher_is_better" | "lower_is_better"},
+* ``threshold`` — relative tolerance (default 0.2 = 20%),
+
+and commits a blessed copy under ``benchmarks/baselines/<name>.json``
+(``BENCH_decode.json`` pairs with ``baselines/decode.json``).  The gate
+fails when a gated metric regresses past the threshold — e.g. tokens/s
+dropping >20% below baseline, or peak host bytes rising >20% above it.  A
+zero baseline (the retrace gates) tolerates no increase at all.
+
+Usage::
+
+    python -m benchmarks.check_regression [BENCH_decode.json ...]
+        [--baseline-dir benchmarks/baselines] [--threshold 0.2]
+
+With no files given, every ``BENCH_*.json`` in the working directory is
+checked.  Fresh reports without a committed baseline are skipped with a
+warning so new benchmarks can land before their first blessing.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+DEFAULT_BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
+DEFAULT_THRESHOLD = 0.2
+
+
+def baseline_path(fresh_path: str, baseline_dir: str) -> str:
+    name = os.path.basename(fresh_path)
+    if name.startswith("BENCH_"):
+        name = name[len("BENCH_") :]
+    return os.path.join(baseline_dir, name)
+
+
+def compare(fresh: dict, baseline: dict, threshold: float | None) -> list[str]:
+    """Failure messages for every gated metric that regressed."""
+    gates = baseline.get("gates", {})
+    tol = threshold if threshold is not None else baseline.get(
+        "threshold", DEFAULT_THRESHOLD
+    )
+    failures = []
+    for metric, direction in sorted(gates.items()):
+        if direction not in ("higher_is_better", "lower_is_better"):
+            failures.append(f"{metric}: unknown gate direction {direction!r}")
+            continue
+        base = baseline.get("metrics", {}).get(metric)
+        new = fresh.get("metrics", {}).get(metric)
+        if base is None or new is None:
+            failures.append(
+                f"{metric}: missing from "
+                f"{'baseline' if base is None else 'fresh report'}"
+            )
+            continue
+        if direction == "higher_is_better":
+            floor = base * (1.0 - tol)
+            if new < floor:
+                failures.append(
+                    f"{metric}: {new:.6g} < {floor:.6g} "
+                    f"(baseline {base:.6g} - {tol:.0%})"
+                )
+        else:
+            ceiling = base * (1.0 + tol)
+            if base == 0:
+                if new > 0:
+                    failures.append(f"{metric}: {new:.6g} > 0 (baseline is zero)")
+            elif new > ceiling:
+                failures.append(
+                    f"{metric}: {new:.6g} > {ceiling:.6g} "
+                    f"(baseline {base:.6g} + {tol:.0%})"
+                )
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("reports", nargs="*", help="fresh BENCH_*.json files")
+    parser.add_argument("--baseline-dir", default=DEFAULT_BASELINE_DIR)
+    parser.add_argument(
+        "--threshold",
+        type=float,
+        default=None,
+        help="override the per-baseline relative tolerance",
+    )
+    args = parser.parse_args(argv)
+
+    reports = args.reports or sorted(glob.glob("BENCH_*.json"))
+    if not reports:
+        print("check_regression: no BENCH_*.json reports found", file=sys.stderr)
+        return 2
+
+    any_failures = False
+    for path in reports:
+        with open(path) as f:
+            fresh = json.load(f)
+        bpath = baseline_path(path, args.baseline_dir)
+        if not os.path.exists(bpath):
+            print(f"check_regression: SKIP {path} (no baseline at {bpath})")
+            continue
+        with open(bpath) as f:
+            baseline = json.load(f)
+        failures = compare(fresh, baseline, args.threshold)
+        if failures:
+            any_failures = True
+            print(f"check_regression: FAIL {path} vs {bpath}")
+            for msg in failures:
+                print(f"  - {msg}")
+        else:
+            gated = sorted(baseline.get("gates", {}))
+            print(f"check_regression: OK {path} ({', '.join(gated)})")
+    return 1 if any_failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

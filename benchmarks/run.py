@@ -13,6 +13,9 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
   bench_io_volume        Fig. 20 / Table VI
   bench_e2e_throughput   Table IV (real steps, container scale)
   bench_kernels          (ours) kernel oracle timings + correctness
+  bench_decode           (ours) cached vs uncached offloaded decode
+                         (also writes BENCH_decode.json for the CI
+                         regression gate; see check_regression.py)
 """
 
 from __future__ import annotations
@@ -23,14 +26,15 @@ import traceback
 
 def main() -> None:
     from . import (bench_batch_scaling, bench_buffer_pool,
-                   bench_context_scaling, bench_e2e_throughput,
-                   bench_io_volume, bench_kernels, bench_moe_pool,
-                   bench_nvme, bench_overflow, bench_peak_memory,
-                   bench_pinned_alloc)
+                   bench_context_scaling, bench_decode,
+                   bench_e2e_throughput, bench_io_volume, bench_kernels,
+                   bench_moe_pool, bench_nvme, bench_overflow,
+                   bench_peak_memory, bench_pinned_alloc)
     modules = [
         bench_buffer_pool, bench_pinned_alloc, bench_overflow, bench_nvme,
         bench_peak_memory, bench_context_scaling, bench_batch_scaling,
         bench_moe_pool, bench_io_volume, bench_e2e_throughput, bench_kernels,
+        bench_decode,
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

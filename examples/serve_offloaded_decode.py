@@ -3,8 +3,15 @@ live on the (raw-file) NVMe store, streamed block-by-block per token through
 the OffloadSession/StreamPlan machinery — serving on a host that cannot
 hold the model in DRAM.
 
+By default generation runs the cached path: a spill-able KV cache in the
+same pinned pool arena as the weight staging slots (``--kv-resident``
+layers stay host-resident, the rest round-trip through the SSD store),
+prefill-then-step with time-bucketed compile-once stages.  ``--no-cache``
+falls back to the O(T²) full-prefix re-run for comparison.
+
 Run:  PYTHONPATH=src python examples/serve_offloaded_decode.py \
-          [--policy memascend|zero-infinity] [--new-tokens 16] [--lookahead 2]
+          [--policy memascend|zero-infinity] [--new-tokens 16] \
+          [--kv-resident 2] [--bucket 16] [--no-cache] [--lookahead 2]
 """
 
 import argparse
@@ -17,7 +24,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import OffloadPolicy, fmt_bytes
 from repro.core.model_adapter import make_offloadable_lm
-from repro.serve import OffloadedDecoder
+from repro.serve import DecodeSpec, OffloadedDecoder
 
 CFG = ModelConfig(name="serve-20m", family="dense", n_layers=4, d_model=256,
                   n_heads=8, n_kv_heads=4, d_ff=1024, vocab=8192)
@@ -32,20 +39,33 @@ def main() -> None:
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--lookahead", type=int, default=None,
                     help="prefetch window (default: policy inflight depth)")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="O(T^2) full-prefix re-run (the PR-1 behaviour)")
+    ap.add_argument("--bucket", type=int, default=16,
+                    help="KV time-bucket granularity (jit once per bucket)")
+    ap.add_argument("--kv-resident", type=int, default=None,
+                    help="host KV budget in layers (default: all resident)")
     args = ap.parse_args()
 
     model = make_offloadable_lm(CFG, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     prompts = rng.integers(3, CFG.vocab, size=(args.batch, args.prompt_len),
                            dtype=np.int32)
+    decode = None
+    if not args.no_cache:
+        max_seq = args.prompt_len + args.new_tokens
+        decode = DecodeSpec(batch=args.batch, max_seq=max_seq,
+                            bucket=min(args.bucket, max_seq),
+                            resident_blocks=args.kv_resident)
 
     with tempfile.TemporaryDirectory(prefix="serve_offload_") as root:
         policy = (OffloadPolicy.preset(args.policy).with_store(root)
                   .with_lookahead(args.lookahead).build())
-        with OffloadedDecoder(model, policy) as dec:
+        with OffloadedDecoder(model, policy, decode=decode) as dec:
             print(f"policy {policy.name}  lookahead {dec.session.lookahead}  "
-                  f"pool {fmt_bytes(dec.session.pool.pool_bytes)}")
-            dec.step_logits(prompts)            # warmup/compile
+                  f"pool {fmt_bytes(dec.session.pool.pool_bytes)}  "
+                  f"cache {'KV (spill-able)' if decode else 'none (O(T^2))'}")
+            dec.generate(prompts, args.new_tokens)   # warmup/compile
             t0 = time.time()
             gen = dec.generate(prompts, args.new_tokens)
             dt = time.time() - t0
@@ -55,6 +75,11 @@ def main() -> None:
             print(f"fetches: {stats['n_gets']}  prefetch hits: "
                   f"{stats['prefetch_hits']}  fetch-wait: "
                   f"{stats['wait_seconds'] * 1e3:.1f}ms")
+            if dec.kv_stats is not None:
+                kv = dec.kv_stats
+                print(f"kv: spills {kv['spills']}  refills {kv['refills']}  "
+                      f"prefetched {kv['prefetch_refills']}  "
+                      f"kv-wait {kv['wait_seconds'] * 1e3:.1f}ms")
             for i in range(min(args.batch, 2)):
                 print(f"  request {i}: {gen[i][:16].tolist()} ...")
     print("offloaded serve OK")

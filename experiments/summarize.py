@@ -3,13 +3,12 @@
 Usage: PYTHONPATH=src python experiments/summarize.py
 """
 
-import json
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.launch.roofline import analyze, load_records, report  # noqa: E402
+from repro.launch.roofline import load_records, report  # noqa: E402
 
 ROOT = os.path.dirname(os.path.abspath(__file__))
 OUT = os.path.join(ROOT, "dryrun")

@@ -18,7 +18,7 @@ configs are touched only by the ShapeDtypeStruct dry-run.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 
 # ---------------------------------------------------------------------------

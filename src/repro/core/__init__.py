@@ -19,17 +19,19 @@ from .memory_tracker import MemoryTracker, GLOBAL_TRACKER, fmt_bytes
 from .pinned_alloc import (AlignmentFreeAllocator, PinnedAllocatorBase,
                            PowerOfTwoCachingAllocator, next_power_of_two,
                            align_up, DMA_ALIGNMENT)
-from .buffer_pool import (AdaptiveBufferPool, FixedBufferPool, PoolCensus,
-                          ShapeClass)
+from .buffer_pool import (AdaptiveBufferPool, FixedBufferPool, KV_CLASS,
+                          PoolCensus, ShapeClass)
+from .kv_cache import DecodeSpec, KVStats, SpillableKVCache
 from .overflow import (baseline_overflow_check, fused_overflow_check,
                        baseline_overflow_check_jnp, fused_overflow_check_jnp)
 from .loss_scale import DynamicLossScaler
 from .nvme import DirectNVMeEngine, FilesystemEngine, TensorStore, IOStats
 from .optimizer import AdamConfig, OffloadedAdam, adam_update
 from .swapper import ParameterSwapper, SwapStats
-from .stream_plan import (ComputeOp, FetchOp, GradWriteOp, PlanError,
-                          ReleaseOp, StreamPlan, compile_decode, compile_eval,
-                          compile_train)
+from .stream_plan import (ComputeOp, FetchOp, GradWriteOp, KVReadOp,
+                          KVWriteOp, PlanError, ReleaseOp, StreamPlan,
+                          compile_decode, compile_decode_cached, compile_eval,
+                          compile_prefill, compile_train)
 from .session import OffloadSession
 from .offload_engine import (OffloadableModel, OffloadUnit, OffloadPolicy,
                              OffloadedTrainer, PolicyBuilder,

@@ -28,7 +28,7 @@ concurrently live" comes from the model config
 from __future__ import annotations
 
 import threading
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from .pinned_alloc import PinnedAllocatorBase, PinnedBuffer
 
@@ -52,6 +52,13 @@ class ShapeClass:
         return self.per_block * inflight_blocks + self.standalone
 
 
+# Shape class of per-layer KV-cache slots (offloaded cached decode).  KV
+# state streams through the same arena as the weights it attends against,
+# but its slots are *persistent across steps* (a SpillableKVCache keeps them
+# checked out and spills cold layers to SSD) rather than released at H2D.
+KV_CLASS = "kv"
+
+
 @dataclass(frozen=True)
 class PoolCensus:
     """Shape-class census for one model (one data-parallel shard thereof)."""
@@ -72,6 +79,22 @@ class PoolCensus:
         return PoolCensus(
             tuple(ShapeClass(c.name, -(-c.nbytes // shard_count), c.per_block,
                              c.standalone) for c in self.classes),
+            self.inflight_blocks)
+
+    def with_kv(self, nbytes: int, slots: int) -> "PoolCensus":
+        """Census extended with ``slots`` dedicated KV-cache slots of
+        ``nbytes`` each (one slot holds one layer's full K+V state).
+
+        The slots are standalone — their count is the *host-residency
+        budget* for cached decode, not a per-inflight-block multiple; layers
+        beyond it spill to SSD (see :mod:`repro.core.kv_cache`)."""
+        if nbytes <= 0 or slots <= 0:
+            raise ValueError(f"kv census needs nbytes>0 and slots>0, got "
+                             f"nbytes={nbytes}, slots={slots}")
+        if any(c.name == KV_CLASS for c in self.classes):
+            raise ValueError(f"census already has a {KV_CLASS!r} class")
+        return PoolCensus(
+            self.classes + (ShapeClass(KV_CLASS, nbytes, standalone=slots),),
             self.inflight_blocks)
 
 

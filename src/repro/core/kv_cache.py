@@ -1,0 +1,311 @@
+"""Spill-able KV cache: decode state streamed through the offload machinery.
+
+Offloaded decode (PR 1) re-ran the full prefix per emitted token because a
+per-layer KV cache would pin ``n_layers × (2, B, S, KH, D)`` of host memory
+— exactly the "pin it all" design the paper exists to break.  This module
+applies MemAscend's core move to *decode state*: KV lives in a bounded
+number of pool slots inside the same pinned arena the weights stream
+through (shape class :data:`~repro.core.buffer_pool.KV_CLASS`), and layers
+that do not fit the budget spill to the SSD tensor store, to be refilled —
+ideally prefetched under the previous layer's compute — on their next turn.
+
+Residency policy: decode touches layers cyclically (0, 1, …, L−1, 0, …), so
+the block just used is the one whose next use is farthest away — Belady's
+choice is to evict *most-recently-used*.  With a budget of ``R`` slots the
+cache keeps the first ``R−2`` layers host-resident forever and cycles the
+remaining layers through the last two slots (one in use, one prefetching),
+giving a host footprint of ``R`` slots independent of model depth.
+
+:class:`DecodeSpec` carries the serving shape (batch, max sequence, time
+bucket, residency budget); the session sizes the pool census from it and
+buckets the jitted decode stages so each bucket compiles once.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass
+
+import numpy as np
+
+from .buffer_pool import KV_CLASS, BufferPoolBase, PoolBuffer
+from .nvme import TensorStore
+
+
+@dataclass(frozen=True)
+class DecodeSpec:
+    """Serving shape for cached offloaded decode.
+
+    ``batch``            requests decoded together (jit shapes are fixed).
+    ``max_seq``          prompt + generated tokens capacity per request.
+    ``bucket``           time-bucket granularity: device-side cache slices
+                         are padded to the next multiple, so each bucket
+                         traces/compiles once and steps within it reuse it.
+    ``resident_blocks``  host KV budget in layers (pool slots); ``None``
+                         keeps every layer resident (no spill I/O).
+    """
+
+    batch: int
+    max_seq: int
+    bucket: int = 64
+    resident_blocks: int | None = None
+
+    def __post_init__(self) -> None:
+        if self.batch < 1:
+            raise ValueError(f"batch must be >= 1, got {self.batch}")
+        if self.max_seq < 1:
+            raise ValueError(f"max_seq must be >= 1, got {self.max_seq}")
+        if not 1 <= self.bucket <= self.max_seq:
+            raise ValueError(f"bucket must be in [1, max_seq={self.max_seq}]"
+                             f", got {self.bucket}")
+        if self.resident_blocks is not None and self.resident_blocks < 2:
+            raise ValueError(
+                f"resident_blocks must be >= 2 (one slot computing, one "
+                f"prefetching), got {self.resident_blocks}")
+
+    def bucket_len(self, length: int) -> int:
+        """Device-cache time extent covering ``length`` positions."""
+        if length < 1:
+            raise ValueError(f"length must be >= 1, got {length}")
+        if length > self.max_seq:
+            raise ValueError(f"length {length} exceeds max_seq {self.max_seq}")
+        return min(self.max_seq, -(-length // self.bucket) * self.bucket)
+
+
+@dataclass
+class KVStats:
+    """Spill-pipeline effectiveness counters (mirrors SwapStats for KV)."""
+
+    spills: int = 0            # host slot written to SSD + released
+    refills: int = 0           # SSD read back into a slot (any path)
+    prefetch_refills: int = 0  # refills issued ahead of use
+    prefetch_hits: int = 0     # refill already complete when ensure() asked
+    sync_refills: int = 0      # ensure() found nothing in flight
+    spill_bytes: int = 0
+    refill_bytes: int = 0
+    wait_seconds: float = 0.0  # time ensure() blocked on outstanding refills
+
+    def snapshot(self) -> dict:
+        return {k: getattr(self, k) for k in (
+            "spills", "refills", "prefetch_refills", "prefetch_hits",
+            "sync_refills", "spill_bytes", "refill_bytes", "wait_seconds")}
+
+
+class SpillableKVCache:
+    """Per-layer KV state in pool slots, spilled to the SSD store on budget.
+
+    One instance covers one generate() call-sequence: ``length`` tokens are
+    cached for every unit in ``units``.  Each unit's state is one pool slot
+    holding a ``(2, batch, max_seq, kv_heads, head_dim)`` array (``[0]`` is
+    K, ``[1]`` is V).  The session reads host views via :meth:`ensure`
+    (waiting out any in-flight refill), appends via :meth:`append` /
+    :meth:`write_prefill`, and hints upcoming layers via :meth:`prefetch`.
+
+    Thread-safety: refills land from store worker threads; all slot/state
+    bookkeeping is under one lock.  Compute-side calls (ensure/append) come
+    from the single executor thread.
+    """
+
+    def __init__(self, units: list[str], shape: tuple, dtype,
+                 pool: BufferPoolBase, store: TensorStore, *,
+                 resident_limit: int | None = None) -> None:
+        self.units = list(units)
+        self.shape = tuple(shape)
+        self.dtype = np.dtype(dtype)
+        self.nbytes = int(self.dtype.itemsize *
+                          np.prod(self.shape, dtype=np.int64))
+        self.pool = pool
+        self.store = store
+        n = len(self.units)
+        self.resident_limit = n if resident_limit is None else \
+            min(resident_limit, n)
+        if self.resident_limit < n and self.resident_limit < 2:
+            raise ValueError(
+                f"resident_limit {self.resident_limit} < 2 cannot pipeline "
+                f"{n} units (one slot computing, one prefetching)")
+        # Below budget every unit stays resident; at budget, reserve two
+        # slots for the (in use, prefetching) pair cycling the cold units.
+        self._keep = n if self.resident_limit >= n else \
+            max(0, self.resident_limit - 2)
+        self.length = 0          # tokens cached so far (same for all units)
+        self.stats = KVStats()
+        self.closed = False
+        self._lock = threading.Lock()
+        self._slots: dict[str, PoolBuffer] = {}     # resident units
+        self._futures: dict[str, tuple[PoolBuffer, Future]] = {}  # refilling
+        self._spilled: set[str] = set()             # state lives on SSD
+        self._use_order: list[str] = []             # LRU ... MRU
+
+    # -- internals -----------------------------------------------------------
+
+    def _store_key(self, unit: str) -> str:
+        return f"kv/{unit}"
+
+    def _touch(self, unit: str) -> None:
+        if unit in self._use_order:
+            self._use_order.remove(unit)
+        self._use_order.append(unit)
+
+    def _acquire(self, unit: str) -> PoolBuffer:
+        # Budget is self-managed: resident + in-flight never exceeds
+        # resident_limit (the census slot count), so this never blocks.
+        return self.pool.acquire(KV_CLASS, self.nbytes,
+                                 tag=self._store_key(unit))
+
+    def _free_capacity(self) -> int:
+        return self.resident_limit - len(self._slots) - len(self._futures)
+
+    def _spill_one(self, exclude: set[str]) -> None:
+        """Evict the most-recently-used resident unit (Belady under cyclic
+        access) not in ``exclude``: write it to SSD, return the slot."""
+        for unit in reversed(self._use_order):
+            if unit in self._slots and unit not in exclude:
+                self._spill(unit)
+                return
+        raise RuntimeError("KV cache cannot make room: every resident "
+                           "slot is excluded from eviction")
+
+    def _spill(self, unit: str) -> None:
+        buf = self._slots.pop(unit)
+        view = buf.view(self.dtype, self.shape)
+        self.store.write(self._store_key(unit), view)
+        buf.release()
+        self._spilled.add(unit)
+        self._use_order.remove(unit)
+        self.stats.spills += 1
+        self.stats.spill_bytes += self.nbytes
+
+    def _maybe_spill_after_use(self, unit: str) -> None:
+        """Spill-after-use: once a unit's append landed, its next use is a
+        full cycle away — spill it (and anything else over the keep line)."""
+        with self._lock:
+            while len(self._slots) > self._keep:
+                self._spill_one(exclude=set())
+
+    # -- the session-facing API ----------------------------------------------
+
+    def prefetch(self, unit: str) -> None:
+        """Hint that ``unit`` is needed soon: issue an async SSD refill into
+        a free slot.  No-op for non-KV units, resident/in-flight units,
+        units with no spilled state, or when no slot is free."""
+        with self._lock:
+            if (self.closed or unit not in self.units
+                    or unit in self._slots or unit in self._futures
+                    or unit not in self._spilled
+                    or self._free_capacity() < 1):
+                return
+            buf = self._acquire(unit)
+            view = buf.view(self.dtype, self.shape)
+            future = self.store.read_async(self._store_key(unit), view)
+            self._futures[unit] = (buf, future)
+            self._spilled.discard(unit)
+            self.stats.prefetch_refills += 1
+
+    def ensure(self, unit: str) -> np.ndarray:
+        """Host view of ``unit``'s KV state, resident.  Waits out an
+        in-flight refill; synchronously refills a spilled unit; acquires
+        (and zero-fills) a fresh slot for a never-written unit."""
+        if unit not in self.units:
+            raise KeyError(f"unknown KV unit {unit!r}")
+        with self._lock:
+            if self.closed:
+                raise RuntimeError("KV cache is closed")
+            entry = self._futures.pop(unit, None)
+            if entry is not None:
+                buf, future = entry
+                hit = future.done()
+            elif unit in self._slots:
+                self._touch(unit)
+                return self._slots[unit].view(self.dtype, self.shape)
+            else:
+                # Sync path: spilled (refill now) or first touch (zero).
+                if self._free_capacity() < 1:
+                    self._spill_one(exclude={unit})
+                buf = self._acquire(unit)
+                future = None
+                hit = False
+        view = buf.view(self.dtype, self.shape)
+        t0 = time.perf_counter()
+        try:
+            if future is not None:
+                future.result()
+                self.stats.refills += 1
+                self.stats.refill_bytes += self.nbytes
+                self.stats.prefetch_hits += int(hit)
+            elif unit in self._spilled:
+                self.store.read(self._store_key(unit), view)
+                self.stats.refills += 1
+                self.stats.refill_bytes += self.nbytes
+                self.stats.sync_refills += 1
+            else:
+                view[...] = np.zeros((), self.dtype)  # fresh state
+        except BaseException:
+            buf.release()   # slot must not leak on a failed read
+            raise
+        self.stats.wait_seconds += time.perf_counter() - t0
+        with self._lock:
+            self._spilled.discard(unit)
+            self._slots[unit] = buf
+            self._touch(unit)
+        return view
+
+    def append(self, unit: str, k_new: np.ndarray, v_new: np.ndarray) -> None:
+        """Write one decoded token's K/V (``(B, 1, KH, D)``) at position
+        ``length`` (advance once per step via :meth:`advance`)."""
+        if self.length >= self.shape[2]:
+            raise ValueError(f"KV cache full: length {self.length} at "
+                             f"capacity {self.shape[2]}")
+        view = self.ensure(unit)
+        view[0][:, self.length] = k_new[:, 0]
+        view[1][:, self.length] = v_new[:, 0]
+        self._maybe_spill_after_use(unit)
+
+    def write_prefill(self, unit: str, k: np.ndarray, v: np.ndarray) -> None:
+        """Write the prefill pass's K/V (``(B, S_bucket, KH, D)``; entries
+        past the true prompt length are masked garbage, overwritten by later
+        appends)."""
+        s = k.shape[1]
+        if s > self.shape[2]:
+            raise ValueError(f"prefill extent {s} exceeds capacity "
+                             f"{self.shape[2]}")
+        view = self.ensure(unit)
+        view[0][:, :s] = k
+        view[1][:, :s] = v
+        self._maybe_spill_after_use(unit)
+
+    def set_length(self, length: int) -> None:
+        if not 0 <= length <= self.shape[2]:
+            raise ValueError(f"length {length} outside [0, {self.shape[2]}]")
+        self.length = length
+
+    def advance(self, n: int = 1) -> None:
+        self.set_length(self.length + n)
+
+    @property
+    def resident_units(self) -> list[str]:
+        with self._lock:
+            return sorted(self._slots)
+
+    def close(self) -> None:
+        """Wait out in-flight refills and return every slot.  Idempotent;
+        runs on generate()'s error path, so nothing may leak."""
+        with self._lock:
+            if self.closed:
+                return
+            self.closed = True
+            futures = list(self._futures.values())
+            self._futures.clear()
+            slots = list(self._slots.values())
+            self._slots.clear()
+            self._use_order.clear()
+        for buf, future in futures:
+            try:
+                future.result()
+            except BaseException:
+                pass            # data is being discarded
+            finally:
+                buf.release()
+        for buf in slots:
+            buf.release()

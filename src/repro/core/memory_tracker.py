@@ -25,7 +25,7 @@ real numpy buffers with the same accounting.
 from __future__ import annotations
 
 import threading
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

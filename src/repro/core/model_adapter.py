@@ -20,7 +20,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models.transformer import (apply_layer, ffn_kind,
+from repro.models.attention import gqa_prefill, gqa_step
+from repro.models.transformer import (apply_ffn, apply_layer, ffn_kind,
                                       init_layer_params, layer_period,
                                       mixer_kind)
 from repro.models.layers import (cross_entropy, embed_lookup, lm_logits,
@@ -73,6 +74,31 @@ def make_offloadable_lm(cfg: ModelConfig, key,
     def class_of(param_key: str) -> str:
         return ModelConfig.class_of_param(param_key)
 
+    # Cached-decode applies (spill-able KV cache): attention mixers only —
+    # recurrent-state mixers (mamba/xLSTM) carry different cache pytrees
+    # and stay on the uncached full-prefix path for now.  The FFN half is
+    # the SAME apply_ffn the train/uncached paths run, so cached decode
+    # cannot drift numerically.
+    block_prefill = block_step = kv_shape = None
+    if kinds[0] == "attn":
+        def block_prefill(params, h):
+            hn = rms_norm(h, params["norm_mixer"], cfg.rms_eps)
+            mix, k, v = gqa_prefill(params, hn, cfg)
+            h, _aux = apply_ffn(cfg, kinds[1], params, h + mix)
+            return h, k, v
+
+        def block_step(params, h, k_cache, v_cache, cache_len):
+            hn = rms_norm(h, params["norm_mixer"], cfg.rms_eps)
+            mix, k_new, v_new = gqa_step(params, hn, cfg, k_cache, v_cache,
+                                         cache_len)
+            h, _aux = apply_ffn(cfg, kinds[1], params, h + mix)
+            return h, k_new, v_new
+
+        def kv_shape(batch: int, time: int) -> tuple:
+            return (2, batch, time, cfg.n_kv_heads, cfg.head_dim)
+
     return OffloadableModel(units=units, embed_apply=embed_apply,
                             block_apply=block_apply, head_loss=head_loss,
-                            class_of=class_of, head_logits=head_logits)
+                            class_of=class_of, head_logits=head_logits,
+                            block_prefill=block_prefill,
+                            block_step=block_step, kv_shape=kv_shape)

@@ -28,7 +28,7 @@ import os
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor, Future
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 

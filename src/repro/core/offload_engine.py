@@ -85,7 +85,14 @@ class OffloadableModel:
       head_loss(params, h, labels)             -> scalar loss (pre-scaling)
       head_logits(params, h)                   -> logits (optional; required
                                                   by decode StreamPlans)
-    ``class_of(param_key)`` maps a parameter to its pool shape class.
+      block_prefill(params, h)                 -> h, k, v (optional; cached
+                                                  decode prompt pass)
+      block_step(params, h, k_cache, v_cache, cache_len)
+                                               -> h, k_new, v_new (optional;
+                                                  cached decode step)
+    ``class_of(param_key)`` maps a parameter to its pool shape class;
+    ``kv_shape(batch, time)`` is one block's host KV-slot shape (leading
+    axis 2 packs K and V) for sessions built with a DecodeSpec.
     """
 
     units: list[OffloadUnit]
@@ -94,6 +101,9 @@ class OffloadableModel:
     head_loss: Callable
     class_of: Callable[[str], str]
     head_logits: Callable | None = None
+    block_prefill: Callable | None = None
+    block_step: Callable | None = None
+    kv_shape: Callable[[int, int], tuple] | None = None
 
     def census(self, inflight_blocks: int = 2,
                bytes_per_elem: int = 2) -> PoolCensus:

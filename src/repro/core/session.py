@@ -16,13 +16,20 @@ overlaps block *i*'s H2D + compute; depth is bounded by
 pool's own backpressure is the safety net.  ``lookahead=1`` degenerates to
 the seed engine's synchronous per-unit fetches (the benchmark baseline).
 
-The session runs three workloads through the same machinery:
+The session runs four workloads through the same machinery:
 
 * ``train_step``   — compile_train plan + overflow screen + loss scaler +
                      subgroup-streamed host Adam,
 * ``eval_loss``    — compile_eval plan (jitted head loss cached once),
-* ``decode_logits``— compile_decode plan (weight-streamed serving; see
-                     :mod:`repro.serve.offloaded`).
+* ``decode_logits``— compile_decode plan (weight-streamed serving,
+                     uncached full-prefix pass; see
+                     :mod:`repro.serve.offloaded`),
+* ``prefill`` / ``decode_step`` — cached decode over a spill-able KV cache
+                     (:mod:`repro.core.kv_cache`): sessions built with
+                     ``decode=DecodeSpec(...)`` reserve ``kv``-class pool
+                     slots in the census, stream each layer's K/V next to
+                     its weights, and bucket the time axis so every jitted
+                     stage compiles once per bucket.
 
 ``mode="serve"`` opens a leaner session: no optimizer state is written to
 the store and no gradient flat buffer is pinned — only the compute-precision
@@ -36,13 +43,15 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .kv_cache import DecodeSpec, SpillableKVCache
 from .loss_scale import DynamicLossScaler
 from .memory_tracker import MemoryTracker
 from .optimizer import OffloadedAdam
 from .overflow import baseline_overflow_check, fused_overflow_check
-from .stream_plan import (ComputeOp, FetchOp, GradWriteOp, ReleaseOp,
-                          StreamPlan, compile_decode, compile_eval,
-                          compile_train)
+from .stream_plan import (ComputeOp, FetchOp, GradWriteOp, KVReadOp,
+                          KVWriteOp, ReleaseOp, StreamPlan,
+                          compile_decode, compile_decode_cached,
+                          compile_eval, compile_prefill, compile_train)
 from .swapper import ParameterSwapper
 
 COMPUTE_SUFFIX = OffloadedAdam.COMPUTE
@@ -52,7 +61,8 @@ class _ExecState:
     """Per-plan-run bindings and carried activations/cotangents."""
 
     __slots__ = ("tokens", "labels", "scale", "h", "dh", "loss", "logits",
-                 "live", "grads", "checkpoints")
+                 "live", "grads", "checkpoints", "kv", "kv_live",
+                 "kv_append", "kv_time", "cache_len", "last_pos")
 
     def __init__(self, tokens=None, labels=None, scale=1.0):
         self.tokens = None if tokens is None else jnp.asarray(tokens)
@@ -62,13 +72,21 @@ class _ExecState:
         self.live: dict[str, dict] = {}     # unit -> device params
         self.grads: dict[str, dict] = {}    # unit -> device grads
         self.checkpoints: dict[str, tuple] = {}  # unit -> saved block input
+        # cached-decode bindings (prefill / decode_cached plans only)
+        self.kv: SpillableKVCache | None = None
+        self.kv_live: dict[str, tuple] = {}    # unit -> device (k, v) bucket
+        self.kv_append: dict[str, tuple] = {}  # unit -> (mode, k, v)
+        self.kv_time = 0          # device-cache bucket extent this run
+        self.cache_len = None     # traced: tokens already cached
+        self.last_pos = None      # traced: last prompt index (prefill head)
 
 
 class OffloadSession:
     """Executes StreamPlans over one open offload stack (context manager)."""
 
     def __init__(self, model, policy, *, tracker: MemoryTracker | None = None,
-                 mode: str = "train") -> None:
+                 mode: str = "train",
+                 decode: DecodeSpec | None = None) -> None:
         if mode not in ("train", "serve"):
             raise ValueError(f"mode must be 'train' or 'serve', got {mode!r}")
         self.model = model
@@ -82,17 +100,42 @@ class OffloadSession:
         # — release whatever was acquired before re-raising.
         self._closed = False
         try:
-            self._construct(model, policy, mode)
+            self._construct(model, policy, mode, decode)
         except BaseException:
             self.close()
             raise
 
-    def _construct(self, model, policy, mode: str) -> None:
+    def _construct(self, model, policy, mode: str,
+                   decode: DecodeSpec | None) -> None:
         self.allocator = policy.allocator_cls(
             tracker=self.tracker, component="pinned", backing="numpy")
         census = model.census(
             policy.inflight_blocks,
             bytes_per_elem=policy.adam.compute_np_dtype.itemsize)
+        # Cached decode: the KV cache draws slots from the same pool arena
+        # the weights stream through, so its residency budget is part of
+        # the census (paper §IV-B sizing, extended to decode state).
+        self.decode_spec = decode
+        self._kv_units = tuple(u.name for u in model.units[1:-1])
+        self._kv_slot_shape = None
+        self._kv_resident = 0
+        self._kv_cache: SpillableKVCache | None = None
+        if decode is not None:
+            if model.block_step is None or model.kv_shape is None:
+                raise ValueError(
+                    "model has no cached-decode applies (block_step/"
+                    "kv_shape); decode=DecodeSpec(...) needs an attention-"
+                    "mixer family (see model_adapter.make_offloadable_lm)")
+            if not self._kv_units:
+                raise ValueError("model has no block units to cache KV for")
+            n_blocks = len(self._kv_units)
+            self._kv_resident = n_blocks if decode.resident_blocks is None \
+                else min(decode.resident_blocks, n_blocks)
+            self._kv_slot_shape = tuple(
+                model.kv_shape(decode.batch, decode.max_seq))
+            kv_nbytes = int(policy.adam.compute_np_dtype.itemsize * np.prod(
+                self._kv_slot_shape, dtype=np.int64))
+            census = census.with_kv(kv_nbytes, self._kv_resident)
         self.pool = policy.pool_cls(census, self.allocator)
         self.swapper = ParameterSwapper(self.store, self.pool, class_of={
             f"{unit.name}/{key}{COMPUTE_SUFFIX}": model.class_of(key)
@@ -159,6 +202,21 @@ class OffloadSession:
         self._jit_head_logits = (jax.jit(model.head_logits)
                                  if getattr(model, "head_logits", None)
                                  else None)
+        self._jit_block_prefill = (jax.jit(model.block_prefill)
+                                   if getattr(model, "block_prefill", None)
+                                   else None)
+        self._jit_block_step = (jax.jit(model.block_step)
+                                if getattr(model, "block_step", None)
+                                else None)
+        self._jit_head_last = None
+        if self._jit_head_logits is not None and \
+                self._jit_block_prefill is not None:
+            def _head_last(params, h, pos):
+                # pos is traced: slicing the last valid prompt position out
+                # of the padded bucket costs no retrace per prompt length.
+                h_last = jax.lax.dynamic_slice_in_dim(h, pos, 1, axis=1)
+                return model.head_logits(params, h_last)
+            self._jit_head_last = jax.jit(_head_last)
 
         self._plans: dict[str, StreamPlan] = {}
         self.metrics: dict = {}
@@ -179,6 +237,8 @@ class OffloadSession:
             return
         self._closed = True
         steps = []
+        if getattr(self, "_kv_cache", None) is not None:
+            steps.append(self._kv_cache.close)
         if getattr(self, "swapper", None) is not None:
             steps.append(self.swapper.drain)
         if getattr(self, "pool", None) is not None:
@@ -202,10 +262,13 @@ class OffloadSession:
     # -- plans --------------------------------------------------------------
 
     def plan(self, name: str) -> StreamPlan:
-        """The session's compiled plan for ``name`` (train/eval/decode)."""
+        """The session's compiled plan for ``name``
+        (train/eval/decode/prefill/decode_cached)."""
         if name not in self._plans:
             compiler = {"train": compile_train, "eval": compile_eval,
-                        "decode": compile_decode}[name]
+                        "decode": compile_decode,
+                        "prefill": compile_prefill,
+                        "decode_cached": compile_decode_cached}[name]
             self._plans[name] = compiler(self.model)
         return self._plans[name]
 
@@ -306,11 +369,20 @@ class OffloadSession:
                                 self._unit_in_flight(unit):
                             break
                         self._prefetch_unit(unit)
+                        if state.kv is not None:
+                            # ride the same window: block i+1's KV refill
+                            # overlaps block i's compute (no-op for units
+                            # that are resident or never spilled)
+                            state.kv.prefetch(unit)
                         next_prefetch += 1
                     state.live[op.unit] = self._fetch_unit(op.unit)
                     fetch_pos += 1
                 elif isinstance(op, ComputeOp):
                     self._compute(op, state)
+                elif isinstance(op, KVReadOp):
+                    self._read_kv(op.unit, state)
+                elif isinstance(op, KVWriteOp):
+                    self._write_kv(op.unit, state)
                 elif isinstance(op, GradWriteOp):
                     self._write_grads(op.unit, state.grads.pop(op.unit))
                 elif isinstance(op, ReleaseOp):
@@ -318,10 +390,14 @@ class OffloadSession:
         except BaseException:
             # Error path: nothing may leak.  Outstanding reads are waited
             # out and their slots returned; host-held checkpoints are freed.
+            # (KV pool slots belong to the SpillableKVCache, whose owner —
+            # generate()'s finally — closes it.)
             for ckpt in state.checkpoints.values():
                 self._discard_checkpoint(ckpt)
             state.checkpoints.clear()
             state.live.clear()
+            state.kv_live.clear()
+            state.kv_append.clear()
             self.swapper.drain()
             raise
         return state
@@ -342,6 +418,17 @@ class OffloadSession:
             state.loss = self._jit_head_loss(params, state.h, state.labels)
         elif op.kind == "head_logits":
             state.logits = self._jit_head_logits(params, state.h)
+        elif op.kind == "head_logits_last":
+            state.logits = self._jit_head_last(params, state.h,
+                                               state.last_pos)
+        elif op.kind == "block_prefill":
+            state.h, k, v = self._jit_block_prefill(params, state.h)
+            state.kv_append[op.unit] = ("prefill", k, v)
+        elif op.kind == "block_step":
+            k_dev, v_dev = state.kv_live.pop(op.unit)
+            state.h, k, v = self._jit_block_step(
+                params, state.h, k_dev, v_dev, state.cache_len)
+            state.kv_append[op.unit] = ("step", k, v)
         elif op.kind == "block_bwd":
             x = self._restore_checkpoint(state.checkpoints.pop(op.unit))
             state.grads[op.unit], state.dh = self._jit_block_bwd(
@@ -351,6 +438,25 @@ class OffloadSession:
                 params, state.tokens, state.dh)
         else:  # validated at plan build; defensive
             raise ValueError(f"unknown compute kind {op.kind!r}")
+
+    def _read_kv(self, unit_name: str, state: _ExecState) -> None:
+        """Blocking KV half: wait out a refill, H2D the current bucket."""
+        view = state.kv.ensure(unit_name)
+        sb = state.kv_time
+        # copy=True for the same reason as weights: the host view is a pool
+        # slot that may be spilled (and its memory reused) while the jitted
+        # step still reads the device buffer asynchronously.
+        state.kv_live[unit_name] = (jnp.array(view[0][:, :sb], copy=True),
+                                    jnp.array(view[1][:, :sb], copy=True))
+
+    def _write_kv(self, unit_name: str, state: _ExecState) -> None:
+        """Land this unit's new K/V in its host slot (D2H); the cache
+        spills it onward if the residency budget is exceeded."""
+        mode, k, v = state.kv_append.pop(unit_name)
+        if mode == "prefill":
+            state.kv.write_prefill(unit_name, np.asarray(k), np.asarray(v))
+        else:
+            state.kv.append(unit_name, np.asarray(k), np.asarray(v))
 
     def _write_grads(self, unit_name: str, grads: dict) -> None:
         """Accumulate device grads into the fp32 host flat buffer."""
@@ -408,9 +514,97 @@ class OffloadSession:
         return float(state.loss)
 
     def decode_logits(self, tokens: np.ndarray) -> np.ndarray:
-        """One weight-streamed decode step: logits for every position."""
+        """One weight-streamed decode step: logits for every position.
+
+        Uncached (full-prefix) path — O(T²) over a generation; kept as the
+        ablation baseline and for models without cached-decode applies.
+        """
         state = self.execute(self.plan("decode"), _ExecState(tokens))
         return np.asarray(state.logits)
+
+    # -- cached decode (spill-able KV) ---------------------------------------
+
+    def open_kv_cache(self) -> SpillableKVCache:
+        """A fresh spill-able KV cache drawing from this session's pool.
+
+        One at a time: the census reserves exactly ``resident_blocks`` KV
+        slots, so a second open cache would deadlock on slot backpressure.
+        Close it (``finally:``) to return the slots.
+        """
+        if self.decode_spec is None:
+            raise RuntimeError(
+                "session was built without decode=DecodeSpec(...); cached "
+                "decode needs its KV slots sized into the pool census")
+        if self._kv_cache is not None and not self._kv_cache.closed:
+            raise RuntimeError("a KV cache is already open on this session; "
+                               "close it first (its pool slots are shared)")
+        self._kv_cache = SpillableKVCache(
+            list(self._kv_units), self._kv_slot_shape,
+            self.policy.adam.compute_np_dtype, self.pool, self.store,
+            resident_limit=self._kv_resident)
+        return self._kv_cache
+
+    def _decode_state(self, kv: SpillableKVCache) -> DecodeSpec:
+        if self.decode_spec is None:
+            raise RuntimeError("session has no decode spec")
+        if kv.closed:
+            raise RuntimeError("KV cache is closed")
+        return self.decode_spec
+
+    def prefill(self, kv: SpillableKVCache, tokens: np.ndarray) -> np.ndarray:
+        """Prompt pass: cache every block's K/V, return the last valid
+        position's logits as (batch, vocab).  Prompts are right-padded to
+        the spec's time bucket so each prompt-length bucket compiles once.
+        """
+        spec = self._decode_state(kv)
+        tokens = np.asarray(tokens)
+        if tokens.ndim != 2 or tokens.shape[0] != spec.batch:
+            raise ValueError(f"prompts must be (batch={spec.batch}, time), "
+                             f"got {tokens.shape}")
+        if kv.length != 0:
+            raise RuntimeError("prefill on a non-empty KV cache; open a "
+                               "fresh one per generation")
+        t0 = tokens.shape[1]
+        s_bucket = spec.bucket_len(t0)
+        padded = np.zeros((spec.batch, s_bucket), np.int32)
+        padded[:, :t0] = tokens
+        state = _ExecState(padded)
+        state.kv = kv
+        state.last_pos = jnp.asarray(t0 - 1, jnp.int32)
+        state = self.execute(self.plan("prefill"), state)
+        kv.set_length(t0)
+        return np.asarray(state.logits)[:, 0]
+
+    def decode_step(self, kv: SpillableKVCache,
+                    tokens: np.ndarray) -> np.ndarray:
+        """One cached decode step: append ``tokens`` (batch, 1) to the
+        cache, return next-token logits as (batch, vocab).  Per-token cost
+        is O(bucket) — independent of how many tokens were emitted — and
+        every jitted stage retraces only on a bucket crossing.
+        """
+        spec = self._decode_state(kv)
+        tokens = np.asarray(tokens)
+        if tokens.shape != (spec.batch, 1):
+            raise ValueError(f"step tokens must be (batch={spec.batch}, 1), "
+                             f"got {tokens.shape}")
+        if kv.length < 1:
+            raise RuntimeError("decode_step before prefill")
+        if kv.length + 1 > spec.max_seq:
+            raise ValueError(f"KV cache full at max_seq={spec.max_seq}")
+        state = _ExecState(tokens.astype(np.int32))
+        state.kv = kv
+        state.kv_time = spec.bucket_len(kv.length)
+        state.cache_len = jnp.asarray(kv.length, jnp.int32)
+        state = self.execute(self.plan("decode_cached"), state)
+        kv.advance(1)
+        return np.asarray(state.logits)[:, 0]
+
+    def decode_compiles(self) -> int:
+        """Total jit traces across the decode stages — the bench/test probe
+        for "zero retraces after the first token per bucket"."""
+        fns = (self._jit_embed, self._jit_head_logits, self._jit_head_last,
+               self._jit_block_prefill, self._jit_block_step)
+        return sum(f._cache_size() for f in fns if f is not None)
 
     # -- weights access ------------------------------------------------------
 

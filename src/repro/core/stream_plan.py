@@ -3,20 +3,30 @@
 The paper's pipeline (§IV-A, Fig. 5/6) is a *lifecycle* — pool-slot checkout
 → async SSD read → H2D → compute → release — that the seed code hard-coded
 inside ``OffloadedTrainer.train_step``.  This module lifts that lifecycle
-into data: a :class:`StreamPlan` is a linear sequence of four op kinds
+into data: a :class:`StreamPlan` is a linear sequence of six op kinds
 
 * :class:`FetchOp`    — stream one unit's compute weights SSD→pool→device,
 * :class:`ComputeOp`  — run one jitted stage against the resident weights,
 * :class:`GradWriteOp`— spill the stage's parameter grads into the fp32
                         host flat buffer (ZeRO-Infinity's partition buffer),
 * :class:`ReleaseOp`  — drop the unit's device weights,
+* :class:`KVReadOp`   — make the unit's KV cache device-resident (waiting
+                        out an SSD refill if the layer had spilled),
+* :class:`KVWriteOp`  — land freshly produced K/V in the unit's host slot,
+                        spilling onward past the residency budget,
 
 compiled once per workload from an ``OffloadableModel``:
 
 * :func:`compile_train`  — forward + head loss/cotangent + reverse-streamed
                            backward with offloaded gradient checkpointing,
 * :func:`compile_eval`   — forward + head loss only,
-* :func:`compile_decode` — forward + head logits (weight-streamed serving).
+* :func:`compile_decode` — forward + head logits (weight-streamed serving;
+                           uncached full-prefix pass),
+* :func:`compile_prefill` / :func:`compile_decode_cached`
+                         — the cached-decode pair: prompt pass landing
+                           every layer's K/V in the spill-able cache, then
+                           O(1)-context steps (checkout → fetch → KV read →
+                           attend-with-cache → KV append → release/spill).
 
 Because the schedule is explicit, the executor (:class:`~repro.core.session.
 OffloadSession`) can *look ahead*: while block *i* computes, the SSD reads
@@ -29,7 +39,7 @@ same way: an explicit prefetch/eviction schedule rather than inline calls.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 # ComputeOp stage kinds understood by the session executor.
 COMPUTE_KINDS = frozenset({
@@ -38,11 +48,15 @@ COMPUTE_KINDS = frozenset({
     "head_loss_grad",  # loss, head grads, dh = vjp(head_loss)
     "head_loss",     # loss = head_loss(params, h, labels)        (eval)
     "head_logits",   # logits = head_logits(params, h)            (decode)
+    "head_logits_last",  # logits = head_logits(params, h[:, last])  (prefill)
     "block_bwd",     # dparams, dh = vjp(block_apply)(restored checkpoint)
     "embed_bwd",     # dembed = vjp(embed_apply)(tokens cotangent)
+    "block_prefill",  # h, k, v = block_prefill(params, h)   -> kv append
+    "block_step",    # h, k, v = block_step(params, h, kc, vc, len)
 })
 
 _GRAD_KINDS = frozenset({"head_loss_grad", "block_bwd", "embed_bwd"})
+_KV_PRODUCING_KINDS = frozenset({"block_prefill", "block_step"})
 
 
 @dataclass(frozen=True)
@@ -76,7 +90,24 @@ class ReleaseOp:
     unit: str
 
 
-Op = FetchOp | ComputeOp | GradWriteOp | ReleaseOp
+@dataclass(frozen=True)
+class KVReadOp:
+    """Make the unit's KV cache device-resident for its ``block_step``:
+    wait out any in-flight SSD refill, H2D the current time bucket."""
+
+    unit: str
+
+
+@dataclass(frozen=True)
+class KVWriteOp:
+    """Land the unit's freshly produced K/V in its host pool slot (one
+    token for ``block_step``, the whole prompt for ``block_prefill``),
+    spilling to SSD if the residency budget is exceeded."""
+
+    unit: str
+
+
+Op = FetchOp | ComputeOp | GradWriteOp | ReleaseOp | KVReadOp | KVWriteOp
 
 
 class PlanError(ValueError):
@@ -111,11 +142,16 @@ class StreamPlan:
         * GradWriteOp must follow a grad-producing ComputeOp for its unit,
         * ``block_bwd`` consumes a checkpoint a prior ``save_input`` op
           saved for its unit, and every saved checkpoint is consumed
-          (host checkpoint memory is returned).
+          (host checkpoint memory is returned),
+        * ``block_step`` consumes a prior KVReadOp for its unit, every
+          KVReadOp is consumed, and every KV-producing compute is landed by
+          a KVWriteOp (device K/V is never silently dropped).
         """
         resident: set[str] = set()
         pending_grads: set[str] = set()
         saved_inputs: set[str] = set()
+        kv_loaded: set[str] = set()
+        pending_kv: set[str] = set()
         for i, op in enumerate(self.ops):
             where = f"{self.name}[{i}]"
             if isinstance(op, FetchOp):
@@ -142,6 +178,26 @@ class StreamPlan:
                     saved_inputs.discard(op.unit)
                 if op.kind in _GRAD_KINDS:
                     pending_grads.add(op.unit)
+                if op.kind == "block_step":
+                    if op.unit not in kv_loaded:
+                        raise PlanError(f"{where}: block_step for {op.unit!r}"
+                                        f" with no KV read")
+                    kv_loaded.discard(op.unit)
+                if op.kind in _KV_PRODUCING_KINDS:
+                    if op.unit in pending_kv:
+                        raise PlanError(f"{where}: {op.unit!r} already has "
+                                        f"unwritten K/V")
+                    pending_kv.add(op.unit)
+            elif isinstance(op, KVReadOp):
+                if op.unit in kv_loaded:
+                    raise PlanError(f"{where}: double KV read for "
+                                    f"{op.unit!r}")
+                kv_loaded.add(op.unit)
+            elif isinstance(op, KVWriteOp):
+                if op.unit not in pending_kv:
+                    raise PlanError(f"{where}: KV write for {op.unit!r} "
+                                    f"with no K/V produced")
+                pending_kv.discard(op.unit)
             elif isinstance(op, GradWriteOp):
                 if op.unit not in pending_grads:
                     raise PlanError(f"{where}: grad write for {op.unit!r} "
@@ -163,6 +219,12 @@ class StreamPlan:
         if saved_inputs:
             raise PlanError(f"{self.name}: checkpoints never restored: "
                             f"{sorted(saved_inputs)}")
+        if kv_loaded:
+            raise PlanError(f"{self.name}: KV reads never consumed: "
+                            f"{sorted(kv_loaded)}")
+        if pending_kv:
+            raise PlanError(f"{self.name}: K/V never written: "
+                            f"{sorted(pending_kv)}")
 
 
 # ---------------------------------------------------------------------------
@@ -223,8 +285,51 @@ def compile_decode(model) -> StreamPlan:
     return StreamPlan("decode", tuple(ops))
 
 
+def _require_cached_applies(model) -> None:
+    for attr in ("head_logits", "block_prefill", "block_step"):
+        if getattr(model, attr, None) is None:
+            raise PlanError(
+                f"model has no {attr} apply; cached decode plans need one "
+                f"(see model_adapter.make_offloadable_lm — attention-mixer "
+                f"families only)")
+
+
+def compile_prefill(model) -> StreamPlan:
+    """Prompt pass of cached decode: every block streams once, computes
+    full-sequence attention, and lands its K/V in the spill-able cache;
+    the head emits logits at the last prompt position only."""
+    _require_cached_applies(model)
+    embed, blocks, head = _unit_names(model)
+    ops: list[Op] = [FetchOp(embed), ComputeOp(embed, "embed"),
+                     ReleaseOp(embed)]
+    for b in blocks:
+        ops += [FetchOp(b), ComputeOp(b, "block_prefill"), KVWriteOp(b),
+                ReleaseOp(b)]
+    ops += [FetchOp(head), ComputeOp(head, "head_logits_last"),
+            ReleaseOp(head)]
+    return StreamPlan("prefill", tuple(ops))
+
+
+def compile_decode_cached(model) -> StreamPlan:
+    """One O(1)-context decode step: per block, checkout → fetch weights →
+    KV read (refill from SSD if spilled) → attend-with-cache → KV append →
+    release/spill.  The (batch, 1) shapes are fixed, so every stage
+    compiles once per time bucket."""
+    _require_cached_applies(model)
+    embed, blocks, head = _unit_names(model)
+    ops: list[Op] = [FetchOp(embed), ComputeOp(embed, "embed"),
+                     ReleaseOp(embed)]
+    for b in blocks:
+        ops += [FetchOp(b), KVReadOp(b), ComputeOp(b, "block_step"),
+                KVWriteOp(b), ReleaseOp(b)]
+    ops += [FetchOp(head), ComputeOp(head, "head_logits"), ReleaseOp(head)]
+    return StreamPlan("decode_cached", tuple(ops))
+
+
 PLAN_COMPILERS = {
     "train": compile_train,
     "eval": compile_eval,
     "decode": compile_decode,
+    "prefill": compile_prefill,
+    "decode_cached": compile_decode_cached,
 }

@@ -44,12 +44,8 @@ def _swa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
     q_start = iq * block_q
     k_start = ik * block_k
-    # static band check: can this (iq, ik) tile contain any live entries?
-    live = True
-    if causal:
-        live = k_start <= q_start + block_q - 1
-    # (window check is dynamic-friendly but block indices are traced values;
-    #  predication below handles it uniformly)
+    # band check: block indices are traced values, so the any_live
+    # predication below handles causal and window limits uniformly
 
     q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
     k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
@@ -79,8 +75,8 @@ def _swa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
     @pl.when(ik == n_k - 1)
     def _finalize():
-        l = jnp.maximum(l_scr[:, :1], 1e-30)
-        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+        denom = jnp.maximum(l_scr[:, :1], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
 
 
 def swa_attention_pallas(q, k, v, *, window: int = 0, causal: bool = True,

@@ -14,12 +14,11 @@ head simply stay replicated on that dim rather than failing to lower.
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig, InputShape
+from repro.configs.base import ModelConfig
 from .mesh import batch_axes
 
 

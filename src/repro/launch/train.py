@@ -23,9 +23,8 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.configs import ARCHS, get_config
+from repro.configs import get_config
 from repro.core.loss_scale import DynamicLossScaler
 from repro.core.offload_engine import OffloadPolicy
 from repro.core.session import OffloadSession

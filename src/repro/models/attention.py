@@ -152,6 +152,62 @@ def gqa_decode(params, x, cfg, cache, cache_len):
 
 
 # ---------------------------------------------------------------------------
+# GQA with an explicit fixed-shape cache (SSD-offloaded cached decode)
+# ---------------------------------------------------------------------------
+#
+# The offloaded serve path keeps per-layer KV in *host* pool slots and
+# streams a fixed time-bucket to the device per step, so these functions
+# take the cache as plain (B, S_bucket, KH, D) arrays plus a traced
+# ``cache_len`` scalar — no in-graph cache update, no donation.  Entries at
+# positions >= cache_len are garbage (pool slots are recycled memory) and
+# are masked out exactly, so results match the uncached full-prefix pass.
+
+def gqa_prefill(params, x, cfg, *, window=None):
+    """Full-sequence attention that also returns the pre-repeat K/V to
+    cache.  x may be right-padded past the true prompt length: causal
+    masking keeps padded keys out of every valid query's softmax."""
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = gqa_project_qkv(params, x, cfg, positions)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    w = cfg.sliding_window if window is None else window
+    out = attention_scores(q, _repeat_kv(k, n_rep), _repeat_kv(v, n_rep),
+                           causal=True, window=w)
+    return dense(out.reshape(b, s, -1), params["attn.w_o"]), k, v
+
+
+def gqa_step(params, x, cfg, k_cache, v_cache, cache_len, *, window=None):
+    """One-token attention against a host-fed cache slice.
+
+    x: (B, 1, D); k_cache/v_cache: (B, S_bucket, KH, D) with positions
+    < cache_len valid; cache_len: traced int scalar (no retrace per token).
+    Returns (out, k_new, v_new) — the caller appends the (B, 1, KH, D)
+    slices to the host cache at position cache_len.
+    """
+    b, one, _ = x.shape
+    positions = jnp.full((b, 1), cache_len, dtype=jnp.int32)
+    q, k_new, v_new = gqa_project_qkv(params, x, cfg, positions)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    kk = _repeat_kv(jnp.concatenate([k_cache, k_new], axis=1), n_rep)
+    vv = _repeat_kv(jnp.concatenate([v_cache, v_new], axis=1), n_rep)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kk,
+                        preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(cfg.head_dim)
+    s_bucket = k_cache.shape[1]
+    idx = jnp.arange(s_bucket + 1)
+    pos = jnp.where(idx == s_bucket, cache_len, idx)  # new token's position
+    valid = (idx < cache_len) | (idx == s_bucket)
+    w = cfg.sliding_window if window is None else window
+    if w:
+        valid = valid & (pos > cache_len - w)
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv).astype(x.dtype)
+    out = dense(out.reshape(b, 1, -1), params["attn.w_o"])
+    return out, k_new, v_new
+
+
+# ---------------------------------------------------------------------------
 # MLA: DeepSeek-V3 multi-head latent attention
 # ---------------------------------------------------------------------------
 
@@ -190,7 +246,6 @@ def mla_expand_kv(params, c_kv, k_rope, cfg):
     return k, v
 
 def mla_attention(params, x, cfg, *, causal=True, window=None):
-    m = cfg.mla
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s), (b, s))
     q = mla_project_q(params, x, cfg, positions)

@@ -21,9 +21,8 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.configs.base import ModelConfig, InputShape, INPUT_SHAPES
+from repro.configs.base import ModelConfig, InputShape
 from . import transformer as tfm
 from . import whisper as whs
 

@@ -27,11 +27,9 @@ mLSTM, (h, c, n) for sLSTM.
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from . import mamba as mamba_mod
@@ -176,6 +174,25 @@ def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
 # Layer application (full-sequence)
 # ---------------------------------------------------------------------------
 
+def apply_ffn(cfg: ModelConfig, fk: str, params, h):
+    """Pre-norm FFN residual half of a block.  Returns (h, aux_loss).
+
+    Shared by the full-sequence path, the jitted decode path, and the
+    offload adapter's cached-decode applies — one definition keeps every
+    execution mode numerically identical.
+    """
+    aux = jnp.zeros((), jnp.float32)
+    if fk == "none":
+        return h, aux
+    hn = rms_norm(h, params["norm_ffn"], cfg.rms_eps)
+    if fk == "dense":
+        out = gated_mlp(hn, params["ffn.w_up"], params["ffn.w_down"],
+                        cfg.gated_act, w_gate=params.get("ffn.w_gate"))
+    else:
+        out, aux = moe_ffn(params, hn, cfg)
+    return h + out, aux
+
+
 def apply_layer(cfg: ModelConfig, kinds: tuple[str, str], params, h, *,
                 prefix_len: int = 0, causal: bool = True):
     """Pre-norm residual block: mixer + FFN.  Returns (h, aux_loss)."""
@@ -194,17 +211,7 @@ def apply_layer(cfg: ModelConfig, kinds: tuple[str, str], params, h, *,
         mix = xlstm_mod.slstm_mixer(params, hn, cfg)
     else:
         raise ValueError(mk)
-    h = h + mix
-    aux = jnp.zeros((), jnp.float32)
-    if fk != "none":
-        hn = rms_norm(h, params["norm_ffn"], cfg.rms_eps)
-        if fk == "dense":
-            out = gated_mlp(hn, params["ffn.w_up"], params["ffn.w_down"],
-                            cfg.gated_act, w_gate=params.get("ffn.w_gate"))
-        else:
-            out, aux = moe_ffn(params, hn, cfg)
-        h = h + out
-    return h, aux
+    return apply_ffn(cfg, fk, params, h + mix)
 
 
 def forward(cfg: ModelConfig, params, h, *, prefix_len: int = 0,
@@ -374,15 +381,7 @@ def apply_layer_decode(cfg, kinds, params, h, cache, cache_len):
         mix, cache = xlstm_mod.slstm_decode(params, hn, cfg, cache)
     else:
         raise ValueError(mk)
-    h = h + mix
-    if fk != "none":
-        hn = rms_norm(h, params["norm_ffn"], cfg.rms_eps)
-        if fk == "dense":
-            out = gated_mlp(hn, params["ffn.w_up"], params["ffn.w_down"],
-                            cfg.gated_act, w_gate=params.get("ffn.w_gate"))
-        else:
-            out, _ = moe_ffn(params, hn, cfg)
-        h = h + out
+    h, _aux = apply_ffn(cfg, fk, params, h + mix)
     return h, cache
 
 

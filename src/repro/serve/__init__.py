@@ -1,4 +1,6 @@
+from repro.core.kv_cache import DecodeSpec
+
 from .decode import build_serve_step
 from .offloaded import OffloadedDecoder
 
-__all__ = ["build_serve_step", "OffloadedDecoder"]
+__all__ = ["build_serve_step", "DecodeSpec", "OffloadedDecoder"]

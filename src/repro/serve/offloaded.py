@@ -3,21 +3,31 @@
 Opens the paper's pipeline to a new workload: generation on a host whose
 DRAM cannot hold the model.  Weights stay on SSD; every decode step streams
 them block-by-block through the same pool-slot → async-read → H2D → compute
-→ release lifecycle as training, executed from a ``decode`` StreamPlan with
-lookahead pipelining (block *i+1*'s SSD read overlaps block *i*'s compute).
+→ release lifecycle as training, executed from StreamPlans with lookahead
+pipelining (block *i+1*'s SSD read overlaps block *i*'s compute).
 
-This is throughput-oriented batch decoding: each emitted token re-runs the
-full prefix through the streamed stack (no KV cache — per-layer caches
-would pin host memory the offload budget doesn't have; a spill-able KV
-cache is a ROADMAP follow-on).  The jitted serve path with device-resident
-weights and donated caches lives in :mod:`repro.serve.decode`; this module
-is its SSD-offloaded counterpart.
+Two serving modes:
+
+* **cached** (default when the session carries a
+  :class:`~repro.core.kv_cache.DecodeSpec`): prefill-then-step over a
+  spill-able KV cache.  Per-layer K/V lives in pool slots inside the same
+  pinned arena as the weight staging buffers, spilling to SSD past the
+  residency budget, so per-token cost is O(bucket) — independent of how
+  many tokens were emitted — and each time bucket jit-compiles once.
+* **uncached**: the PR-1 behaviour — every emitted token re-runs the full
+  prefix (O(T²) compute, a retrace per step).  Kept as the ablation
+  baseline (``benchmarks/bench_decode.py``) and for model families without
+  cached-decode applies (mamba/xLSTM mixers).
+
+The jitted serve path with device-resident weights and donated caches lives
+in :mod:`repro.serve.decode`; this module is its SSD-offloaded counterpart.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
+from repro.core.kv_cache import DecodeSpec
 from repro.core.session import OffloadSession
 
 
@@ -26,12 +36,27 @@ class OffloadedDecoder:
 
     Wraps a serve-mode :class:`OffloadSession` (no optimizer state on the
     store, no gradient flat buffer) unless an open session is handed in.
+    Pass ``decode=DecodeSpec(...)`` to size the session's pool for the
+    spill-able KV cache and enable O(T) cached generation.
     Context manager; closing releases the pool arena and store.
+
+    Token contract (validated once, here): prompts/tokens are
+    ``(batch, time)`` arrays of non-negative integer ids, any integer
+    dtype, converted to int32.  Floats, scalars, and flat arrays are
+    rejected rather than silently cast.
     """
 
-    def __init__(self, model, policy, *, session: OffloadSession | None = None):
-        self.session = session or OffloadSession(model, policy, mode="serve")
+    def __init__(self, model, policy, *,
+                 session: OffloadSession | None = None,
+                 decode: DecodeSpec | None = None):
+        if session is not None and decode is not None:
+            raise ValueError("pass decode= when the decoder owns the "
+                             "session; an existing session already fixed "
+                             "its pool census")
+        self.session = session or OffloadSession(model, policy, mode="serve",
+                                                 decode=decode)
         self._owns_session = session is None
+        self.kv_stats: dict | None = None   # last cached generate()'s stats
 
     def __enter__(self) -> "OffloadedDecoder":
         return self
@@ -43,20 +68,81 @@ class OffloadedDecoder:
         if self._owns_session:
             self.session.close()
 
+    @property
+    def decode_spec(self) -> DecodeSpec | None:
+        return self.session.decode_spec
+
+    @staticmethod
+    def _validate_tokens(tokens, name: str = "tokens") -> np.ndarray:
+        """Enforce the token contract; returns a contiguous int32 copy."""
+        arr = np.asarray(tokens)
+        if arr.ndim != 2:
+            raise ValueError(f"{name} must be (batch, time), got shape "
+                             f"{arr.shape}")
+        if not np.issubdtype(arr.dtype, np.integer):
+            raise TypeError(f"{name} must hold integer token ids, got "
+                            f"dtype {arr.dtype}")
+        if arr.size and int(arr.min()) < 0:
+            raise ValueError(f"{name} holds negative token ids")
+        return np.ascontiguousarray(arr, dtype=np.int32)
+
     def step_logits(self, tokens: np.ndarray) -> np.ndarray:
-        """Next-token logits for a (batch, time) prompt — one streamed pass."""
+        """Next-token logits for a (batch, time) prompt — one full streamed
+        pass (uncached; see :meth:`generate` for the cached loop)."""
+        tokens = self._validate_tokens(tokens)
         logits = self.session.decode_logits(tokens)
         return logits[:, -1, :]
 
-    def generate(self, prompts: np.ndarray, new_tokens: int) -> np.ndarray:
-        """Greedy-decode ``new_tokens`` per request; returns (batch, new)."""
-        tokens = np.asarray(prompts, dtype=np.int32)
-        if tokens.ndim != 2:
-            raise ValueError(f"prompts must be (batch, time), got "
-                             f"{tokens.shape}")
+    def generate(self, prompts: np.ndarray, new_tokens: int, *,
+                 use_cache: bool | None = None) -> np.ndarray:
+        """Greedy-decode ``new_tokens`` per request; returns (batch, new).
+
+        ``use_cache=None`` picks cached decode whenever the session has a
+        DecodeSpec; ``use_cache=False`` forces the O(T²) full-prefix path
+        (the bench ablation).
+        """
+        tokens = self._validate_tokens(prompts, name="prompts")
+        if tokens.shape[1] < 1:
+            raise ValueError("prompts must hold at least one token")
+        if new_tokens < 1:
+            raise ValueError(f"new_tokens must be >= 1, got {new_tokens}")
+        spec = self.session.decode_spec
+        cached = (spec is not None) if use_cache is None else use_cache
+        if not cached:
+            return self._generate_uncached(tokens, new_tokens)
+        if spec is None:
+            raise RuntimeError(
+                "use_cache=True needs a session built with "
+                "decode=DecodeSpec(...) so the pool census has KV slots")
+        batch, t0 = tokens.shape
+        if batch != spec.batch:
+            raise ValueError(f"prompts batch {batch} != DecodeSpec batch "
+                             f"{spec.batch} (jit shapes are fixed)")
+        if t0 + new_tokens > spec.max_seq:
+            raise ValueError(
+                f"prompt ({t0}) + new_tokens ({new_tokens}) exceeds "
+                f"DecodeSpec max_seq {spec.max_seq}")
+        kv = self.session.open_kv_cache()
+        try:
+            logits = self.session.prefill(kv, tokens)
+            out = []
+            for i in range(new_tokens):
+                nxt = np.argmax(logits, axis=-1).astype(np.int32)
+                out.append(nxt)
+                if i + 1 < new_tokens:
+                    logits = self.session.decode_step(kv, nxt[:, None])
+            return np.stack(out, axis=1)
+        finally:
+            self.kv_stats = kv.stats.snapshot()
+            kv.close()
+
+    def _generate_uncached(self, tokens: np.ndarray,
+                           new_tokens: int) -> np.ndarray:
+        """Full-prefix re-run per token (the PR-1 path; O(T²) ablation)."""
         out = []
         for _ in range(new_tokens):
-            nxt = np.argmax(self.step_logits(tokens), axis=-1).astype(np.int32)
+            nxt = np.argmax(self.step_logits(tokens), axis=-1)
+            nxt = nxt.astype(np.int32)
             out.append(nxt)
             tokens = np.concatenate([tokens, nxt[:, None]], axis=1)
         return np.stack(out, axis=1)

@@ -16,12 +16,10 @@ what a ZeRO-Infinity-class system lowers to the device — with
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, InputShape
 from repro.core.overflow import fused_overflow_check_jnp
 from repro.launch import sharding as shd
 from repro.models.registry import ModelImpl

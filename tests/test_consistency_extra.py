@@ -18,7 +18,6 @@ import pytest
 
 from repro.configs import ARCHS
 from repro.models import build
-from repro.models import transformer as tfm
 from repro.models import whisper as whs
 
 KEY = jax.random.PRNGKey(0)

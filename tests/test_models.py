@@ -51,7 +51,6 @@ def test_smoke_prefill_shapes(arch):
     b, s = 2, 64
     batch = _batch(cfg, b, s)
     logits = jax.jit(impl.prefill_fn)(params, batch)
-    exp_s = s if not cfg.prefix_len else s - 0  # image prefix adds positions
     assert logits.shape[0] == b and logits.shape[-1] == cfg.vocab
     assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
 

@@ -3,7 +3,6 @@ Fig. 19), and the memory ordering the paper claims."""
 
 import jax
 import numpy as np
-import pytest
 
 from repro.configs.base import ModelConfig
 from repro.core import (OffloadedTrainer, memascend_policy,

@@ -1,0 +1,326 @@
+"""Cached offloaded decode: the spill-able KV cache, bucketed compile-once
+stepping, token-identical equivalence with the uncached path, and the
+validated token contract."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import (ComputeOp, DecodeSpec, FetchOp, KVReadOp, KVWriteOp,
+                        OffloadSession, PlanError, ReleaseOp, SpillableKVCache,
+                        StreamPlan, memascend_policy)
+from repro.core.buffer_pool import (KV_CLASS, AdaptiveBufferPool, PoolCensus,
+                                    ShapeClass)
+from repro.core.model_adapter import make_offloadable_lm
+from repro.core.nvme import FilesystemEngine
+from repro.core.pinned_alloc import AlignmentFreeAllocator
+from repro.serve import OffloadedDecoder
+
+CFG = ModelConfig(name="tiny", family="dense", n_layers=3, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab=256)
+
+
+def _model(seed=0):
+    return make_offloadable_lm(CFG, jax.random.PRNGKey(seed))
+
+
+def _prompts(batch=2, seq=6, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(3, CFG.vocab, size=(batch, seq), dtype=np.int32)
+
+
+# -- equivalence with the uncached path ---------------------------------------
+
+@pytest.mark.parametrize("resident_blocks", [None, 2])
+def test_cached_matches_uncached_argmax(tmp_store_root, resident_blocks):
+    """Cached decode (all-resident AND spilling) emits token-identical
+    greedy output to the full-prefix re-run path on a fixed prompt set."""
+    prompts = _prompts()
+    spec = DecodeSpec(batch=2, max_seq=32, bucket=8,
+                      resident_blocks=resident_blocks)
+    with OffloadedDecoder(_model(), memascend_policy(tmp_store_root + "c",
+                                                     lr=1e-3),
+                          decode=spec) as dec:
+        cached = dec.generate(prompts, 8)
+    with OffloadedDecoder(_model(), memascend_policy(tmp_store_root + "u",
+                                                     lr=1e-3)) as dec:
+        uncached = dec.generate(prompts, 8)
+    np.testing.assert_array_equal(cached, uncached)
+
+
+def test_use_cache_false_forces_uncached_path(tmp_store_root):
+    prompts = _prompts()
+    spec = DecodeSpec(batch=2, max_seq=32, bucket=8)
+    with OffloadedDecoder(_model(), memascend_policy(tmp_store_root,
+                                                     lr=1e-3),
+                          decode=spec) as dec:
+        cached = dec.generate(prompts, 4)
+        uncached = dec.generate(prompts, 4, use_cache=False)
+        np.testing.assert_array_equal(cached, uncached)
+        assert dec.kv_stats is not None   # the cached run recorded stats
+
+
+# -- bucketing: boundary crossings + compile-once ------------------------------
+
+def test_bucket_boundary_crossing_stays_exact(tmp_store_root):
+    """Generation crossing several time buckets (prompt pad, then two
+    device-cache growths) matches the uncached path token for token."""
+    prompts = _prompts(seq=3)
+    spec = DecodeSpec(batch=2, max_seq=16, bucket=4)
+    with OffloadedDecoder(_model(), memascend_policy(tmp_store_root + "c",
+                                                     lr=1e-3),
+                          decode=spec) as dec:
+        cached = dec.generate(prompts, 12)   # positions 3..14, buckets 4/8/12
+    with OffloadedDecoder(_model(), memascend_policy(tmp_store_root + "u",
+                                                     lr=1e-3)) as dec:
+        uncached = dec.generate(prompts, 12)
+    np.testing.assert_array_equal(cached, uncached)
+
+
+def test_zero_retraces_after_first_token_per_bucket(tmp_store_root):
+    """Each bucket traces once: a warm repeat of the same generation —
+    which revisits every bucket — compiles nothing new, and within one
+    bucket every step after the first reuses the trace."""
+    prompts = _prompts(seq=3)
+    spec = DecodeSpec(batch=2, max_seq=32, bucket=4)
+    with OffloadedDecoder(_model(), memascend_policy(tmp_store_root,
+                                                     lr=1e-3),
+                          decode=spec) as dec:
+        s = dec.session
+        dec.generate(prompts, 10)
+        warm = s.decode_compiles()
+        dec.generate(prompts, 10)
+        assert s.decode_compiles() == warm
+
+        # step-by-step inside one fresh bucket: only the crossing retraces
+        kv = s.open_kv_cache()
+        try:
+            logits = s.prefill(kv, prompts)           # length 3, bucket 4
+            nxt = np.argmax(logits, axis=-1).astype(np.int32)[:, None]
+            s.decode_step(kv, nxt)                    # length 3 -> 4
+            s.decode_step(kv, nxt)                    # crosses into bucket 8
+            after_crossing = s.decode_compiles()
+            for _ in range(3):                        # stays inside bucket 8
+                s.decode_step(kv, nxt)
+            assert s.decode_compiles() == after_crossing
+        finally:
+            kv.close()
+
+
+# -- the KV cache itself -------------------------------------------------------
+
+def _kv_fixture(tmp_store_root, units=("a", "b", "c"), resident=2,
+                shape=(2, 1, 4, 1, 2)):
+    from repro.core import MemoryTracker
+    nbytes = int(np.prod(shape)) * 4
+    census = PoolCensus((ShapeClass("w", 64, per_block=1),),
+                        inflight_blocks=1).with_kv(nbytes, resident)
+    alloc = AlignmentFreeAllocator(tracker=MemoryTracker(),
+                                   component="pinned", backing="numpy")
+    pool = AdaptiveBufferPool(census, alloc)
+    store = FilesystemEngine(tmp_store_root)
+    kv = SpillableKVCache(list(units), shape, np.float32, pool, store,
+                          resident_limit=resident)
+    return kv, pool, store
+
+
+def test_kv_spill_refill_round_trip(tmp_store_root):
+    """Data written before a spill comes back bit-identical after the
+    refill, through the real store."""
+    kv, pool, store = _kv_fixture(tmp_store_root)
+    rng = np.random.default_rng(0)
+    k = rng.standard_normal((1, 3, 1, 2), dtype=np.float32)
+    v = rng.standard_normal((1, 3, 1, 2), dtype=np.float32)
+    # 3 units through a 2-slot budget: spill-after-use evicts immediately
+    kv.write_prefill("a", k, v)
+    assert kv.stats.spills >= 1 and store.contains("kv/a")
+    view = kv.ensure("a")                      # sync refill from SSD
+    np.testing.assert_array_equal(view[0][:, :3], k)
+    np.testing.assert_array_equal(view[1][:, :3], v)
+    assert kv.stats.refills == 1 and kv.stats.sync_refills == 1
+    kv.close()
+    assert pool.in_use_payload == 0
+    kv.close()   # idempotent
+
+
+def test_kv_prefetch_overlaps_and_hits(tmp_store_root):
+    kv, pool, _store = _kv_fixture(tmp_store_root)
+    z = np.zeros((1, 4, 1, 2), np.float32)
+    for u in ("a", "b", "c"):
+        kv.write_prefill(u, z, z)              # all spilled (keep budget 0)
+    kv.prefetch("b")
+    view = kv.ensure("b")
+    assert view.shape == (2, 1, 4, 1, 2)
+    assert kv.stats.prefetch_refills == 1
+    kv.prefetch("b")                           # resident: no-op
+    assert kv.stats.prefetch_refills == 1
+    kv.close()
+    assert pool.in_use_payload == 0
+
+
+def test_kv_cache_full_and_length_bounds(tmp_store_root):
+    kv, _pool, _store = _kv_fixture(tmp_store_root, units=("a",), resident=1)
+    kv.set_length(4)
+    one = np.zeros((1, 1, 1, 2), np.float32)
+    with pytest.raises(ValueError, match="full"):
+        kv.append("a", one, one)
+    with pytest.raises(ValueError, match="outside"):
+        kv.set_length(5)
+    kv.close()
+
+
+def test_kv_resident_limit_validation(tmp_store_root):
+    with pytest.raises(ValueError, match="resident_limit"):
+        _kv_fixture(tmp_store_root, units=("a", "b", "c"), resident=1)
+
+
+# -- pool integration ----------------------------------------------------------
+
+def test_session_census_reserves_kv_slots(tmp_store_root):
+    spec = DecodeSpec(batch=2, max_seq=16, bucket=8, resident_blocks=2)
+    with OffloadSession(_model(), memascend_policy(tmp_store_root, lr=1e-3),
+                        mode="serve", decode=spec) as s:
+        stats = s.pool.stats()
+        assert stats["slots"][KV_CLASS] == 2
+        expected = 2 * 2 * 16 * CFG.n_kv_heads * CFG.head_dim * 2  # bf16
+        assert stats["slot_size"][KV_CLASS] == expected
+
+
+def test_pool_slots_released_on_mid_generate_failure(tmp_store_root):
+    """A block_step failure mid-generate must leak nothing: weight slots
+    drain via the executor's error path, KV slots via generate's finally."""
+    prompts = _prompts()
+    spec = DecodeSpec(batch=2, max_seq=32, bucket=8, resident_blocks=2)
+    dec = OffloadedDecoder(_model(), memascend_policy(tmp_store_root,
+                                                      lr=1e-3), decode=spec)
+    s = dec.session
+    calls = {"n": 0}
+    real_step = s._jit_block_step
+
+    def flaky_step(params, h, k, v, cache_len):
+        calls["n"] += 1
+        if calls["n"] == 4:     # second decode step, mid-stack
+            raise RuntimeError("injected step failure")
+        return real_step(params, h, k, v, cache_len)
+
+    s._jit_block_step = flaky_step
+    with pytest.raises(RuntimeError, match="injected"):
+        dec.generate(prompts, 8)
+    assert s.pool.in_use_payload == 0          # weights AND kv slots back
+    assert len(s.swapper._inflight) == 0
+    assert dec.kv_stats is not None
+    # the session is still usable: a fresh cache can be opened
+    s._jit_block_step = real_step
+    gen = dec.generate(prompts, 2)
+    assert gen.shape == (2, 2)
+    dec.close()
+    s.tracker.assert_quiescent()
+
+
+def test_only_one_open_kv_cache(tmp_store_root):
+    spec = DecodeSpec(batch=1, max_seq=8, bucket=8)
+    with OffloadSession(_model(), memascend_policy(tmp_store_root, lr=1e-3),
+                        mode="serve", decode=spec) as s:
+        kv = s.open_kv_cache()
+        with pytest.raises(RuntimeError, match="already open"):
+            s.open_kv_cache()
+        kv.close()
+        s.open_kv_cache().close()
+
+
+# -- the validated token contract ---------------------------------------------
+
+def test_token_contract_rejects_bad_inputs(tmp_store_root):
+    spec = DecodeSpec(batch=2, max_seq=16, bucket=8)
+    with OffloadedDecoder(_model(), memascend_policy(tmp_store_root,
+                                                     lr=1e-3),
+                          decode=spec) as dec:
+        good = _prompts(seq=4)
+        with pytest.raises(TypeError, match="integer"):
+            dec.step_logits(good.astype(np.float32))
+        with pytest.raises(ValueError, match=r"\(batch, time\)"):
+            dec.step_logits(good[0])
+        with pytest.raises(ValueError, match="negative"):
+            dec.generate(good - 500, 2)
+        with pytest.raises(ValueError, match="new_tokens"):
+            dec.generate(good, 0)
+        with pytest.raises(ValueError, match="batch"):
+            dec.generate(_prompts(batch=3, seq=4), 2)
+        with pytest.raises(ValueError, match="max_seq"):
+            dec.generate(good, 13)
+        # int64 ids are fine — converted, not rejected
+        gen = dec.generate(good.astype(np.int64), 2)
+        assert gen.dtype == np.int32 and gen.shape == (2, 2)
+
+
+def test_use_cache_requires_decode_spec(tmp_store_root):
+    with OffloadedDecoder(_model(), memascend_policy(tmp_store_root,
+                                                     lr=1e-3)) as dec:
+        assert dec.decode_spec is None
+        with pytest.raises(RuntimeError, match="DecodeSpec"):
+            dec.generate(_prompts(), 2, use_cache=True)
+
+
+def test_decoder_rejects_session_plus_decode(tmp_store_root):
+    with OffloadSession(_model(), memascend_policy(tmp_store_root, lr=1e-3),
+                        mode="serve") as s:
+        with pytest.raises(ValueError, match="decode="):
+            OffloadedDecoder(None, None, session=s,
+                             decode=DecodeSpec(batch=1, max_seq=8, bucket=8))
+
+
+def test_decode_spec_validation():
+    with pytest.raises(ValueError, match="resident_blocks"):
+        DecodeSpec(batch=1, max_seq=8, bucket=8, resident_blocks=1)
+    with pytest.raises(ValueError, match="bucket"):
+        DecodeSpec(batch=1, max_seq=8, bucket=16)
+    with pytest.raises(ValueError, match="batch"):
+        DecodeSpec(batch=0, max_seq=8, bucket=8)
+    spec = DecodeSpec(batch=1, max_seq=20, bucket=8)
+    assert spec.bucket_len(1) == 8
+    assert spec.bucket_len(8) == 8
+    assert spec.bucket_len(9) == 16
+    assert spec.bucket_len(17) == 20   # clamped to capacity
+    with pytest.raises(ValueError, match="exceeds"):
+        spec.bucket_len(21)
+
+
+def test_session_requires_cached_applies(tmp_store_root):
+    headless = dataclasses.replace(_model(), block_step=None)
+    with pytest.raises(ValueError, match="cached-decode applies"):
+        OffloadSession(headless, memascend_policy(tmp_store_root, lr=1e-3),
+                       mode="serve",
+                       decode=DecodeSpec(batch=1, max_seq=8, bucket=8))
+
+
+# -- plan validator: the KV lifecycle ------------------------------------------
+
+def test_validator_step_without_kv_read():
+    with pytest.raises(PlanError, match="no KV read"):
+        StreamPlan("bad", (FetchOp("u"), ComputeOp("u", "block_step"),
+                           KVWriteOp("u"), ReleaseOp("u")))
+
+
+def test_validator_double_kv_read():
+    with pytest.raises(PlanError, match="double KV read"):
+        StreamPlan("bad", (KVReadOp("u"), KVReadOp("u")))
+
+
+def test_validator_kv_write_without_produce():
+    with pytest.raises(PlanError, match="no K/V produced"):
+        StreamPlan("bad", (KVWriteOp("u"),))
+
+
+def test_validator_kv_read_never_consumed():
+    with pytest.raises(PlanError, match="never consumed"):
+        StreamPlan("bad", (KVReadOp("u"),))
+
+
+def test_validator_kv_never_written():
+    with pytest.raises(PlanError, match="never written"):
+        StreamPlan("bad", (FetchOp("u"),
+                           ComputeOp("u", "block_prefill"),
+                           ReleaseOp("u")))

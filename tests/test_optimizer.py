@@ -1,7 +1,6 @@
 """Host Adam: streamed subgroups vs in-memory reference; bf16 state mode."""
 
 import numpy as np
-import pytest
 
 from repro.core import (AdamConfig, DirectNVMeEngine, MemoryTracker,
                         OffloadedAdam, adam_update)

@@ -3,7 +3,6 @@ reproducing the paper's headline claims at container scale."""
 
 import jax
 import numpy as np
-import pytest
 
 from repro.configs import ARCHS, PAPER_MODELS
 from repro.configs.base import ModelConfig
