@@ -31,6 +31,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import DecodeSpec, OffloadPolicy
 from repro.core.model_adapter import make_offloadable_lm
+from repro.core.session import jit_cache_size
 from repro.serve import OffloadedDecoder
 
 from .common import emit
@@ -51,9 +52,10 @@ OUT_PATH = "BENCH_decode.json"
 
 
 def _decode_compiles(session) -> int:
-    """Trace count across whichever stages this path jits."""
+    """Trace count across whichever stages this path jits (the guarded
+    probe in repro.core.session owns the private-jax-API touch point)."""
     cached = session.decode_compiles()
-    uncached = session._jit_block._cache_size()
+    uncached = jit_cache_size(session._jit_block)
     return cached + uncached
 
 

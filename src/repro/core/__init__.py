@@ -10,6 +10,8 @@ Public surface:
 * SSD tensor stores      — :mod:`repro.core.nvme` (§III-D/§IV-E)
 * host Adam              — :mod:`repro.core.optimizer`
 * prefetch swapper       — :mod:`repro.core.swapper`
+* overlap machinery      — :mod:`repro.core.overlap` (H2D/writer/optimizer
+                           pipeline legs of Fig. 6)
 * schedule IR            — :mod:`repro.core.stream_plan` (Fig. 5/6 as data)
 * the offload session    — :mod:`repro.core.session` (lookahead executor)
 * policies + trainer shim— :mod:`repro.core.offload_engine`
@@ -28,8 +30,10 @@ from .loss_scale import DynamicLossScaler
 from .nvme import DirectNVMeEngine, FilesystemEngine, TensorStore, IOStats
 from .optimizer import AdamConfig, OffloadedAdam, adam_update
 from .swapper import ParameterSwapper, SwapStats
+from .overlap import DeviceSlots, OverlapStats, SerialWorker
 from .stream_plan import (ComputeOp, FetchOp, GradWriteOp, KVReadOp,
-                          KVWriteOp, PlanError, ReleaseOp, StreamPlan,
+                          KVWriteOp, OptimStepOp, OverflowCheckOp, PlanError,
+                          ReleaseOp, StreamPlan,
                           compile_decode, compile_decode_cached, compile_eval,
                           compile_prefill, compile_train)
 from .session import OffloadSession

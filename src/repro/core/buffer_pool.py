@@ -153,8 +153,13 @@ class BufferPoolBase:
         self.peak_in_use_payload = 0
         self.in_use_reserved = 0
         self.peak_in_use_reserved = 0
-        # hashtable metadata, as in the paper: key -> PoolBuffer
-        self._live: dict[str, PoolBuffer] = {}
+        # hashtable metadata, as in the paper: tag -> live PoolBuffers.
+        # A tag can be checked out more than once concurrently (a unit's
+        # forward ticket still staging while its backward re-fetch is
+        # issued inside a deep lookahead window), so each entry is a list —
+        # a plain {tag: buf} map silently overwrote the first buffer's
+        # record and the first release then dropped the wrong one.
+        self._live: dict[str, list[PoolBuffer]] = {}
 
     # -- subclass interface --------------------------------------------------
 
@@ -200,7 +205,7 @@ class BufferPoolBase:
             self.peak_in_use_reserved = max(self.peak_in_use_reserved,
                                             self.in_use_reserved)
             if tag:
-                self._live[tag] = buf
+                self._live.setdefault(tag, []).append(buf)
             return buf
 
     def release(self, buf: PoolBuffer) -> None:
@@ -211,7 +216,14 @@ class BufferPoolBase:
             self._free_slots[buf.class_name].append((buf.slot_index, buf.offset))
             self.in_use_payload -= buf.requested
             self.in_use_reserved -= buf.capacity
-            self._live.pop(buf.tag, None)
+            live = self._live.get(buf.tag)
+            if live is not None:
+                try:
+                    live.remove(buf)    # this buffer's record, not the tag's
+                except ValueError:
+                    pass
+                if not live:
+                    del self._live[buf.tag]
             self._lock.notify_all()
 
     def close(self) -> None:

@@ -87,9 +87,19 @@ def load_pytree(store: TensorStore, prefix: str, like):
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+def _drain_pipeline(trainer) -> None:
+    """Under full overlap an optimizer stage may still be streaming; the
+    scalar state (step count) and the on-store masters are only coherent
+    once it lands."""
+    sync = getattr(trainer, "synchronize", None)
+    if callable(sync):
+        sync()
+
+
 def snapshot_trainer(trainer, prefix: str = "ckpt") -> None:
     """Persist the trainer's scalar state; tensor state already lives on
     the store (masters/moments are updated in place each step)."""
+    _drain_pipeline(trainer)
     state = {
         "optimizer_step": trainer.optimizer.step_count,
         "loss_scale": trainer.scaler.scale,
@@ -101,6 +111,7 @@ def snapshot_trainer(trainer, prefix: str = "ckpt") -> None:
 
 
 def restore_trainer_step(trainer, prefix: str = "ckpt") -> dict:
+    _drain_pipeline(trainer)
     key = f"{prefix}/trainer_state"
     if hasattr(trainer.store, "_locations"):
         nbytes = sum(e.length for e in trainer.store._locations[key][2])

@@ -213,6 +213,7 @@ class SpillableKVCache:
             if self.closed:
                 raise RuntimeError("KV cache is closed")
             entry = self._futures.pop(unit, None)
+            spilled = unit in self._spilled
             if entry is not None:
                 buf, future = entry
                 hit = future.done()
@@ -231,21 +232,28 @@ class SpillableKVCache:
         try:
             if future is not None:
                 future.result()
-                self.stats.refills += 1
-                self.stats.refill_bytes += self.nbytes
-                self.stats.prefetch_hits += int(hit)
-            elif unit in self._spilled:
+            elif spilled:
                 self.store.read(self._store_key(unit), view)
-                self.stats.refills += 1
-                self.stats.refill_bytes += self.nbytes
-                self.stats.sync_refills += 1
             else:
                 view[...] = np.zeros((), self.dtype)  # fresh state
         except BaseException:
             buf.release()   # slot must not leak on a failed read
             raise
-        self.stats.wait_seconds += time.perf_counter() - t0
+        wait = time.perf_counter() - t0
+        # Counters strictly under the lock: prefetch() bumps its stats from
+        # the executor thread while refills land from store workers, and
+        # under the full-overlap executor more threads observe snapshots —
+        # unlocked read-modify-writes here tore the ledger.
         with self._lock:
+            if future is not None:
+                self.stats.refills += 1
+                self.stats.refill_bytes += self.nbytes
+                self.stats.prefetch_hits += int(hit)
+            elif spilled:
+                self.stats.refills += 1
+                self.stats.refill_bytes += self.nbytes
+                self.stats.sync_refills += 1
+            self.stats.wait_seconds += wait
             self._spilled.discard(unit)
             self._slots[unit] = buf
             self._touch(unit)

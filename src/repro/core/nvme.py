@@ -72,6 +72,12 @@ class TensorStore:
 
     def __init__(self) -> None:
         self.stats = IOStats()
+        # Per-instance, set here rather than as a class-attribute default:
+        # a class attribute is shared by every engine until the first
+        # lazy assignment shadows it, so one store's close() could tear
+        # down (or miss) another's I/O threads.
+        self._async_pool: ThreadPoolExecutor | None = None
+        self._async_pool_lock = threading.Lock()
 
     # -- blocking API ---------------------------------------------------------
 
@@ -95,7 +101,16 @@ class TensorStore:
         raise NotImplementedError
 
     def close(self) -> None:
-        pass
+        """Shut down the lazily-created async I/O executor (idempotent).
+
+        Engines with more resources extend this — the base class owns the
+        ``-aio`` thread pool so no engine can forget it and leak up to 4
+        worker threads per session open/close cycle.
+        """
+        with self._async_pool_lock:
+            pool, self._async_pool = self._async_pool, None
+        if pool is not None:
+            pool.shutdown(wait=True)
 
     # -- async API (the swapper overlaps I/O with compute) ---------------------
 
@@ -105,13 +120,13 @@ class TensorStore:
     def read_async(self, key: str, out: np.ndarray) -> Future:
         return self._pool().submit(self.read, key, out)
 
-    _async_pool: ThreadPoolExecutor | None = None
-
     def _pool(self) -> ThreadPoolExecutor:
-        if self._async_pool is None:
-            self._async_pool = ThreadPoolExecutor(
-                max_workers=4, thread_name_prefix=f"{type(self).__name__}-aio")
-        return self._async_pool
+        with self._async_pool_lock:
+            if self._async_pool is None:
+                self._async_pool = ThreadPoolExecutor(
+                    max_workers=4,
+                    thread_name_prefix=f"{type(self).__name__}-aio")
+            return self._async_pool
 
 
 # ---------------------------------------------------------------------------
@@ -245,14 +260,18 @@ class DirectNVMeEngine(TensorStore):
         self._workers = ThreadPoolExecutor(
             max_workers=n_workers, thread_name_prefix="direct-nvme")
         self._rr = 0  # round-robin start device for small tensors
+        self._rr_lock = threading.Lock()
 
     # -- placement --------------------------------------------------------------
 
     def _plan_extents(self, nbytes: int) -> list[Extent]:
         """Split a request into per-device stripes and allocate LBAs."""
         if nbytes <= self.min_stripe or self.n_devices == 1:
-            dev = self._rr % self.n_devices
-            self._rr += 1
+            # Reached from concurrent write_async workers: the bump must be
+            # atomic or lost updates skew the round-robin balance.
+            with self._rr_lock:
+                dev = self._rr % self.n_devices
+                self._rr += 1
             return [Extent(dev, self._alloc.alloc(dev, nbytes), nbytes)]
         per = -(-nbytes // self.n_devices)
         per = ((per + LBA_ALIGN - 1) // LBA_ALIGN) * LBA_ALIGN
@@ -291,6 +310,12 @@ class DirectNVMeEngine(TensorStore):
                     raise IOError(f"short pwrite: {written}/{len(piece)}")
             else:
                 data = os.pread(fd, len(piece), extent.offset)
+                if len(data) != len(piece):
+                    raise IOError(
+                        f"short pread on device {extent.device} at offset "
+                        f"{extent.offset}: got {len(data)} of "
+                        f"{len(piece)} B (region truncated or extent "
+                        f"beyond preallocated capacity)")
                 piece[:] = data
 
         pos = 0
@@ -338,8 +363,7 @@ class DirectNVMeEngine(TensorStore):
 
     def close(self) -> None:
         self._workers.shutdown(wait=True)
-        if self._async_pool is not None:
-            self._async_pool.shutdown(wait=True)
+        super().close()           # the base-class -aio pool, once, here
         for fd in self._fds:
             os.close(fd)
         self._fds = []

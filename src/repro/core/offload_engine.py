@@ -160,6 +160,19 @@ class OffloadPolicy:
     ``lookahead`` bounds how many upcoming plan fetches the session issues
     asynchronously (None → inflight_blocks; 1 → synchronous per-unit
     fetches, the seed engine's behaviour).
+
+    ``overlap`` selects how much of the Fig. 6 pipeline runs on background
+    threads (the bench ablation axis; numerics are identical across modes):
+
+    * ``"sync"`` — SSD reads still prefetch under compute, but H2D blocks
+      inside each FetchOp, gradient D2H runs on the compute thread, and the
+      optimizer streams strictly after the backward pass (PR-1 behaviour),
+    * ``"h2d"``  — adds the H2D worker + double-buffered device slots:
+      host→device copies hide under the previous block's compute,
+    * ``"full"`` — adds the gradient writer thread (backward D2H overlaps
+      the next block's re-fetch/recompute) and runs the optimizer stage on
+      its own worker so step *k*'s host Adam interleaves with step *k+1*'s
+      forward prefetch window (cross-step pipelining).
     """
 
     name: str
@@ -171,6 +184,7 @@ class OffloadPolicy:
     inflight_blocks: int = 2
     lookahead: int | None = None
     offload_checkpoints: bool = True   # offloaded gradient checkpointing
+    overlap: str = "full"              # "sync" | "h2d" | "full" (Fig. 6)
 
     def __post_init__(self) -> None:
         if not self.name or not isinstance(self.name, str):
@@ -194,6 +208,9 @@ class OffloadPolicy:
                 f"lookahead must be in [1, inflight_blocks="
                 f"{self.inflight_blocks}], got {self.lookahead} — a deeper "
                 f"window would oversubscribe the pool (§IV-B sizing)")
+        if self.overlap not in ("sync", "h2d", "full"):
+            raise ValueError(f"overlap must be one of 'sync'|'h2d'|'full', "
+                             f"got {self.overlap!r}")
         if self.adam.state_dtype not in ("float32", "bfloat16"):
             raise ValueError(f"state_dtype must be float32|bfloat16, got "
                              f"{self.adam.state_dtype!r}")
@@ -283,6 +300,11 @@ class PolicyBuilder:
 
     def with_lookahead(self, n: int | None) -> "PolicyBuilder":
         self._overrides["lookahead"] = n
+        return self
+
+    def with_overlap(self, mode: str) -> "PolicyBuilder":
+        """Pipeline-overlap ablation level: 'sync' | 'h2d' | 'full'."""
+        self._overrides["overlap"] = mode
         return self
 
     def with_overrides(self, **field_overrides) -> "PolicyBuilder":

@@ -88,6 +88,13 @@ class OffloadedAdam:
     One "subgroup" = one parameter tensor (the paper streams optimizer-state
     subgroups through a fixed host buffer; tensor granularity matches its
     description and keeps peak host usage to max-tensor-size × 3).
+
+    Thread contract: subgroups of one step may be streamed from a
+    background pipeline thread (the session's optimizer worker) while the
+    owner enqueues nothing else — one step in flight at a time, with
+    :meth:`begin_step` sequenced before its subgroups on the same thread or
+    queue.  The I/O ledger (``last_io_bytes``) is lock-guarded so the
+    training thread can read a coherent value mid-step.
     """
 
     MASTER, M, V, COMPUTE = ".master", ".m", ".v", ".compute"
@@ -95,12 +102,14 @@ class OffloadedAdam:
     def __init__(self, store, cfg: AdamConfig, *, tracker=None,
                  component: str = "optimizer_stream") -> None:
         from .memory_tracker import GLOBAL_TRACKER
+        import threading
         self.store = store
         self.cfg = cfg
         self.tracker = tracker or GLOBAL_TRACKER
         self.component = component
         self.step_count = 0
         self.subgroups: dict[str, SubgroupMeta] = {}
+        self._io_lock = threading.Lock()
         self.last_io_bytes = 0   # I/O volume of the most recent step
 
     # -- registration ------------------------------------------------------------
@@ -152,14 +161,16 @@ class OffloadedAdam:
             compute = master32.astype(cd)
             self.store.write(key + self.COMPUTE, compute)
             io += 3 * state_bytes + meta.size * cd.itemsize
-            self.last_io_bytes += io
+            with self._io_lock:
+                self.last_io_bytes += io
             return compute
         finally:
             self.tracker.free(h)
 
     def begin_step(self) -> None:
         self.step_count += 1
-        self.last_io_bytes = 0
+        with self._io_lock:
+            self.last_io_bytes = 0
 
     # -- static accounting (paper Fig. 20, at any model scale) ---------------------
 

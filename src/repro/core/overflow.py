@@ -99,6 +99,18 @@ def baseline_overflow_check(grad: np.ndarray, *,
     return inf_any or nan_any
 
 
+def flat_overflow_check(grad: np.ndarray, *, fused: bool,
+                        tracker: MemoryTracker | None = None,
+                        component: str = "overflow_tmp") -> bool:
+    """Policy-dispatched flat-buffer screen — the ``OverflowCheckOp`` entry
+    point.  ``grad`` may be the whole gradient flat buffer or any subgroup
+    region of it (both checks are pure elementwise reductions, so callers
+    that gain per-subgroup readiness can screen regions as they land and
+    OR the verdicts)."""
+    check = fused_overflow_check if fused else baseline_overflow_check
+    return check(grad, tracker=tracker, component=component)
+
+
 def fused_overflow_check(grad: np.ndarray, *,
                          tracker: MemoryTracker | None = None,
                          component: str = "overflow_tmp",

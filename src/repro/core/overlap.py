@@ -1,0 +1,205 @@
+"""Background-pipeline primitives for the full-overlap executor (Fig. 6).
+
+The paper's pipeline has four legs that should all hide under compute:
+
+  SSD→host read   — async since PR 1 (:class:`~repro.core.swapper.
+                    ParameterSwapper` lookahead prefetch),
+  host→device H2D — staged by a :class:`SerialWorker` into a bounded set of
+                    :class:`DeviceSlots` (the device-side double buffer),
+  device→host D2H — gradient write-back enqueued on a second SerialWorker
+                    (the writer thread), drained before the overflow check,
+  optimizer       — step *k*'s subgroup-streamed host Adam runs on a third
+                    SerialWorker, interleaved with step *k+1*'s forward
+                    prefetch window (SSDTrain-style cross-step pipelining).
+
+This module holds the machinery shared by those legs; the session wires it
+to the StreamPlan executor (:mod:`repro.core.session`).  Everything here is
+model-agnostic: a SerialWorker is just an order-preserving single-thread
+task queue with latched-error semantics, and DeviceSlots is a counted
+per-shape-class staging budget.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from concurrent.futures import Future
+from dataclasses import dataclass
+
+
+def done_future(value=None) -> Future:
+    """An already-resolved Future (sync-mode stand-in for a queued task)."""
+    fut: Future = Future()
+    fut.set_result(value)
+    return fut
+
+
+class SerialWorker:
+    """One daemon thread executing submitted callables strictly FIFO.
+
+    The executor's async legs all need the same contract:
+
+    * **order**: tasks run in submission order (grad scatters must land in
+      plan order; optimizer subgroups must follow their ``begin_step``),
+    * **bounded memory**: ``maxsize`` backpressures the producer (the
+      compute thread) instead of queueing unbounded device arrays,
+    * **no lost errors**: with ``latch=True`` the first task failure is
+      latched and re-raised at the next :meth:`drain` or :meth:`close` (and
+      each task's own :class:`Future` carries its exception for callers
+      that wait on it directly).  Workers whose every future *is* awaited
+      (the H2D stage) pass ``latch=False`` so an already-delivered failure
+      is not re-raised a second time at teardown; latching callers that
+      deliver a failure out-of-band call :meth:`consume_error`.
+
+    A worker is *not* a thread pool — single-threaded by design, so tasks
+    need no internal locking against each other.
+    """
+
+    def __init__(self, name: str, *, maxsize: int = 0,
+                 latch: bool = True) -> None:
+        self.name = name
+        self._q: queue.Queue = queue.Queue(maxsize)
+        self._latch = latch
+        self._error: BaseException | None = None
+        self._error_lock = threading.Lock()
+        self._closed = False
+        self._thread = threading.Thread(target=self._run, name=name,
+                                        daemon=True)
+        self._thread.start()
+
+    def _run(self) -> None:
+        while True:
+            item = self._q.get()
+            try:
+                if item is None:
+                    return
+                fn, fut = item
+                if not fut.set_running_or_notify_cancel():
+                    continue
+                try:
+                    fut.set_result(fn())
+                except BaseException as e:
+                    fut.set_exception(e)
+                    if self._latch:
+                        with self._error_lock:
+                            if self._error is None:
+                                self._error = e
+            finally:
+                self._q.task_done()
+
+    def submit(self, fn) -> Future:
+        """Queue ``fn``; blocks when the queue is full (backpressure)."""
+        if self._closed:
+            raise RuntimeError(f"worker {self.name!r} is closed")
+        fut: Future = Future()
+        self._q.put((fn, fut))
+        return fut
+
+    def consume_error(self, error: BaseException) -> None:
+        """Mark ``error`` as delivered: a caller that just re-raised a task
+        future's exception clears the latch so drain()/close() don't report
+        the same failure again."""
+        with self._error_lock:
+            if self._error is error:
+                self._error = None
+
+    def drain(self) -> None:
+        """Wait until every queued task ran; re-raise the first failure.
+
+        The latched error is cleared once raised — error paths that drain
+        again (to guarantee the queue is empty) don't see it twice.
+        """
+        self._q.join()
+        with self._error_lock:
+            error, self._error = self._error, None
+        if error is not None:
+            raise error
+
+    def close(self) -> None:
+        """Run out the queue, stop the thread, re-raise a latched failure.
+        Idempotent."""
+        if self._closed:
+            return
+        self._closed = True
+        self._q.put(None)
+        self._thread.join()
+        with self._error_lock:
+            error, self._error = self._error, None
+        if error is not None:
+            raise error
+
+
+class DeviceSlots:
+    """Counted device-staging budget per shape class (the H2D double buffer).
+
+    ``depths[cls]`` is 2 × the largest number of class-``cls`` tensors any
+    single unit streams: one unit's worth resident for compute plus one
+    being staged by the H2D worker.  :meth:`acquire` blocks the *worker*
+    (never the compute thread) until ``ReleaseOp`` returns the older unit's
+    slots, which is exactly the Fig. 6 rotation.
+
+    Deadlock-freedom: only the single H2D worker acquires, strictly in
+    fetch order, and every unit the compute thread is waiting on sits at or
+    before the worker's queue head, with all earlier units already released
+    — so the blocked acquire always has a live releaser.
+    """
+
+    def __init__(self, depths: dict[str, int]) -> None:
+        for cls, d in depths.items():
+            if d < 2:
+                raise ValueError(f"device slot class {cls!r} needs depth >= "
+                                 f"2 (compute + staging), got {d}")
+        self._depths = dict(depths)
+        self._free = dict(depths)
+        self._cv = threading.Condition()
+
+    def acquire(self, class_name: str) -> None:
+        with self._cv:
+            while self._free[class_name] < 1:
+                self._cv.wait()
+            self._free[class_name] -= 1
+
+    def release_all(self, class_names) -> None:
+        """Return one slot per entry of ``class_names`` (a unit's tokens)."""
+        with self._cv:
+            for cls in class_names:
+                if self._free[cls] >= self._depths[cls]:
+                    raise ValueError(f"over-release of device slot class "
+                                     f"{cls!r}")
+                self._free[cls] += 1
+            self._cv.notify_all()
+
+    def idle(self) -> bool:
+        """True when every slot is free — the leak probe for tests."""
+        with self._cv:
+            return self._free == self._depths
+
+
+@dataclass
+class OverlapStats:
+    """Compute-thread-visible stall counters for the overlapped legs.
+
+    ``h2d_wait_seconds`` is what :class:`~repro.core.swapper.SwapStats.
+    wait_seconds` is to SSD reads: the time the executor actually blocked
+    at a FetchOp waiting for staged device weights.  Under full overlap the
+    swapper's own wait moves onto the H2D worker thread (off the critical
+    path) and this is the number that should stay near zero instead.
+
+    All fields are mutated by the single executor thread only.
+    """
+
+    fetch_seconds: float = 0.0  # total FetchOp blocking: read wait + H2D,
+    #                             whichever thread originally paid it — the
+    #                             mode-comparable "fetch+H2D wait" number
+    h2d_gets: int = 0           # FetchOps served from the staging pipeline
+    h2d_hits: int = 0           # device weights ready when the FetchOp asked
+    h2d_wait_seconds: float = 0.0
+    gradwrite_drain_seconds: float = 0.0  # OverflowCheckOp writer-drain stall
+    optim_gate_seconds: float = 0.0       # prefetch blocked on step k-1 Adam
+
+    def snapshot(self) -> dict:
+        return {"fetch_seconds": self.fetch_seconds,
+                "h2d_gets": self.h2d_gets, "h2d_hits": self.h2d_hits,
+                "h2d_wait_seconds": self.h2d_wait_seconds,
+                "gradwrite_drain_seconds": self.gradwrite_drain_seconds,
+                "optim_gate_seconds": self.optim_gate_seconds}

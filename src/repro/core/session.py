@@ -16,10 +16,29 @@ overlaps block *i*'s H2D + compute; depth is bounded by
 pool's own backpressure is the safety net.  ``lookahead=1`` degenerates to
 the seed engine's synchronous per-unit fetches (the benchmark baseline).
 
+On top of the read pipeline, ``policy.overlap`` turns on the remaining legs
+of the paper's Fig. 6 full overlap (see :mod:`repro.core.overlap`):
+
+* ``"h2d"``  — FetchOp splits into an issue half and a wait half.  An H2D
+  worker stages completed SSD reads into double-buffered device slots
+  (two units' worth per shape class) under the previous block's compute;
+  the FetchOp then only waits for staged device weights.
+* ``"full"`` — additionally, GradWriteOp enqueues its D2H + flat-buffer
+  scatter on a bounded writer thread (backward D2H overlaps the next
+  block's re-fetch/recompute), and the plan's OptimStepOps run on an
+  optimizer worker: step *k*'s subgroup-streamed host Adam interleaves
+  with step *k+1*'s forward prefetch window, with per-unit readiness
+  futures gating the next step's fetch (weights must be post-update on
+  the store) and grad write-back (the flat-buffer region must have been
+  consumed).  SSDTrain (arXiv 2408.10013) pipelines across steps the same
+  way.  Numerics are identical in every mode — the same float ops run in
+  the same order, only the thread that pays the wait changes.
+
 The session runs four workloads through the same machinery:
 
-* ``train_step``   — compile_train plan + overflow screen + loss scaler +
-                     subgroup-streamed host Adam,
+* ``train_step``   — compile_train plan: forward/backward streaming +
+                     overflow screen + loss scaler + subgroup-streamed
+                     host Adam, all as plan ops,
 * ``eval_loss``    — compile_eval plan (jitted head loss cached once),
 * ``decode_logits``— compile_decode plan (weight-streamed serving,
                      uncached full-prefix pass; see
@@ -38,6 +57,12 @@ weights stream.
 
 from __future__ import annotations
 
+import functools
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+
 import numpy as np
 
 import jax
@@ -47,9 +72,11 @@ from .kv_cache import DecodeSpec, SpillableKVCache
 from .loss_scale import DynamicLossScaler
 from .memory_tracker import MemoryTracker
 from .optimizer import OffloadedAdam
-from .overflow import baseline_overflow_check, fused_overflow_check
+from .overflow import flat_overflow_check
+from .overlap import DeviceSlots, OverlapStats, SerialWorker, done_future
 from .stream_plan import (ComputeOp, FetchOp, GradWriteOp, KVReadOp,
-                          KVWriteOp, ReleaseOp, StreamPlan,
+                          KVWriteOp, OptimStepOp, OverflowCheckOp,
+                          ReleaseOp, StreamPlan,
                           compile_decode, compile_decode_cached,
                           compile_eval, compile_prefill, compile_train)
 from .swapper import ParameterSwapper
@@ -57,21 +84,47 @@ from .swapper import ParameterSwapper
 COMPUTE_SUFFIX = OffloadedAdam.COMPUTE
 
 
+def jit_cache_size(fn) -> int:
+    """Compiled-trace count of one ``jax.jit`` callable.
+
+    jax exposes this only through the private ``_cache_size`` probe on the
+    jitted wrapper — stable across the versions this repo pins, but not
+    public API.  Guarded here (the single place the repo touches it) so a
+    jax upgrade that removes the probe fails with a pointed message at the
+    probe site instead of an ``AttributeError`` deep inside a benchmark.
+    """
+    probe = getattr(fn, "_cache_size", None)
+    if not callable(probe):
+        raise RuntimeError(
+            "this jax build exposes no jit trace-count probe (the private "
+            "_cache_size method); update repro.core.session.jit_cache_size "
+            "for its replacement")
+    return int(probe())
+
+
 class _ExecState:
     """Per-plan-run bindings and carried activations/cotangents."""
 
-    __slots__ = ("tokens", "labels", "scale", "h", "dh", "loss", "logits",
-                 "live", "grads", "checkpoints", "kv", "kv_live",
-                 "kv_append", "kv_time", "cache_len", "last_pos")
+    __slots__ = ("tokens", "labels", "scale", "grad_scale", "h", "dh",
+                 "loss", "logits", "live", "live_slots", "h2d", "grads",
+                 "checkpoints", "overflowed", "apply", "optim_begun",
+                 "kv", "kv_live", "kv_append", "kv_time", "cache_len",
+                 "last_pos")
 
     def __init__(self, tokens=None, labels=None, scale=1.0):
         self.tokens = None if tokens is None else jnp.asarray(tokens)
         self.labels = None if labels is None else jnp.asarray(labels)
         self.scale = jnp.asarray(scale, dtype=jnp.float32)
+        self.grad_scale = float(scale)   # host copy for the optimizer ops
         self.h = self.dh = self.loss = self.logits = None
         self.live: dict[str, dict] = {}     # unit -> device params
+        self.live_slots: dict[str, tuple] = {}  # unit -> device-slot tokens
+        self.h2d: dict[str, deque] = {}     # unit -> staged-fetch futures
         self.grads: dict[str, dict] = {}    # unit -> device grads
         self.checkpoints: dict[str, tuple] = {}  # unit -> saved block input
+        self.overflowed: bool | None = None  # set by OverflowCheckOp
+        self.apply: bool | None = None       # set by OverflowCheckOp
+        self.optim_begun = False             # begin_step() sequenced once
         # cached-decode bindings (prefill / decode_cached plans only)
         self.kv: SpillableKVCache | None = None
         self.kv_live: dict[str, tuple] = {}    # unit -> device (k, v) bucket
@@ -149,6 +202,39 @@ class OffloadSession:
             policy.adam.compute_dtype]
         lookahead = policy.lookahead or policy.inflight_blocks
         self.lookahead = max(1, min(lookahead, policy.inflight_blocks))
+
+        # Full-overlap machinery (policy.overlap; see module docstring and
+        # repro.core.overlap).  Created before the store writes below so a
+        # mid-construction failure still finds them on the close() path.
+        self.overlap = policy.overlap
+        self._ostats = OverlapStats()
+        self._optim_lock = threading.Lock()
+        self._optim_futures: dict[str, Future] = {}
+        self._optim_io_completed = 0
+        self._device_slots: DeviceSlots | None = None
+        self._h2d: SerialWorker | None = None
+        self._grad_writer: SerialWorker | None = None
+        self._optim_worker: SerialWorker | None = None
+        if policy.overlap in ("h2d", "full"):
+            per_unit: dict[str, int] = {}
+            for unit in model.units:
+                counts: dict[str, int] = {}
+                for key in unit.params:
+                    cls = model.class_of(key)
+                    counts[cls] = counts.get(cls, 0) + 1
+                for cls, c in counts.items():
+                    per_unit[cls] = max(per_unit.get(cls, 0), c)
+            # Two units' worth of device buffers per shape class: one in
+            # use by compute, one being staged — the Fig. 6 double buffer.
+            self._device_slots = DeviceSlots(
+                {cls: 2 * c for cls, c in per_unit.items()})
+            # latch=False: every staging future is awaited by the executor
+            # (FetchOp wait half, or the abort path), which delivers any
+            # failure — a close()-time re-raise would double-report it.
+            self._h2d = SerialWorker("offload-h2d", latch=False)
+        if policy.overlap == "full" and mode == "train":
+            self._grad_writer = SerialWorker("offload-gradwrite", maxsize=4)
+            self._optim_worker = SerialWorker("offload-optim")
 
         # Register every parameter.  Train mode seeds master weights + Adam
         # moments on the store; serve mode writes only compute weights.
@@ -230,15 +316,26 @@ class OffloadSession:
         self.close()
 
     def close(self) -> None:
-        """Drain in-flight reads, return the arena + flat buffer, close the
-        store.  Idempotent; runs on the error path via ``__exit__`` and on
-        partially-constructed sessions (attributes may not exist yet)."""
+        """Drain in-flight reads and pipeline workers, return the arena +
+        flat buffer, close the store.  Idempotent; runs on the error path
+        via ``__exit__`` and on partially-constructed sessions (attributes
+        may not exist yet).
+
+        Worker order matters: the H2D worker goes first (its queued jobs
+        own swapper tickets), then the gradient writer (its tasks may gate
+        on optimizer futures, so the optimizer worker must still be alive),
+        then the optimizer worker, and only then the swapper drain that
+        sweeps any ticket nobody claimed."""
         if getattr(self, "_closed", True):
             return
         self._closed = True
         steps = []
         if getattr(self, "_kv_cache", None) is not None:
             steps.append(self._kv_cache.close)
+        for worker_attr in ("_h2d", "_grad_writer", "_optim_worker"):
+            worker = getattr(self, worker_attr, None)
+            if worker is not None:
+                steps.append(worker.close)
         if getattr(self, "swapper", None) is not None:
             steps.append(self.swapper.drain)
         if getattr(self, "pool", None) is not None:
@@ -258,6 +355,18 @@ class OffloadSession:
                     failure = e
         if failure is not None:
             raise failure
+
+    def synchronize(self) -> None:
+        """Drain the cross-step pipeline: wait out queued gradient
+        write-backs and the in-flight optimizer stage, re-raising their
+        failures.  The executor's per-unit readiness gates make this
+        unnecessary for correctness between train steps; call it to close
+        a timing window, read complete ``optimizer_io_bytes``, or compare
+        state across overlap modes."""
+        if self._grad_writer is not None:
+            self._grad_writer.drain()
+        if self._optim_worker is not None:
+            self._optim_worker.drain()
 
     # -- plans --------------------------------------------------------------
 
@@ -303,21 +412,117 @@ class OffloadSession:
                    for _key, skey, _cd, _shape in
                    self._param_keys(unit_name))
 
-    def _fetch_unit(self, unit_name: str) -> dict:
-        """Blocking half of the lifecycle: wait on the reads, H2D, release."""
+    def _h2d_copy(self, host_view):
+        """H2D transfer.  ``copy=True`` is essential: on the CPU backend
+        jax may alias host memory, and the pool slot is reused as soon as
+        it is released (the paper's lifecycle) — an alias would race with
+        async dispatch."""
+        return jnp.array(host_view, copy=True)
+
+    def _submit_h2d(self, unit_name: str, state: _ExecState) -> None:
+        """Issue half of the split FetchOp: queue SSD-read-wait + H2D onto
+        the staging worker; the wait half pops the future in fetch order."""
+        fut = self._h2d.submit(
+            functools.partial(self._h2d_stage_unit, unit_name))
+        state.h2d.setdefault(unit_name, deque()).append(fut)
+
+    def _h2d_stage_unit(self, unit_name: str) -> tuple[dict, list]:
+        """H2D-worker body: claim the unit's tickets, wait each read,
+        stage into device slots, release the pool slots.  Returns
+        ``(device_params, slot_tokens)``; on any failure every claimed
+        ticket and acquired slot token is returned before re-raising."""
+        claims = []
+        device_params: dict = {}
+        tokens: list[str] = []
+        try:
+            # Claiming inside the try: a claim pops the ticket out of the
+            # swapper's in-flight map (drain() can no longer see it), so a
+            # mid-loop failure must release the earlier claims here.
+            for key, skey, cd, shape in self._param_keys(unit_name):
+                ticket, hit, fallback = self.swapper.claim(skey, cd, shape)
+                claims.append([key, skey, ticket, hit, fallback, cd, shape])
+            for entry in claims:
+                key, skey, ticket, hit, fallback, cd, shape = entry
+                t0 = time.perf_counter()
+                host_view = ticket.wait()
+                self.swapper.record_get(
+                    hit=hit, fallback=fallback,
+                    wait_seconds=time.perf_counter() - t0)
+                self._device_slots.acquire(self.swapper.class_of[skey])
+                tokens.append(self.swapper.class_of[skey])
+                try:
+                    device_params[key] = self._h2d_copy(host_view)
+                finally:
+                    ticket.release()
+                    entry[2] = None       # consumed: skip in cleanup
+        except BaseException:
+            for entry in claims:
+                ticket = entry[2]
+                if ticket is None:
+                    continue
+                try:
+                    ticket.wait()
+                except BaseException:
+                    pass          # data is being discarded
+                finally:
+                    ticket.release()
+            self._device_slots.release_all(tokens)
+            raise
+        return device_params, tokens
+
+    def _fetch_unit(self, unit_name: str, state: _ExecState) -> dict:
+        """Blocking half of the lifecycle: wait for staged device weights
+        (overlap mode) or wait the reads + H2D inline (sync mode)."""
+        pending = state.h2d.get(unit_name)
+        if pending:
+            fut = pending.popleft()
+            if not pending:
+                del state.h2d[unit_name]
+            hit = fut.done()
+            t0 = time.perf_counter()
+            device_params, tokens = fut.result()
+            self._ostats.h2d_wait_seconds += time.perf_counter() - t0
+            self._ostats.h2d_gets += 1
+            self._ostats.h2d_hits += int(hit)
+            state.live_slots[unit_name] = tuple(tokens)
+            return device_params
         device_params = {}
         for key, skey, cd, shape in self._param_keys(unit_name):
             ticket = self.swapper.get(skey, cd, shape)
             try:
-                host_view = ticket.buf.view(cd, shape)
-                # H2D transfer. copy=True is essential: on the CPU backend
-                # jax may alias host memory, and the pool slot is reused as
-                # soon as it is released (the paper's lifecycle) — an alias
-                # would race with async dispatch.
-                device_params[key] = jnp.array(host_view, copy=True)
+                device_params[key] = self._h2d_copy(
+                    ticket.buf.view(cd, shape))
             finally:
                 ticket.release()                          # slot back to pool
         return device_params
+
+    # -- cross-step optimizer readiness --------------------------------------
+
+    def _optim_ready(self, unit_name: str) -> bool:
+        """True when the unit's previous-step Adam landed *successfully* —
+        a done-with-exception future is NOT ready (the store still holds
+        pre-update weights), so the window stalls on it until the head
+        position's :meth:`_optim_wait` delivers the failure."""
+        with self._optim_lock:
+            fut = self._optim_futures.get(unit_name)
+        return fut is None or (fut.done() and fut.exception() is None)
+
+    def _optim_wait(self, unit_name: str) -> None:
+        """Block until the unit's previous-step Adam write-back landed
+        (re-raising an optimizer-worker failure here, at the point the
+        stale weights would otherwise have been read)."""
+        with self._optim_lock:
+            fut = self._optim_futures.get(unit_name)
+        if fut is None:
+            return
+        t0 = time.perf_counter()
+        try:
+            fut.result()
+        except BaseException as e:
+            if self._optim_worker is not None:
+                self._optim_worker.consume_error(e)   # delivered here
+            raise
+        self._ostats.optim_gate_seconds += time.perf_counter() - t0
 
     # -- checkpoint offload --------------------------------------------------
 
@@ -357,6 +562,19 @@ class OffloadSession:
                     limit = min(fetch_pos + self.lookahead, len(fetch_order))
                     while next_prefetch < limit:
                         unit = fetch_order[next_prefetch]
+                        head = next_prefetch == fetch_pos
+                        # Cross-step gate: the unit's previous-step Adam
+                        # write-back must land before its weights are
+                        # re-read from the store.  Ahead-of-need positions
+                        # stall the window instead of blocking compute; the
+                        # head position always goes through the wait, which
+                        # is also where a failed Adam stage is delivered
+                        # (a done-with-exception future is NOT ready —
+                        # fetching would read stale weights).
+                        if head:
+                            self._optim_wait(unit)
+                        elif not self._optim_ready(unit):
+                            break
                         # A unit can appear twice inside the window (forward
                         # + backward re-fetch).  prefetch() is idempotent per
                         # key, so issuing the later position while the earlier
@@ -365,17 +583,21 @@ class OffloadSession:
                         # read.  Stall the window here; the position is
                         # re-tried at the next FetchOp, after the earlier
                         # fetch has been consumed.
-                        if next_prefetch > fetch_pos and \
-                                self._unit_in_flight(unit):
+                        if not head and self._unit_in_flight(unit):
                             break
                         self._prefetch_unit(unit)
+                        if self._h2d is not None:
+                            self._submit_h2d(unit, state)
                         if state.kv is not None:
                             # ride the same window: block i+1's KV refill
                             # overlaps block i's compute (no-op for units
                             # that are resident or never spilled)
                             state.kv.prefetch(unit)
                         next_prefetch += 1
-                    state.live[op.unit] = self._fetch_unit(op.unit)
+                    t_fetch = time.perf_counter()
+                    state.live[op.unit] = self._fetch_unit(op.unit, state)
+                    self._ostats.fetch_seconds += \
+                        time.perf_counter() - t_fetch
                     fetch_pos += 1
                 elif isinstance(op, ComputeOp):
                     self._compute(op, state)
@@ -384,23 +606,55 @@ class OffloadSession:
                 elif isinstance(op, KVWriteOp):
                     self._write_kv(op.unit, state)
                 elif isinstance(op, GradWriteOp):
-                    self._write_grads(op.unit, state.grads.pop(op.unit))
+                    self._dispatch_grad_write(op.unit, state)
+                elif isinstance(op, OverflowCheckOp):
+                    self._exec_overflow(state)
+                elif isinstance(op, OptimStepOp):
+                    self._exec_optim(op.unit, state)
                 elif isinstance(op, ReleaseOp):
                     state.live.pop(op.unit, None)
+                    tokens = state.live_slots.pop(op.unit, None)
+                    if tokens:
+                        self._device_slots.release_all(tokens)
         except BaseException:
-            # Error path: nothing may leak.  Outstanding reads are waited
-            # out and their slots returned; host-held checkpoints are freed.
-            # (KV pool slots belong to the SpillableKVCache, whose owner —
-            # generate()'s finally — closes it.)
-            for ckpt in state.checkpoints.values():
-                self._discard_checkpoint(ckpt)
-            state.checkpoints.clear()
-            state.live.clear()
-            state.kv_live.clear()
-            state.kv_append.clear()
-            self.swapper.drain()
+            self._abort_execute(state)
             raise
         return state
+
+    def _abort_execute(self, state: _ExecState) -> None:
+        """Error path: nothing may leak.  Host-held checkpoints are freed,
+        device-slot tokens returned (resident units first, so a staging
+        worker blocked on a slot can finish), staged fetches waited out,
+        and outstanding reads drained back to the pool.  (KV pool slots
+        belong to the SpillableKVCache, whose owner — generate()'s finally
+        — closes it.)"""
+        for ckpt in state.checkpoints.values():
+            self._discard_checkpoint(ckpt)
+        state.checkpoints.clear()
+        for tokens in state.live_slots.values():
+            self._device_slots.release_all(tokens)
+        state.live_slots.clear()
+        state.live.clear()
+        # Staged fetches must settle before the swapper drain: a queued
+        # H2D job that ran *after* the drain would re-issue its reads and
+        # leak device slots.  FIFO order keeps the worker's next blocked
+        # acquire always satisfiable by the tokens released just before it.
+        for pending in state.h2d.values():
+            for fut in pending:
+                try:
+                    _params, tokens = fut.result()
+                except BaseException:
+                    continue      # the worker released its own claims
+                self._device_slots.release_all(tokens)
+        state.h2d.clear()
+        state.kv_live.clear()
+        state.kv_append.clear()
+        if self._grad_writer is not None:
+            try:
+                self._grad_writer.drain()
+            except BaseException:
+                pass              # the original executor error propagates
+        self.swapper.drain()
 
     def _compute(self, op: ComputeOp, state: _ExecState) -> None:
         params = state.live[op.unit]
@@ -458,54 +712,138 @@ class OffloadSession:
         else:
             state.kv.append(unit_name, np.asarray(k), np.asarray(v))
 
-    def _write_grads(self, unit_name: str, grads: dict) -> None:
+    # -- gradient write-back -------------------------------------------------
+
+    def _dispatch_grad_write(self, unit_name: str, state: _ExecState) -> None:
+        """Run the D2H + flat-buffer scatter inline (sync/h2d modes) or
+        enqueue it on the writer thread (full overlap), gated on the
+        previous step's Adam having consumed the unit's flat region."""
+        grads = state.grads.pop(unit_name)
+        if self._grad_writer is None:
+            self._write_grads(unit_name, grads)
+            return
+        with self._optim_lock:
+            gate = self._optim_futures.get(unit_name)
+        self._grad_writer.submit(
+            functools.partial(self._write_grads, unit_name, grads, gate))
+
+    def _write_grads(self, unit_name: str, grads: dict,
+                     gate: Future | None = None) -> None:
         """Accumulate device grads into the fp32 host flat buffer."""
         if self.flat is None:
             raise RuntimeError("serve-mode session has no gradient buffer")
+        if gate is not None:
+            gate.result()   # step k-1's Adam must consume flat[unit] first
         _unit, meta = self._units[unit_name]
         for key in meta:
             off, size, shape = self._flat_offsets[f"{unit_name}/{key}"]
             g = np.asarray(grads[key], dtype=np.float32).reshape(-1)  # D2H
             self.flat[off:off + size] = g
 
+    # -- overflow + optimizer plan ops ---------------------------------------
+
+    def _exec_overflow(self, state: _ExecState) -> None:
+        """OverflowCheckOp: drain the writer (the barrier that makes every
+        GradWriteOp visible), screen the flat buffer, update the scaler."""
+        if self.flat is None:
+            raise RuntimeError("serve-mode session has no gradient buffer")
+        if self._grad_writer is not None:
+            t0 = time.perf_counter()
+            self._grad_writer.drain()
+            self._ostats.gradwrite_drain_seconds += time.perf_counter() - t0
+        state.overflowed = bool(flat_overflow_check(
+            self.flat, fused=self.policy.fused_overflow,
+            tracker=self.tracker))
+        state.apply = self.scaler.update(state.overflowed)
+
+    def _exec_optim(self, unit_name: str, state: _ExecState) -> None:
+        """OptimStepOp: stream one unit's subgroups through the host Adam —
+        inline, or on the optimizer worker with a readiness future that
+        gates the next step's fetch/grad-write for this unit."""
+        if self.optimizer is None:
+            raise RuntimeError("serve-mode session has no optimizer")
+        if state.apply is None:   # validated at plan build; defensive
+            raise RuntimeError("OptimStepOp before OverflowCheckOp")
+        if not state.apply:
+            return                # skipped step: weights unchanged
+        if not state.optim_begun:
+            state.optim_begun = True
+            if self._optim_worker is not None:
+                self._optim_worker.submit(self.optimizer.begin_step)
+            else:
+                self.optimizer.begin_step()
+        inv_scale = np.float32(1.0 / state.grad_scale)
+        if self._optim_worker is not None:
+            fut = self._optim_worker.submit(
+                functools.partial(self._optim_unit, unit_name, inv_scale))
+        else:
+            self._optim_unit(unit_name, inv_scale)
+            fut = done_future()
+        with self._optim_lock:
+            self._optim_futures[unit_name] = fut
+
+    def _optim_unit(self, unit_name: str, inv_scale: np.float32) -> None:
+        _unit, meta = self._units[unit_name]
+        for key in meta:
+            skey = f"{unit_name}/{key}"
+            off, size, shape = self._flat_offsets[skey]
+            # unscale with the scale the grads were produced under, not the
+            # post-update one — on a growth step they differ by 2x.  The
+            # multiply also copies out of the flat buffer, whose region is
+            # free for the next step's write-back once this future resolves.
+            grad = self.flat[off:off + size].reshape(shape) * inv_scale
+            self.optimizer.step_subgroup(skey, grad)
+
+    def _snapshot_optim_io(self) -> None:
+        # queued after a step's last OptimStepOp: the completed-step ledger
+        self._optim_io_completed = self.optimizer.last_io_bytes
+
     # -- workloads -----------------------------------------------------------
 
     def train_step(self, tokens: np.ndarray, labels: np.ndarray) -> dict:
+        """One streamed training step; the whole pipeline — forward,
+        backward, overflow screen, host Adam — executes as the train plan.
+
+        Under ``overlap="full"`` the optimizer stage may still be streaming
+        when this returns (it overlaps the *next* step's prefetch window);
+        ``metrics["optimizer_io_bytes"]`` then reports the most recently
+        *completed* step (0 until one completes) — call :meth:`synchronize`
+        first for an exact up-to-date value.
+        """
         if self.mode != "train":
             raise RuntimeError("train_step requires a train-mode session")
         wait0 = self.swapper.stats.wait_seconds
         hits0 = self.swapper.stats.prefetch_hits
+        o0 = self._ostats.snapshot()
         grad_scale = self.scaler.scale   # the flat-buffer grads carry this
         state = self.execute(self.plan("train"),
                              _ExecState(tokens, labels, grad_scale))
+        if self._optim_worker is not None and state.apply:
+            self._optim_worker.submit(self._snapshot_optim_io)
 
-        # ---- overflow check on the flat buffer ----
-        if self.policy.fused_overflow:
-            overflowed = fused_overflow_check(self.flat, tracker=self.tracker)
-        else:
-            overflowed = baseline_overflow_check(self.flat,
-                                                 tracker=self.tracker)
-        apply_step = self.scaler.update(overflowed)
-
-        # ---- host optimizer, subgroup-streamed ----
-        if apply_step:
-            self.optimizer.begin_step()
-            # unscale with the scale the grads were produced under, not the
-            # post-update one — on a growth step they differ by 2x.
-            inv_scale = np.float32(1.0 / grad_scale)
-            for skey, (off, size, shape) in self._flat_offsets.items():
-                grad = self.flat[off:off + size].reshape(shape) * inv_scale
-                self.optimizer.step_subgroup(skey, grad)
-
+        ssd_wait = self.swapper.stats.wait_seconds - wait0
+        h2d_wait = self._ostats.h2d_wait_seconds - o0["h2d_wait_seconds"]
         self.metrics = {
             "loss": float(state.loss),
-            "overflowed": overflowed,
-            "applied": apply_step,
+            "overflowed": state.overflowed,
+            "applied": state.apply,
             "loss_scale": self.scaler.scale,
-            "optimizer_io_bytes": self.optimizer.last_io_bytes,
+            "optimizer_io_bytes": (self._optim_io_completed
+                                   if self._optim_worker is not None
+                                   else self.optimizer.last_io_bytes),
             "peak_host_bytes": self.tracker.peak_allocated,
-            "fetch_wait_s": self.swapper.stats.wait_seconds - wait0,
-            "prefetch_hits": self.swapper.stats.prefetch_hits - hits0,
+            # compute-thread stall obtaining device weights at FetchOps —
+            # read wait + H2D inline (sync) or staged-future wait (overlap
+            # modes).  Comparable across overlap levels by construction.
+            "fetch_wait_s": self._ostats.fetch_seconds - o0["fetch_seconds"],
+            "ssd_wait_s": ssd_wait,    # raw read waits, whichever thread
+            "h2d_wait_s": h2d_wait,    # staged-future share of fetch_wait_s
+            "prefetch_hits": (self.swapper.stats.prefetch_hits - hits0
+                              + self._ostats.h2d_hits - o0["h2d_hits"]),
+            "gradwrite_drain_s": (self._ostats.gradwrite_drain_seconds
+                                  - o0["gradwrite_drain_seconds"]),
+            "optim_gate_s": (self._ostats.optim_gate_seconds
+                             - o0["optim_gate_seconds"]),
         }
         return self.metrics
 
@@ -601,16 +939,19 @@ class OffloadSession:
 
     def decode_compiles(self) -> int:
         """Total jit traces across the decode stages — the bench/test probe
-        for "zero retraces after the first token per bucket"."""
+        for "zero retraces after the first token per bucket".  Counts via
+        :func:`jit_cache_size`, the repo's single guarded touch point for
+        jax's private trace-count probe."""
         fns = (self._jit_embed, self._jit_head_logits, self._jit_head_last,
                self._jit_block_prefill, self._jit_block_step)
-        return sum(f._cache_size() for f in fns if f is not None)
+        return sum(jit_cache_size(f) for f in fns if f is not None)
 
     # -- weights access ------------------------------------------------------
 
     def master_param(self, unit_name: str, key: str) -> np.ndarray:
         if self.mode != "train":
             raise RuntimeError("serve-mode sessions hold no master weights")
+        self.synchronize()    # an in-flight Adam stage may still be writing
         _unit, meta = self._units[unit_name]
         shape, _ = meta[key]
         sd = self.policy.adam.state_np_dtype

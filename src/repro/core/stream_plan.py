@@ -3,7 +3,7 @@
 The paper's pipeline (§IV-A, Fig. 5/6) is a *lifecycle* — pool-slot checkout
 → async SSD read → H2D → compute → release — that the seed code hard-coded
 inside ``OffloadedTrainer.train_step``.  This module lifts that lifecycle
-into data: a :class:`StreamPlan` is a linear sequence of six op kinds
+into data: a :class:`StreamPlan` is a linear sequence of eight op kinds
 
 * :class:`FetchOp`    — stream one unit's compute weights SSD→pool→device,
 * :class:`ComputeOp`  — run one jitted stage against the resident weights,
@@ -14,6 +14,15 @@ into data: a :class:`StreamPlan` is a linear sequence of six op kinds
                         out an SSD refill if the layer had spilled),
 * :class:`KVWriteOp`  — land freshly produced K/V in the unit's host slot,
                         spilling onward past the residency budget,
+* :class:`OverflowCheckOp` — drain the gradient write-back queue, screen
+                        the flat buffer for Inf/NaN, update the loss
+                        scaler (decides whether the step applies),
+* :class:`OptimStepOp`— stream one unit's (master, m, v) subgroups through
+                        the host Adam.  Inside the plan — rather than after
+                        it — so the full-overlap executor can run step *k*'s
+                        optimizer interleaved with step *k+1*'s forward
+                        prefetch window (SSDTrain-style cross-step
+                        pipelining, arXiv 2408.10013),
 
 compiled once per workload from an ``OffloadableModel``:
 
@@ -107,7 +116,29 @@ class KVWriteOp:
     unit: str
 
 
-Op = FetchOp | ComputeOp | GradWriteOp | ReleaseOp | KVReadOp | KVWriteOp
+@dataclass(frozen=True)
+class OverflowCheckOp:
+    """Screen the gradient flat buffer for Inf/NaN and update the loss
+    scaler.  The executor first drains the asynchronous gradient writer —
+    this op is the barrier that makes every GradWriteOp's D2H visible —
+    then decides whether the step's OptimStepOps apply."""
+
+
+@dataclass(frozen=True)
+class OptimStepOp:
+    """Stream one unit's (master, m, v) subgroups through the host Adam
+    and emit fresh compute weights.  Skipped when the overflow check
+    rejected the step.  The executor may run it on the optimizer worker;
+    per-unit readiness then gates the *next* step's FetchOp for the same
+    unit (the weights on SSD must be post-update before they are re-read)
+    and the next step's GradWriteOp (the flat-buffer region must be
+    consumed before it is overwritten)."""
+
+    unit: str
+
+
+Op = (FetchOp | ComputeOp | GradWriteOp | ReleaseOp | KVReadOp | KVWriteOp
+      | OverflowCheckOp | OptimStepOp)
 
 
 class PlanError(ValueError):
@@ -145,13 +176,21 @@ class StreamPlan:
           (host checkpoint memory is returned),
         * ``block_step`` consumes a prior KVReadOp for its unit, every
           KVReadOp is consumed, and every KV-producing compute is landed by
-          a KVWriteOp (device K/V is never silently dropped).
+          a KVWriteOp (device K/V is never silently dropped),
+        * at most one OverflowCheckOp, after every GradWriteOp (it is the
+          barrier that makes the flat buffer whole), and every OptimStepOp
+          follows it, names a unit whose grads were written, runs at most
+          once per unit, and never touches a still-resident unit (the
+          device copy would go stale mid-plan).
         """
         resident: set[str] = set()
         pending_grads: set[str] = set()
         saved_inputs: set[str] = set()
         kv_loaded: set[str] = set()
         pending_kv: set[str] = set()
+        grads_written: set[str] = set()
+        optim_stepped: set[str] = set()
+        overflow_seen = False
         for i, op in enumerate(self.ops):
             where = f"{self.name}[{i}]"
             if isinstance(op, FetchOp):
@@ -202,7 +241,39 @@ class StreamPlan:
                 if op.unit not in pending_grads:
                     raise PlanError(f"{where}: grad write for {op.unit!r} "
                                     f"with no grads produced")
+                if overflow_seen:
+                    raise PlanError(f"{where}: grad write for {op.unit!r} "
+                                    f"after the overflow check (the check "
+                                    f"must see every gradient)")
                 pending_grads.discard(op.unit)
+                grads_written.add(op.unit)
+            elif isinstance(op, OverflowCheckOp):
+                if overflow_seen:
+                    raise PlanError(f"{where}: duplicate overflow check")
+                if not grads_written:
+                    raise PlanError(f"{where}: overflow check with no "
+                                    f"grads written")
+                if pending_grads:
+                    raise PlanError(f"{where}: overflow check with "
+                                    f"unwritten grads: "
+                                    f"{sorted(pending_grads)}")
+                overflow_seen = True
+            elif isinstance(op, OptimStepOp):
+                if not overflow_seen:
+                    raise PlanError(f"{where}: optimizer step for "
+                                    f"{op.unit!r} before the overflow "
+                                    f"check")
+                if op.unit not in grads_written:
+                    raise PlanError(f"{where}: optimizer step for "
+                                    f"{op.unit!r} with no written grads")
+                if op.unit in optim_stepped:
+                    raise PlanError(f"{where}: duplicate optimizer step "
+                                    f"for {op.unit!r}")
+                if op.unit in resident:
+                    raise PlanError(f"{where}: optimizer step while "
+                                    f"{op.unit!r} is resident (its device "
+                                    f"weights would go stale)")
+                optim_stepped.add(op.unit)
             elif isinstance(op, ReleaseOp):
                 if op.unit not in resident:
                     raise PlanError(f"{where}: release of non-resident unit "
@@ -252,8 +323,15 @@ def _forward_ops(model, *, checkpoint: bool) -> list[Op]:
 
 def compile_train(model) -> StreamPlan:
     """Forward (checkpointing block inputs) + loss/cotangent + reverse
-    backward + embedding backward — the seed ``train_step`` streaming order,
-    now as data."""
+    backward + embedding backward + overflow screen + per-unit optimizer —
+    the whole training step as data.
+
+    The OptimStepOps come last, ordered by the *next* step's fetch order
+    (embed, blocks, head): under full overlap each unit's Adam write-back
+    unblocks that unit's step-*k+1* prefetch, so the earliest-needed
+    weights are refreshed first and the cross-step pipeline never stalls
+    longer than one subgroup.
+    """
     embed, blocks, head = _unit_names(model)
     ops = _forward_ops(model, checkpoint=True)
     ops += [FetchOp(head), ComputeOp(head, "head_loss_grad"),
@@ -263,6 +341,9 @@ def compile_train(model) -> StreamPlan:
                 ReleaseOp(b), GradWriteOp(b)]
     ops += [FetchOp(embed), ComputeOp(embed, "embed_bwd"),
             ReleaseOp(embed), GradWriteOp(embed)]
+    ops.append(OverflowCheckOp())
+    for unit in [embed, *blocks, head]:
+        ops.append(OptimStepOp(unit))
     return StreamPlan("train", tuple(ops))
 
 

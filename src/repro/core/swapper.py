@@ -11,6 +11,13 @@ The engine calls :meth:`prefetch` ahead of use and :meth:`get` at use time;
 pool slot, and the engine releases the slot once the tensor has been copied
 to the device (H2D), returning capacity to the pool — exactly the lifecycle
 in §IV-A.
+
+For the full-overlap executor the blocking half moves off the compute
+thread: :meth:`claim` is the *issue* half of a split ``get`` — it takes
+ownership of the in-flight ticket without waiting — and the H2D worker
+waits the ticket itself, reporting the blocked time back through
+:meth:`record_get` so the stats stay one coherent ledger no matter which
+thread paid the wait.
 """
 
 from __future__ import annotations
@@ -108,10 +115,17 @@ class ParameterSwapper:
         with self._lock:
             return key in self._inflight
 
-    def get(self, key: str, dtype, shape, *,
-            class_name: str | None = None) -> FetchTicket:
-        """Fetch (prefetched or not) and wait for the data to be resident."""
-        t0 = time.perf_counter()
+    def claim(self, key: str, dtype, shape, *,
+              class_name: str | None = None
+              ) -> tuple[FetchTicket, bool, bool]:
+        """Issue half of a split :meth:`get`: take ownership of the
+        in-flight ticket (issuing a fallback read if none) WITHOUT waiting.
+
+        Returns ``(ticket, hit, fallback)``.  The caller owns the ticket
+        from here on — it must ``wait()`` it (releasing the slot itself on
+        a failed read, since drain() can no longer see the ticket) and
+        report the blocked time via :meth:`record_get`.
+        """
         with self._lock:
             ticket = self._inflight.pop(key, None)
         fallback = ticket is None
@@ -120,18 +134,32 @@ class ParameterSwapper:
             ticket = self.prefetch(key, dtype, shape, class_name=class_name)
             with self._lock:
                 self._inflight.pop(key, None)
-        try:
-            ticket.wait()
-        except BaseException:
-            # The ticket left _inflight above, so drain() can no longer see
-            # it — release the pool slot here or it leaks for the session.
-            ticket.release()
-            raise
+        return ticket, hit, fallback
+
+    def record_get(self, *, hit: bool, fallback: bool,
+                   wait_seconds: float) -> None:
+        """Account one completed (claim, wait) pair — from any thread."""
         with self._lock:
             self.stats.n_gets += 1
             self.stats.prefetch_hits += int(hit)
             self.stats.sync_fallbacks += int(fallback)
-            self.stats.wait_seconds += time.perf_counter() - t0
+            self.stats.wait_seconds += wait_seconds
+
+    def get(self, key: str, dtype, shape, *,
+            class_name: str | None = None) -> FetchTicket:
+        """Fetch (prefetched or not) and wait for the data to be resident."""
+        t0 = time.perf_counter()
+        ticket, hit, fallback = self.claim(key, dtype, shape,
+                                           class_name=class_name)
+        try:
+            ticket.wait()
+        except BaseException:
+            # The ticket left _inflight in claim(), so drain() can no longer
+            # see it — release the pool slot here or it leaks for the session.
+            ticket.release()
+            raise
+        self.record_get(hit=hit, fallback=fallback,
+                        wait_seconds=time.perf_counter() - t0)
         return ticket
 
     def drain(self) -> None:

@@ -43,11 +43,12 @@ def run_offloaded(cfg, args) -> None:
                     batch=b, seq_len=s)
     with tempfile.TemporaryDirectory(prefix="launch_offload_") as root:
         policy = (OffloadPolicy.preset(args.offload)
-                  .with_store(root).with_adam(lr=args.lr).build())
+                  .with_store(root).with_adam(lr=args.lr)
+                  .with_overlap(args.overlap).build())
         with OffloadSession(model, policy) as sess:
             print(f"offload policy {policy.name}: "
                   f"{sess.total_params / 1e6:.1f}M params, "
-                  f"lookahead {sess.lookahead}")
+                  f"lookahead {sess.lookahead}, overlap {policy.overlap}")
             t0 = time.time()
             for i in range(1, args.steps + 1):
                 hb = dl.next_batch()
@@ -56,7 +57,9 @@ def run_offloaded(cfg, args) -> None:
                     tput = i * b * s / (time.time() - t0)
                     print(f"step {i:4d} loss {m['loss']:.4f} "
                           f"fetch-wait {m['fetch_wait_s'] * 1e3:.0f}ms "
+                          f"optim-gate {m['optim_gate_s'] * 1e3:.0f}ms "
                           f"{tput:.0f} tok/s")
+            sess.synchronize()   # close the timing window on the last Adam
     print("offloaded train loop done")
 
 
@@ -74,6 +77,11 @@ def main() -> None:
                     choices=OffloadPolicy.names(),
                     help="run SSD-offloaded via this registry policy "
                          "instead of the pjit path")
+    ap.add_argument("--overlap", default="full",
+                    choices=["sync", "h2d", "full"],
+                    help="offload pipeline overlap level (the Fig. 6 "
+                         "ablation): sync H2D/gradwrite/optimizer, "
+                         "async H2D only, or the full pipeline")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)

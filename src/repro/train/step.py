@@ -20,14 +20,23 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.overflow import fused_overflow_check_jnp
+from repro.core.overflow import (baseline_overflow_check_jnp,
+                                 fused_overflow_check_jnp)
 from repro.launch import sharding as shd
 from repro.models.registry import ModelImpl
 
 
-def grads_overflow_flag(grads) -> jnp.ndarray:
-    """OR of the fused bitwise Inf/NaN screen across all gradient leaves."""
-    flags = [fused_overflow_check_jnp(g) for g in jax.tree.leaves(grads)]
+def grads_overflow_flag(grads, *, kind: str = "fused") -> jnp.ndarray:
+    """OR of the per-leaf Inf/NaN screen across all gradient leaves.
+
+    ``kind`` mirrors the offloaded path's ``OverflowCheckOp`` dispatch:
+    ``"fused"`` is the single-pass bitwise check (Algorithm 1), and
+    ``"baseline"`` keeps the chained abs→isinf/isnan formulation as the
+    on-device semantic reference for ablations.
+    """
+    check = {"fused": fused_overflow_check_jnp,
+             "baseline": baseline_overflow_check_jnp}[kind]
+    flags = [check(g) for g in jax.tree.leaves(grads)]
     out = flags[0]
     for f in flags[1:]:
         out = out | f
@@ -54,12 +63,19 @@ def make_act_hint(mesh):
 
 
 def build_train_step(impl: ModelImpl, mesh, *, batch_shape=None,
-                     check_overflow: bool = True, donate: bool = True):
+                     check_overflow: bool | str = True,
+                     donate: bool = True):
     """Returns (step_fn, in_shardings, out_shardings) ready to jit/lower.
 
     step_fn(params, batch, loss_scale) -> (loss, grads, overflow)
+
+    ``check_overflow``: ``False`` skips the screen; ``True``/``"fused"``
+    uses the single-pass bitwise check; ``"baseline"`` keeps the chained
+    formulation (the ablation axis the offloaded executor exposes through
+    ``policy.fused_overflow``).
     """
     cfg = impl.cfg
+    overflow_kind = "fused" if check_overflow is True else check_overflow
 
     def step(params, batch, loss_scale):
         def scaled_loss(p):
@@ -68,8 +84,8 @@ def build_train_step(impl: ModelImpl, mesh, *, batch_shape=None,
 
         (sloss, _), grads = jax.value_and_grad(scaled_loss, has_aux=True)(
             params)
-        overflow = grads_overflow_flag(grads) if check_overflow \
-            else jnp.zeros((), jnp.bool_)
+        overflow = grads_overflow_flag(grads, kind=overflow_kind) \
+            if overflow_kind else jnp.zeros((), jnp.bool_)
         return sloss / loss_scale, grads, overflow
 
     params_shape = jax.eval_shape(impl.init_params, jax.random.PRNGKey(0))

@@ -64,6 +64,30 @@ def test_fragmentation_metric():
     pool.close()
 
 
+def test_same_tag_double_checkout_keeps_both_records():
+    """Two concurrent checkouts under one tag (a unit's forward ticket
+    still staging while its backward re-fetch is issued inside a deep
+    lookahead window): the live-metadata hashtable must track both, and
+    releasing the first must drop *that* buffer's record, not the tag
+    (regression: a plain {tag: buf} map lost the first record and the
+    first release popped the wrong one)."""
+    pool = AdaptiveBufferPool(CENSUS, _alloc())
+    a = pool.acquire("ffn", 90_000, tag="block_0/w")
+    b = pool.acquire("ffn", 80_000, tag="block_0/w")
+    assert pool._live["block_0/w"] == [a, b]
+    a.release()
+    assert pool._live["block_0/w"] == [b]     # b's record survived
+    assert pool.in_use_payload == 80_000      # accounting tracked per-buf
+    b.release()
+    assert "block_0/w" not in pool._live
+    assert pool.in_use_payload == 0
+    # all slots back: a third acquire of every slot succeeds immediately
+    bufs = [pool.acquire("ffn", 100_000, timeout=0.5) for _ in range(6)]
+    for buf in bufs:
+        buf.release()
+    pool.close()
+
+
 def test_blocking_acquire_backpressure():
     census = PoolCensus((ShapeClass("ffn", 100, 1),), inflight_blocks=1)
     pool = AdaptiveBufferPool(census, _alloc())

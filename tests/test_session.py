@@ -162,6 +162,7 @@ def test_growth_step_unscales_with_pre_growth_scale(tmp_store_root):
             return real_step(key, grad)
         s.optimizer.step_subgroup = recording_step
         m = s.train_step(b["tokens"], b["labels"])
+        s.synchronize()   # full overlap: Adam streams on the worker
         assert m["applied"] and s.scaler.scale == 2048.0
         key = "embed/embed"
         off, size, shape = s._flat_offsets[key]
@@ -172,8 +173,12 @@ def test_growth_step_unscales_with_pre_growth_scale(tmp_store_root):
 # -- lookahead pipelining ----------------------------------------------------
 
 def test_lookahead_prefetches_next_block_before_current_get(tmp_store_root):
+    # overlap="sync" keeps every swapper event on the executor thread so
+    # the interleaving is deterministic; the window logic under test is
+    # identical in the overlap modes (covered by test_overlap_executor.py,
+    # which asserts outcomes rather than cross-thread event order).
     policy = (OffloadPolicy.preset("memascend").with_store(tmp_store_root)
-              .with_lookahead(2).build())
+              .with_lookahead(2).with_overlap("sync").build())
     b = _batch()
     with OffloadSession(_model(), policy) as s:
         rec = _RecordingSwapper(s.swapper)
@@ -185,7 +190,7 @@ def test_lookahead_prefetches_next_block_before_current_get(tmp_store_root):
 
 def test_lookahead_one_is_synchronous(tmp_store_root):
     policy = (OffloadPolicy.preset("memascend").with_store(tmp_store_root)
-              .with_lookahead(1).build())
+              .with_lookahead(1).with_overlap("sync").build())
     b = _batch()
     with OffloadSession(_model(), policy) as s:
         assert s.lookahead == 1

@@ -5,7 +5,8 @@ import jax
 import pytest
 
 from repro.configs.base import ModelConfig
-from repro.core import (ComputeOp, FetchOp, GradWriteOp, PlanError, ReleaseOp,
+from repro.core import (ComputeOp, FetchOp, GradWriteOp, OptimStepOp,
+                        OverflowCheckOp, PlanError, ReleaseOp,
                         StreamPlan, compile_decode, compile_eval,
                         compile_train)
 from repro.core.model_adapter import make_offloadable_lm
@@ -107,3 +108,80 @@ def test_validator_unknown_kind():
     with pytest.raises(PlanError, match="unknown compute kind"):
         StreamPlan("bad", (FetchOp("u"), ComputeOp("u", "frobnicate"),
                            ReleaseOp("u")))
+
+
+# -- overflow + optimizer ops (the in-plan training tail) --------------------
+
+def _graded_unit(unit="u"):
+    """fetch → block_bwd-style grad producer → release → grad write."""
+    return (FetchOp(unit), ComputeOp(unit, "head_loss_grad"),
+            ReleaseOp(unit), GradWriteOp(unit))
+
+
+def test_train_plan_has_overflow_then_optim_in_next_fetch_order(model):
+    plan = compile_train(model)
+    blocks = [f"block_{i:03d}" for i in range(CFG.n_layers)]
+    kinds = [type(op).__name__ for op in plan.ops]
+    # exactly one overflow check, after every grad write
+    assert kinds.count("OverflowCheckOp") == 1
+    check_at = kinds.index("OverflowCheckOp")
+    assert all(i < check_at for i, op in enumerate(plan.ops)
+               if isinstance(op, GradWriteOp))
+    # optimizer steps trail it, ordered by the NEXT step's fetch order so
+    # cross-step pipelining unblocks the earliest-needed weights first
+    optim = [op.unit for op in plan.ops if isinstance(op, OptimStepOp)]
+    assert optim == ["embed"] + blocks + ["head"]
+    assert all(isinstance(op, OptimStepOp) for op in plan.ops[check_at + 1:])
+
+
+def test_validator_duplicate_overflow_check():
+    with pytest.raises(PlanError, match="duplicate overflow check"):
+        StreamPlan("bad", _graded_unit() + (OverflowCheckOp(),
+                                            OverflowCheckOp()))
+
+
+def test_validator_overflow_check_needs_written_grads():
+    with pytest.raises(PlanError, match="no grads written"):
+        StreamPlan("bad", (OverflowCheckOp(),))
+
+
+def test_validator_overflow_check_with_unwritten_grads():
+    with pytest.raises(PlanError, match="unwritten grads"):
+        StreamPlan("bad", _graded_unit("u") + (
+            FetchOp("v"), ComputeOp("v", "head_loss_grad"), ReleaseOp("v"),
+            OverflowCheckOp(), GradWriteOp("v")))
+
+
+def test_validator_grad_write_after_overflow_check():
+    # (same shape as above but the message for the *write* must also fire
+    # when the producer wrote before the check and a second unit after it)
+    with pytest.raises(PlanError, match="unwritten grads|after the overflow"):
+        StreamPlan("bad", _graded_unit("u")
+                   + (FetchOp("v"), ComputeOp("v", "head_loss_grad"),
+                      ReleaseOp("v"))
+                   + (OverflowCheckOp(), GradWriteOp("v")))
+
+
+def test_validator_optim_before_overflow_check():
+    with pytest.raises(PlanError, match="before the overflow check"):
+        StreamPlan("bad", _graded_unit() + (OptimStepOp("u"),))
+
+
+def test_validator_optim_needs_written_grads():
+    with pytest.raises(PlanError, match="no written grads"):
+        StreamPlan("bad", _graded_unit("u") + (OverflowCheckOp(),
+                                               OptimStepOp("v")))
+
+
+def test_validator_duplicate_optim_step():
+    with pytest.raises(PlanError, match="duplicate optimizer step"):
+        StreamPlan("bad", _graded_unit() + (OverflowCheckOp(),
+                                            OptimStepOp("u"),
+                                            OptimStepOp("u")))
+
+
+def test_validator_optim_while_resident():
+    with pytest.raises(PlanError, match="resident"):
+        StreamPlan("bad", _graded_unit("u") + (
+            OverflowCheckOp(), FetchOp("u"), OptimStepOp("u"),
+            ReleaseOp("u")))

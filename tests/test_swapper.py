@@ -79,6 +79,31 @@ def test_stats_hit_fallback_discrimination(setup):
     assert swapper.stats.sync_fallbacks == 1
 
 
+def test_claim_split_get_records_stats_from_waiter(setup):
+    """The H2D worker's split get: claim() takes ticket ownership without
+    blocking; the waiter reports through record_get() and the ledger ends
+    identical to a plain get()."""
+    store, pool, swapper, tensors = setup
+    swapper.prefetch("t2", np.float32, (4096,))
+    ticket, hit, fallback = swapper.claim("t2", np.float32, (4096,))
+    assert not fallback
+    assert not swapper.in_flight("t2")       # ownership moved to the caller
+    view = ticket.wait()
+    np.testing.assert_array_equal(view, tensors["t2"])
+    swapper.record_get(hit=hit, fallback=fallback, wait_seconds=0.25)
+    ticket.release()
+    st = swapper.stats
+    assert st.n_gets == 1 and st.sync_fallbacks == 0
+    assert st.wait_seconds == 0.25
+    # claim with nothing in flight = the sync-fallback path, same as get()
+    ticket, hit, fallback = swapper.claim("t4", np.float32, (4096,))
+    assert fallback and not hit
+    ticket.wait()
+    swapper.record_get(hit=hit, fallback=fallback, wait_seconds=0.0)
+    ticket.release()
+    assert swapper.stats.sync_fallbacks == 1
+
+
 def test_drain_releases_all_slots_despite_failed_read(setup):
     """drain() must return every in-flight slot even when one read failed —
     it runs on error paths where stopping early would leak the rest."""
