@@ -52,6 +52,7 @@ def _run_policy(policy) -> dict:
         s.synchronize()
         losses = []
         fetch_wait = ssd_wait = optim_gate = 0.0
+        optim_prefetch_wait = overflow_screen = 0.0
         t0 = time.perf_counter()
         for _ in range(STEPS):
             b = dl.next_batch()
@@ -60,6 +61,8 @@ def _run_policy(policy) -> dict:
             fetch_wait += m["fetch_wait_s"]
             ssd_wait += m["ssd_wait_s"]
             optim_gate += m["optim_gate_s"]
+            optim_prefetch_wait += m["optim_prefetch_wait_s"]
+            overflow_screen += m["overflow_screen_s"]
         s.synchronize()
         dt = time.perf_counter() - t0
         peak = s.tracker.peak_allocated
@@ -70,6 +73,11 @@ def _run_policy(policy) -> dict:
         "fetch_wait_s": fetch_wait,   # compute-thread stall for weights
         "ssd_wait_s": ssd_wait,       # raw read waits (off-thread in overlap)
         "optim_gate_s": optim_gate,
+        # Adam-stage internals: optimizer worker blocked on staged state
+        # (the pipelined analogue of fetch wait) and per-region Inf/NaN
+        # screen time (paid off the barrier, on the writer thread)
+        "optim_prefetch_wait_s": optim_prefetch_wait,
+        "overflow_screen_s": overflow_screen,
     }
 
 
@@ -129,6 +137,10 @@ def run() -> None:
             "step_wait_ms_full": mem["fetch_wait_s"] * 1e3 * per_step,
             "ssd_wait_ms_full_offthread": mem["ssd_wait_s"] * 1e3 * per_step,
             "optim_gate_ms_full": mem["optim_gate_s"] * 1e3 * per_step,
+            "optim_prefetch_wait_ms_full": (
+                mem["optim_prefetch_wait_s"] * 1e3 * per_step),
+            "overflow_screen_ms_full": (
+                mem["overflow_screen_s"] * 1e3 * per_step),
             "loss_mismatch_steps": mismatches,
         },
         # tokens/s is machine-dependent; the speedup and mismatch metrics
@@ -172,3 +184,10 @@ def run() -> None:
          f"full={mem['fetch_wait_s'] * 1e3 * per_step:.1f}ms "
          f"(full hides {mem['ssd_wait_s'] * 1e3 * per_step:.1f}ms of SSD "
          f"wait on the staging worker)")
+    emit("e2e/adam-stage", mem["optim_gate_s"] * 1e6 / STEPS,
+         f"per-step optim-gate={mem['optim_gate_s'] * 1e3 * per_step:.1f}ms "
+         f"(pipelined state streaming; prefetch-wait inside the stage "
+         f"{mem['optim_prefetch_wait_s'] * 1e3 * per_step:.1f}ms, "
+         f"per-region overflow screen "
+         f"{mem['overflow_screen_s'] * 1e3 * per_step:.2f}ms off the "
+         f"barrier)")

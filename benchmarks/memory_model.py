@@ -9,7 +9,8 @@ models.  Components, following the paper's Fig. 8 breakdown:
                           long-lived pinned buffer
   gradient flat buffer    fp32, whole model (constant across methods)
   overflow-check temps    2.25x flat-buffer peak vs ~one chunk
-  optimizer stream        3 fp32 subgroup working copies (constant)
+  optimizer stream        double-buffered Adam staging: 2 x (3 fp32
+                          subgroup copies + truncation scratch)
   swap-out buffer         largest-tensor staging (constant)
   activation checkpoints  Eq. 1: N_g*B*C*L*H*2 bytes, offloaded-GC
 
@@ -100,11 +101,17 @@ def estimate_peak(cfg: ModelConfig, *, memascend: bool, n_gpus: int = 2,
             ckpt_payload = int(ckpt_payload * scale)
             ckpt_reserved = int(ckpt_reserved * scale)
 
-    # optimizer subgroup stream: 3 fp32 working copies of the largest
-    # subgroup per rank (constant across methods; paper's "small system
-    # allocations")
-    max_tensor = census.max_tensor_bytes // 2 * 4   # fp32 elems of largest
-    opt_stream = 3 * max_tensor * n_gpus
+    # optimizer subgroup stream: the pipelined Adam stage double-buffers
+    # its host staging — 2 buffers of (master, m, v) fp32 working copies
+    # of the largest subgroup plus a half-precision truncation scratch
+    # (compute weights are cast through it), all tracker-charged up front
+    # (constant across methods; see repro.core.optimizer._StagingArena).
+    # Modeled for the default fp32-state mode: a bf16-STATE policy
+    # (memascend-bf16) carries 3 state-scratch regions + the compute one
+    # (8 B/elem instead of 2) — this model does not take a state dtype.
+    max_elems = census.max_tensor_bytes // 2        # bf16 compute elems
+    max_tensor = max_elems * 4                      # fp32 bytes of largest
+    opt_stream = 2 * (3 * max_tensor + max_elems * 2) * n_gpus
     swap_buffer = max_tensor * n_gpus
 
     # overflow temporaries

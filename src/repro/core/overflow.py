@@ -104,11 +104,25 @@ def flat_overflow_check(grad: np.ndarray, *, fused: bool,
                         component: str = "overflow_tmp") -> bool:
     """Policy-dispatched flat-buffer screen — the ``OverflowCheckOp`` entry
     point.  ``grad`` may be the whole gradient flat buffer or any subgroup
-    region of it (both checks are pure elementwise reductions, so callers
-    that gain per-subgroup readiness can screen regions as they land and
-    OR the verdicts)."""
+    region of it: both checks are pure elementwise reductions, so the OR
+    of per-region verdicts over **any partition** of the buffer equals the
+    whole-buffer verdict (the invariant the per-subgroup screen relies on;
+    property-tested in ``tests/test_overflow_properties.py``).  The
+    full-overlap executor screens each unit's region with
+    :func:`check_region` as its gradient write-back lands and ORs the
+    verdicts at the barrier instead of scanning the whole buffer there."""
     check = fused_overflow_check if fused else baseline_overflow_check
     return check(grad, tracker=tracker, component=component)
+
+
+def check_region(flat: np.ndarray, lo: int, hi: int, *, fused: bool,
+                 tracker: MemoryTracker | None = None,
+                 component: str = "overflow_tmp") -> bool:
+    """Screen one ``[lo, hi)`` element region of the gradient flat buffer —
+    the per-subgroup half of the fused check (§IV-D run incrementally).
+    The region slice is a view; no copy is made."""
+    return flat_overflow_check(flat[lo:hi], fused=fused, tracker=tracker,
+                               component=component)
 
 
 def fused_overflow_check(grad: np.ndarray, *,

@@ -11,6 +11,12 @@ The paper's pipeline has four legs that should all hide under compute:
   optimizer       — step *k*'s subgroup-streamed host Adam runs on a third
                     SerialWorker, interleaved with step *k+1*'s forward
                     prefetch window (SSDTrain-style cross-step pipelining).
+                    Inside that stage a fourth SerialWorker (the
+                    state-prefetch worker) streams subgroup *k+1*'s
+                    (master, m, v) into a double-buffered staging arena and
+                    drains subgroup *k−1*'s write-backs while subgroup *k*'s
+                    arithmetic runs — the Adam stage's own store I/O hides
+                    under its own compute.
 
 This module holds the machinery shared by those legs; the session wires it
 to the StreamPlan executor (:mod:`repro.core.session`).  Everything here is
@@ -24,7 +30,7 @@ from __future__ import annotations
 import queue
 import threading
 from concurrent.futures import Future
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 
 def done_future(value=None) -> Future:
@@ -61,6 +67,11 @@ class SerialWorker:
         self._q: queue.Queue = queue.Queue(maxsize)
         self._latch = latch
         self._error: BaseException | None = None
+        # Consumed error INSTANCES (strong refs, identity semantics): a
+        # poisoned pipeline re-raises the same object from later tasks,
+        # which must not re-latch; holding the object (not its id) keeps
+        # a recycled address from masking an unrelated future failure.
+        self._delivered: list[BaseException] = []
         self._error_lock = threading.Lock()
         self._closed = False
         self._thread = threading.Thread(target=self._run, name=name,
@@ -82,7 +93,8 @@ class SerialWorker:
                     fut.set_exception(e)
                     if self._latch:
                         with self._error_lock:
-                            if self._error is None:
+                            if self._error is None and not any(
+                                    e is d for d in self._delivered):
                                 self._error = e
             finally:
                 self._q.task_done()
@@ -98,8 +110,13 @@ class SerialWorker:
     def consume_error(self, error: BaseException) -> None:
         """Mark ``error`` as delivered: a caller that just re-raised a task
         future's exception clears the latch so drain()/close() don't report
-        the same failure again."""
+        the same failure again.  The instance is remembered, so a *later*
+        task that fails with the very same exception object (a poisoned
+        pipeline failing fast — see the session's Adam stage) can never
+        re-latch a failure that was already delivered."""
         with self._error_lock:
+            if not any(error is d for d in self._delivered):
+                self._delivered.append(error)
             if self._error is error:
                 self._error = None
 
@@ -185,7 +202,12 @@ class OverlapStats:
     swapper's own wait moves onto the H2D worker thread (off the critical
     path) and this is the number that should stay near zero instead.
 
-    All fields are mutated by the single executor thread only.
+    Most fields are mutated by the single executor thread only.  The two
+    worker-side counters — ``optim_prefetch_wait_seconds`` (the optimizer
+    worker blocked on a state-prefetch future inside the Adam stage) and
+    ``overflow_screen_seconds`` (per-region Inf/NaN screens, paid on the
+    gradient-writer thread under full overlap) — are accumulated through
+    :meth:`add_worker_seconds`, which locks.
     """
 
     fetch_seconds: float = 0.0  # total FetchOp blocking: read wait + H2D,
@@ -196,10 +218,25 @@ class OverlapStats:
     h2d_wait_seconds: float = 0.0
     gradwrite_drain_seconds: float = 0.0  # OverflowCheckOp writer-drain stall
     optim_gate_seconds: float = 0.0       # prefetch blocked on step k-1 Adam
+    optim_prefetch_wait_seconds: float = 0.0  # Adam blocked on staged state
+    overflow_screen_seconds: float = 0.0      # per-region Inf/NaN screens
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False, compare=False)
+
+    def add_worker_seconds(self, name: str, dt: float) -> None:
+        """Accumulate a worker-thread stall into ``name`` (lock-guarded —
+        the Adam stage and the gradient writer report from their own
+        threads while the executor reads snapshots)."""
+        with self._lock:
+            setattr(self, name, getattr(self, name) + dt)
 
     def snapshot(self) -> dict:
+        with self._lock:
+            worker = {
+                "optim_prefetch_wait_seconds": self.optim_prefetch_wait_seconds,
+                "overflow_screen_seconds": self.overflow_screen_seconds}
         return {"fetch_seconds": self.fetch_seconds,
                 "h2d_gets": self.h2d_gets, "h2d_hits": self.h2d_hits,
                 "h2d_wait_seconds": self.h2d_wait_seconds,
                 "gradwrite_drain_seconds": self.gradwrite_drain_seconds,
-                "optim_gate_seconds": self.optim_gate_seconds}
+                "optim_gate_seconds": self.optim_gate_seconds, **worker}

@@ -30,9 +30,16 @@ of the paper's Fig. 6 full overlap (see :mod:`repro.core.overlap`):
   with step *k+1*'s forward prefetch window, with per-unit readiness
   futures gating the next step's fetch (weights must be post-update on
   the store) and grad write-back (the flat-buffer region must have been
-  consumed).  SSDTrain (arXiv 2408.10013) pipelines across steps the same
-  way.  Numerics are identical in every mode — the same float ops run in
-  the same order, only the thread that pays the wait changes.
+  consumed).  The Adam stage is itself pipelined: a state-prefetch worker
+  streams subgroup *k+1*'s (master, m, v) into a double-buffered staging
+  arena while subgroup *k*'s arithmetic runs, and subgroup *k−1*'s
+  write-backs drain behind them; readiness futures resolve at commit.
+  SSDTrain (arXiv 2408.10013) pipelines across steps the same way.
+  Fused-check policies also screen each unit's flat-buffer region for
+  Inf/NaN as its write-back lands (on the writer thread), so the overflow
+  barrier only ORs per-region verdicts instead of scanning the whole
+  buffer.  Numerics are identical in every mode — the same float ops run
+  in the same order, only the thread that pays the wait changes.
 
 The session runs four workloads through the same machinery:
 
@@ -72,7 +79,7 @@ from .kv_cache import DecodeSpec, SpillableKVCache
 from .loss_scale import DynamicLossScaler
 from .memory_tracker import MemoryTracker
 from .optimizer import OffloadedAdam
-from .overflow import flat_overflow_check
+from .overflow import check_region, flat_overflow_check
 from .overlap import DeviceSlots, OverlapStats, SerialWorker, done_future
 from .stream_plan import (ComputeOp, FetchOp, GradWriteOp, KVReadOp,
                           KVWriteOp, OptimStepOp, OverflowCheckOp,
@@ -215,6 +222,22 @@ class OffloadSession:
         self._h2d: SerialWorker | None = None
         self._grad_writer: SerialWorker | None = None
         self._optim_worker: SerialWorker | None = None
+        self._optim_prefetch: SerialWorker | None = None
+        # Adam-stage subgroup pipeline bookkeeping (see _exec_optim):
+        # _adam_work is appended by the executor thread under _adam_lock
+        # and read by the optimizer worker; the issue counter and in-flight
+        # deque are touched by the optimizer worker only (tasks are FIFO
+        # on its single thread).
+        self._adam_lock = threading.Lock()
+        self._adam_work: list[tuple[str, str]] = []   # (unit, param key)
+        self._adam_issued = 0
+        self._adam_inflight: deque = deque()          # (index, staged fut)
+        self._adam_poison: BaseException | None = None
+        # per-subgroup overflow screen: verdicts land per unit (writer
+        # thread under full overlap) and are OR-ed at the barrier.
+        self._screen_lock = threading.Lock()
+        self._region_verdicts: dict[str, bool] = {}
+        self._screen_regions = policy.fused_overflow and mode == "train"
         if policy.overlap in ("h2d", "full"):
             per_unit: dict[str, int] = {}
             for unit in model.units:
@@ -235,12 +258,28 @@ class OffloadSession:
         if policy.overlap == "full" and mode == "train":
             self._grad_writer = SerialWorker("offload-gradwrite", maxsize=4)
             self._optim_worker = SerialWorker("offload-optim")
+            # The Adam stage's own I/O thread: issues (state reads into the
+            # double-buffered staging arena) and commits (write-backs)
+            # both run here, submitted in an order that keeps the arena's
+            # blocking acquire always satisfiable (see
+            # _optim_unit_pipelined).  latch=False: every future is
+            # awaited by the optimizer worker, which delivers failures
+            # through the unit readiness future — a close()-time re-raise
+            # would double-report.
+            self._optim_prefetch = SerialWorker("offload-optim-prefetch",
+                                                latch=False)
 
         # Register every parameter.  Train mode seeds master weights + Adam
         # moments on the store; serve mode writes only compute weights.
         self.optimizer = (OffloadedAdam(self.store, policy.adam,
                                         tracker=self.tracker)
                           if mode == "train" else None)
+        if self.optimizer is not None:
+            # stale-read guard on the Adam commit's compute-weight write:
+            # the per-unit readiness gates guarantee no prefetched read of
+            # a unit's weights is in flight while its commit writes them —
+            # assert it at the write site (see swapper.assert_not_in_flight)
+            self.optimizer.write_guard = self._guard_compute_write
         cd = policy.adam.compute_np_dtype
         self._unit_param_meta: list[tuple] = []
         self._units: dict[str, tuple] = {}
@@ -266,12 +305,17 @@ class OffloadSession:
                                                   tag="gradient_flat_buffer")
             self.flat = self._flat_buf.view(np.float32, (total_params,))
             self._flat_offsets: dict[str, tuple[int, int, tuple]] = {}
+            self._unit_flat_region: dict[str, tuple[int, int]] = {}
             off = 0
             for unit, meta in self._unit_param_meta:
+                lo = off
                 for key, (shape, size) in meta.items():
                     self._flat_offsets[f"{unit.name}/{key}"] = (
                         off, size, shape)
                     off += size
+                # a unit's parameters are contiguous in the flat buffer:
+                # [lo, off) is the region its per-subgroup screen covers
+                self._unit_flat_region[unit.name] = (lo, off)
         else:
             self._flat_buf = None
             self.flat = None
@@ -324,18 +368,24 @@ class OffloadSession:
         Worker order matters: the H2D worker goes first (its queued jobs
         own swapper tickets), then the gradient writer (its tasks may gate
         on optimizer futures, so the optimizer worker must still be alive),
-        then the optimizer worker, and only then the swapper drain that
-        sweeps any ticket nobody claimed."""
+        then the optimizer worker (whose unit tasks wait on state-prefetch
+        futures, so that worker must still be alive), then the
+        state-prefetch worker, and only then the swapper drain that sweeps
+        any ticket nobody claimed.  The optimizer's staging arena is freed
+        after every worker that touches it has stopped."""
         if getattr(self, "_closed", True):
             return
         self._closed = True
         steps = []
         if getattr(self, "_kv_cache", None) is not None:
             steps.append(self._kv_cache.close)
-        for worker_attr in ("_h2d", "_grad_writer", "_optim_worker"):
+        for worker_attr in ("_h2d", "_grad_writer", "_optim_worker",
+                            "_optim_prefetch"):
             worker = getattr(self, worker_attr, None)
             if worker is not None:
                 steps.append(worker.close)
+        if getattr(self, "optimizer", None) is not None:
+            steps.append(self.optimizer.close)
         if getattr(self, "swapper", None) is not None:
             steps.append(self.swapper.drain)
         if getattr(self, "pool", None) is not None:
@@ -367,6 +417,10 @@ class OffloadSession:
             self._grad_writer.drain()
         if self._optim_worker is not None:
             self._optim_worker.drain()
+        if self._optim_prefetch is not None:
+            # empty by construction once the optimizer worker drained (unit
+            # tasks wait out their own commits); drained for completeness
+            self._optim_prefetch.drain()
 
     # -- plans --------------------------------------------------------------
 
@@ -498,6 +552,12 @@ class OffloadSession:
 
     # -- cross-step optimizer readiness --------------------------------------
 
+    def _guard_compute_write(self, key: str) -> None:
+        """Adam-commit hook: refreshing ``key``'s compute weights on the
+        store while a prefetched read of them is in flight would race the
+        pread (the readiness gates forbid it; this asserts it)."""
+        self.swapper.assert_not_in_flight(key + COMPUTE_SUFFIX)
+
     def _optim_ready(self, unit_name: str) -> bool:
         """True when the unit's previous-step Adam landed *successfully* —
         a done-with-exception future is NOT ready (the store still holds
@@ -608,7 +668,7 @@ class OffloadSession:
                 elif isinstance(op, GradWriteOp):
                     self._dispatch_grad_write(op.unit, state)
                 elif isinstance(op, OverflowCheckOp):
-                    self._exec_overflow(state)
+                    self._exec_overflow(op, state)
                 elif isinstance(op, OptimStepOp):
                     self._exec_optim(op.unit, state)
                 elif isinstance(op, ReleaseOp):
@@ -729,7 +789,11 @@ class OffloadSession:
 
     def _write_grads(self, unit_name: str, grads: dict,
                      gate: Future | None = None) -> None:
-        """Accumulate device grads into the fp32 host flat buffer."""
+        """Accumulate device grads into the fp32 host flat buffer, then
+        screen the unit's region for Inf/NaN (fused policies only): the
+        per-subgroup half of the overflow check runs right here — on the
+        writer thread under full overlap — and the barrier only ORs the
+        verdicts."""
         if self.flat is None:
             raise RuntimeError("serve-mode session has no gradient buffer")
         if gate is not None:
@@ -739,27 +803,72 @@ class OffloadSession:
             off, size, shape = self._flat_offsets[f"{unit_name}/{key}"]
             g = np.asarray(grads[key], dtype=np.float32).reshape(-1)  # D2H
             self.flat[off:off + size] = g
+        if self._screen_regions:
+            self._screen_unit_region(unit_name)
+
+    def _screen_unit_region(self, unit_name: str) -> None:
+        lo, hi = self._unit_flat_region[unit_name]
+        t0 = time.perf_counter()
+        verdict = bool(check_region(self.flat, lo, hi, fused=True,
+                                    tracker=self.tracker))
+        self._ostats.add_worker_seconds("overflow_screen_seconds",
+                                        time.perf_counter() - t0)
+        with self._screen_lock:
+            self._region_verdicts[unit_name] = verdict
 
     # -- overflow + optimizer plan ops ---------------------------------------
 
-    def _exec_overflow(self, state: _ExecState) -> None:
+    def _exec_overflow(self, op: OverflowCheckOp, state: _ExecState) -> None:
         """OverflowCheckOp: drain the writer (the barrier that makes every
-        GradWriteOp visible), screen the flat buffer, update the scaler."""
+        GradWriteOp visible), combine the step verdict, update the scaler.
+
+        With ``op.regions`` under a fused policy the verdict is the OR of
+        the per-region screens that already ran as each write-back landed
+        (equal to the whole-buffer scan by the partition invariant —
+        property-tested); the chained-baseline policy, whose 2.25x
+        temporary peak is the thing being measured, keeps the legacy
+        whole-buffer scan here."""
         if self.flat is None:
             raise RuntimeError("serve-mode session has no gradient buffer")
         if self._grad_writer is not None:
             t0 = time.perf_counter()
             self._grad_writer.drain()
             self._ostats.gradwrite_drain_seconds += time.perf_counter() - t0
-        state.overflowed = bool(flat_overflow_check(
-            self.flat, fused=self.policy.fused_overflow,
-            tracker=self.tracker))
+        with self._screen_lock:
+            verdicts, self._region_verdicts = self._region_verdicts, {}
+        if op.regions and self._screen_regions:
+            overflow = False
+            for unit in op.regions:
+                verdict = verdicts.get(unit)
+                if verdict is None:
+                    # a write-back that bypassed the screen (e.g. a test
+                    # stubbing _write_grads): screen the region now so the
+                    # verdict still covers every gradient
+                    lo, hi = self._unit_flat_region[unit]
+                    t0 = time.perf_counter()
+                    verdict = bool(check_region(self.flat, lo, hi,
+                                                fused=True,
+                                                tracker=self.tracker))
+                    self._ostats.add_worker_seconds(
+                        "overflow_screen_seconds", time.perf_counter() - t0)
+                overflow = overflow or verdict
+        else:
+            overflow = bool(flat_overflow_check(
+                self.flat, fused=self.policy.fused_overflow,
+                tracker=self.tracker))
+        state.overflowed = overflow
         state.apply = self.scaler.update(state.overflowed)
 
     def _exec_optim(self, unit_name: str, state: _ExecState) -> None:
         """OptimStepOp: stream one unit's subgroups through the host Adam —
-        inline, or on the optimizer worker with a readiness future that
-        gates the next step's fetch/grad-write for this unit."""
+        inline, or pipelined across the optimizer + state-prefetch workers
+        with a readiness future that resolves when the unit's **last
+        write-back lands** (commit), gating the next step's fetch and
+        grad-write for this unit.
+
+        An overflow-skipped step (``state.apply`` false) returns before
+        anything is enqueued, so no state is prefetched for it and nothing
+        is left in flight to corrupt."""
         if self.optimizer is None:
             raise RuntimeError("serve-mode session has no optimizer")
         if state.apply is None:   # validated at plan build; defensive
@@ -769,13 +878,29 @@ class OffloadSession:
         if not state.optim_begun:
             state.optim_begun = True
             if self._optim_worker is not None:
+                # previous-step Adam tasks have all resolved (every unit's
+                # grad write this step gated on its step k-1 future and the
+                # barrier drained the writer), so the pipeline bookkeeping
+                # can be reset from this thread before new work lands
+                with self._adam_lock:
+                    self._adam_work = []
+                self._adam_issued = 0
+                self._adam_inflight = deque()
+                self._adam_poison = None
                 self._optim_worker.submit(self.optimizer.begin_step)
             else:
                 self.optimizer.begin_step()
         inv_scale = np.float32(1.0 / state.grad_scale)
         if self._optim_worker is not None:
+            _unit, meta = self._units[unit_name]
+            with self._adam_lock:
+                lo = len(self._adam_work)
+                self._adam_work.extend(
+                    (unit_name, key) for key in meta)
+                hi = len(self._adam_work)
             fut = self._optim_worker.submit(
-                functools.partial(self._optim_unit, unit_name, inv_scale))
+                functools.partial(self._optim_unit_pipelined, unit_name,
+                                  lo, hi, inv_scale))
         else:
             self._optim_unit(unit_name, inv_scale)
             fut = done_future()
@@ -783,16 +908,126 @@ class OffloadSession:
             self._optim_futures[unit_name] = fut
 
     def _optim_unit(self, unit_name: str, inv_scale: np.float32) -> None:
+        """Inline (sync/h2d) Adam stage: stream subgroups synchronously
+        (the same three halves, composed back to back; no compute-weight
+        return copy is materialized — the store holds it)."""
         _unit, meta = self._units[unit_name]
         for key in meta:
             skey = f"{unit_name}/{key}"
-            off, size, shape = self._flat_offsets[skey]
-            # unscale with the scale the grads were produced under, not the
-            # post-update one — on a growth step they differ by 2x.  The
-            # multiply also copies out of the flat buffer, whose region is
-            # free for the next step's write-back once this future resolves.
-            grad = self.flat[off:off + size].reshape(shape) * inv_scale
-            self.optimizer.step_subgroup(skey, grad)
+            staged = self.optimizer.issue_subgroup(skey)
+            try:
+                self.optimizer.compute_subgroup(
+                    staged, self._unit_grad(skey, inv_scale))
+            except BaseException:
+                self.optimizer.discard_staged(staged)
+                raise
+            self.optimizer.commit_subgroup(staged)
+
+    def _unit_grad(self, skey: str, inv_scale: np.float32) -> np.ndarray:
+        """Unscale one subgroup's gradient out of the flat buffer.
+
+        Unscale with the scale the grads were produced under, not the
+        post-update one — on a growth step they differ by 2x.  The multiply
+        also copies out of the flat buffer, whose region is free for the
+        next step's write-back once the unit's readiness future resolves.
+        """
+        off, size, shape = self._flat_offsets[skey]
+        return self.flat[off:off + size].reshape(shape) * inv_scale
+
+    # -- the pipelined Adam stage (full overlap) -----------------------------
+
+    def _adam_ensure_issued(self, upto: int) -> None:
+        """Submit state-prefetch issues for work indices < ``upto``.
+
+        Runs on the optimizer worker only.  Deadlock-freedom of the
+        arena's blocking acquire (inside the issue, on the state-prefetch
+        worker): every held buffer is released by a write-completion
+        callback on the store's async pool (commit), by the optimizer
+        worker (error paths), or by the issue's own failure handler —
+        never by a task queued *behind* the blocked issue on the
+        state-prefetch worker itself.
+        """
+        with self._adam_lock:
+            n = len(self._adam_work)
+            pending = [self._adam_work[i]
+                       for i in range(self._adam_issued, min(upto, n))]
+        for unit_name, key in pending:
+            fut = self._optim_prefetch.submit(functools.partial(
+                self.optimizer.issue_subgroup, f"{unit_name}/{key}"))
+            self._adam_inflight.append((self._adam_issued, fut))
+            self._adam_issued += 1
+
+    def _optim_unit_pipelined(self, unit_name: str, lo: int, hi: int,
+                              inv_scale: np.float32) -> None:
+        """Optimizer-worker task for one unit's subgroups [lo, hi):
+        subgroup *k+1*'s (master, m, v) streams into the staging arena
+        while *k*'s ``adam_update`` runs, and *k−1*'s write-backs drain
+        asynchronously behind them on the optimizer's dedicated
+        write-back executor.  Returns — resolving the unit's readiness
+        future — only once every commit landed.
+
+        On any failure the whole in-flight window is drained (commits
+        waited, issued-but-uncomputed buffers released) so the staging
+        arena is whole again, and the step is **poisoned**: the remaining
+        unit tasks fail fast with the *same* exception instance before
+        issuing anything, so a failure surfaces exactly once (the worker
+        never re-latches a delivered instance) while every affected
+        unit's readiness future still refuses to serve its un-updated
+        weights."""
+        if self._adam_poison is not None:
+            raise self._adam_poison
+        commits: list[Future] = []
+        try:
+            for g in range(lo, hi):
+                self._adam_ensure_issued(g + 2)
+                idx, staged_fut = self._adam_inflight.popleft()
+                if idx != g:    # defensive; the reset/cleanup paths keep
+                    raise RuntimeError(   # issue order == work order
+                        f"adam pipeline out of order: staged {idx}, "
+                        f"expected {g}")
+                t0 = time.perf_counter()
+                try:
+                    staged = staged_fut.result()
+                finally:
+                    self._ostats.add_worker_seconds(
+                        "optim_prefetch_wait_seconds",
+                        time.perf_counter() - t0)
+                try:
+                    self.optimizer.compute_subgroup(
+                        staged, self._unit_grad(staged.key, inv_scale))
+                except BaseException:
+                    self.optimizer.discard_staged(staged)
+                    raise
+                commits.append(
+                    self.optimizer.commit_subgroup_async(staged))
+            for commit in commits:
+                commit.result()
+        except BaseException as e:
+            self._adam_poison = e
+            self._adam_abort(commits, resume_at=hi)
+            raise
+
+    def _adam_abort(self, commits: list[Future], *, resume_at: int) -> None:
+        """Failure path of a unit task: wait out this unit's commits
+        (each releases its own buffer), release every issued-but-never-
+        computed staging buffer, and reset the issue counter to
+        ``resume_at`` (the failed unit's end).  The reset is bookkeeping
+        hygiene only: the step is poisoned, so the remaining unit tasks
+        fail fast without ever issuing again — nothing is re-issued until
+        the next step resets the pipeline wholesale."""
+        for commit in commits:
+            try:
+                commit.result()
+            except BaseException:
+                pass    # the buffer was released in commit's finally
+        while self._adam_inflight:
+            _idx, staged_fut = self._adam_inflight.popleft()
+            try:
+                staged = staged_fut.result()
+            except BaseException:
+                continue        # a failed issue released its own buffer
+            self.optimizer.discard_staged(staged)
+        self._adam_issued = resume_at
 
     def _snapshot_optim_io(self) -> None:
         # queued after a step's last OptimStepOp: the completed-step ledger
@@ -845,6 +1080,15 @@ class OffloadSession:
             "optim_gate_s": (self._ostats.optim_gate_seconds
                              - o0["optim_gate_seconds"]),
         }
+        o1 = self._ostats.snapshot()
+        # worker-side counters: the Adam stage of step k accrues these
+        # while step k+1's window runs, so (like optim_gate_s) they are
+        # attributed to the train_step whose wall-clock window they land in
+        self.metrics["optim_prefetch_wait_s"] = (
+            o1["optim_prefetch_wait_seconds"]
+            - o0["optim_prefetch_wait_seconds"])
+        self.metrics["overflow_screen_s"] = (
+            o1["overflow_screen_seconds"] - o0["overflow_screen_seconds"])
         return self.metrics
 
     def eval_loss(self, tokens: np.ndarray, labels: np.ndarray) -> float:

@@ -118,10 +118,23 @@ class KVWriteOp:
 
 @dataclass(frozen=True)
 class OverflowCheckOp:
-    """Screen the gradient flat buffer for Inf/NaN and update the loss
-    scaler.  The executor first drains the asynchronous gradient writer —
-    this op is the barrier that makes every GradWriteOp's D2H visible —
-    then decides whether the step's OptimStepOps apply."""
+    """Combine the step's Inf/NaN verdict and update the loss scaler.  The
+    executor first drains the asynchronous gradient writer — this op is
+    the barrier that makes every GradWriteOp's D2H visible — then decides
+    whether the step's OptimStepOps apply.
+
+    ``regions`` selects the **per-subgroup screen**: each named unit's
+    flat-buffer region is screened (fused bitwise pass) as its GradWriteOp
+    lands — on the writer thread under full overlap — and this op only ORs
+    the per-region verdicts.  The OR over any partition of the flat buffer
+    equals the whole-buffer verdict (property-tested), so the barrier no
+    longer pays a whole-buffer scan.  The validator requires ``regions``
+    to name every grad-written unit exactly once, in gradient write order
+    (screens happen at write time, so region order IS write order).  An
+    empty ``regions`` keeps the legacy whole-buffer scan at the barrier
+    (the chained-baseline policy measures exactly that cost)."""
+
+    regions: tuple[str, ...] = ()
 
 
 @dataclass(frozen=True)
@@ -178,10 +191,14 @@ class StreamPlan:
           KVReadOp is consumed, and every KV-producing compute is landed by
           a KVWriteOp (device K/V is never silently dropped),
         * at most one OverflowCheckOp, after every GradWriteOp (it is the
-          barrier that makes the flat buffer whole), and every OptimStepOp
-          follows it, names a unit whose grads were written, runs at most
-          once per unit, and never touches a still-resident unit (the
-          device copy would go stale mid-plan).
+          barrier that makes the flat buffer whole); when it names
+          ``regions`` they must cover every grad-written unit exactly
+          once, in gradient write order (the per-region screens run at
+          write time — a region out of order or missing would leave a
+          gradient unscreened); and every OptimStepOp follows it, names a
+          unit whose grads were written, runs at most once per unit, and
+          never touches a still-resident unit (the device copy would go
+          stale mid-plan).
         """
         resident: set[str] = set()
         pending_grads: set[str] = set()
@@ -189,6 +206,7 @@ class StreamPlan:
         kv_loaded: set[str] = set()
         pending_kv: set[str] = set()
         grads_written: set[str] = set()
+        grad_write_order: list[str] = []
         optim_stepped: set[str] = set()
         overflow_seen = False
         for i, op in enumerate(self.ops):
@@ -247,6 +265,7 @@ class StreamPlan:
                                     f"must see every gradient)")
                 pending_grads.discard(op.unit)
                 grads_written.add(op.unit)
+                grad_write_order.append(op.unit)
             elif isinstance(op, OverflowCheckOp):
                 if overflow_seen:
                     raise PlanError(f"{where}: duplicate overflow check")
@@ -257,6 +276,12 @@ class StreamPlan:
                     raise PlanError(f"{where}: overflow check with "
                                     f"unwritten grads: "
                                     f"{sorted(pending_grads)}")
+                if op.regions and list(op.regions) != grad_write_order:
+                    raise PlanError(
+                        f"{where}: per-region screen order "
+                        f"{list(op.regions)} != gradient write order "
+                        f"{grad_write_order} (every written region must "
+                        f"be screened exactly once, as its write lands)")
                 overflow_seen = True
             elif isinstance(op, OptimStepOp):
                 if not overflow_seen:
@@ -341,7 +366,10 @@ def compile_train(model) -> StreamPlan:
                 ReleaseOp(b), GradWriteOp(b)]
     ops += [FetchOp(embed), ComputeOp(embed, "embed_bwd"),
             ReleaseOp(embed), GradWriteOp(embed)]
-    ops.append(OverflowCheckOp())
+    # per-subgroup screen: each unit's flat region is checked as its write
+    # lands; the barrier only ORs the verdicts (regions in write order)
+    ops.append(OverflowCheckOp(
+        regions=(head, *reversed(blocks), embed)))
     for unit in [embed, *blocks, head]:
         ops.append(OptimStepOp(unit))
     return StreamPlan("train", tuple(ops))

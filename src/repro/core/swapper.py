@@ -82,7 +82,21 @@ class ParameterSwapper:
         self.class_of = class_of or {}
         self.stats = SwapStats()
         self._inflight: dict[str, FetchTicket] = {}
+        # keys whose SSD pread has not completed yet (count per key):
+        # unlike _inflight — which claim() pops while the read may still
+        # be copying — this follows the read future itself, so the
+        # stale-read write guard covers the claimed-but-still-reading
+        # window too
+        self._reading: dict[str, int] = {}
         self._lock = threading.Lock()
+
+    def _read_done(self, key: str) -> None:
+        with self._lock:
+            n = self._reading.get(key, 0) - 1
+            if n > 0:
+                self._reading[key] = n
+            else:
+                self._reading.pop(key, None)
 
     def _shape_class(self, key: str, explicit: str | None) -> str:
         if explicit is not None:
@@ -103,7 +117,10 @@ class ParameterSwapper:
         nbytes = int(np.dtype(dtype).itemsize * np.prod(shape, dtype=np.int64))
         buf = self.pool.acquire(cls, nbytes, tag=key)  # may block = backpressure
         out = buf.view(dtype, shape)
+        with self._lock:
+            self._reading[key] = self._reading.get(key, 0) + 1
         future = self.store.read_async(key, out)
+        future.add_done_callback(lambda _f: self._read_done(key))
         ticket = FetchTicket(key, buf, future, dtype, shape)
         with self._lock:
             self._inflight[key] = ticket
@@ -114,6 +131,24 @@ class ParameterSwapper:
         """True if an issued read for ``key`` has not been consumed yet."""
         with self._lock:
             return key in self._inflight
+
+    def assert_not_in_flight(self, key: str) -> None:
+        """Stale-read guard for store writers (the Adam commit's
+        compute-weight write path): a write to ``key`` while a prefetched
+        read of it is still copying would race the in-flight ``pread``
+        and could serve half-old bytes to the next fetch.  The session's
+        per-unit readiness gates make this impossible by construction —
+        this assertion locks the invariant down at the write site.  Both
+        windows are covered: an unconsumed ticket (``_inflight``) and a
+        claimed ticket whose pread has not completed (``_reading``, which
+        follows the read future itself)."""
+        with self._lock:
+            outstanding = key in self._inflight or key in self._reading
+        if outstanding:
+            raise RuntimeError(
+                f"write to {key!r} while a prefetched read of it is in "
+                f"flight; the writer must wait for the fetch gate (per-unit "
+                f"readiness) before refreshing weights on the store")
 
     def claim(self, key: str, dtype, shape, *,
               class_name: str | None = None

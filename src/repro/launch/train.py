@@ -58,6 +58,10 @@ def run_offloaded(cfg, args) -> None:
                     print(f"step {i:4d} loss {m['loss']:.4f} "
                           f"fetch-wait {m['fetch_wait_s'] * 1e3:.0f}ms "
                           f"optim-gate {m['optim_gate_s'] * 1e3:.0f}ms "
+                          f"optim-prefetch-wait "
+                          f"{m['optim_prefetch_wait_s'] * 1e3:.0f}ms "
+                          f"overflow-screen "
+                          f"{m['overflow_screen_s'] * 1e3:.1f}ms "
                           f"{tput:.0f} tok/s")
             sess.synchronize()   # close the timing window on the last Adam
     print("offloaded train loop done")

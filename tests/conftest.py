@@ -1,6 +1,8 @@
+import collections
 import importlib.util
 import os
 import sys
+import threading
 
 # Smoke tests and benches must see exactly ONE device; the 512-device flag
 # belongs to the dry-run process only (see launch/dryrun.py).
@@ -24,6 +26,32 @@ except ModuleNotFoundError:
 
 import numpy as np
 import pytest
+
+# Named worker threads the offload stack may spin up: session pipeline
+# workers ("offload-h2d", "offload-gradwrite", "offload-optim",
+# "offload-optim-prefetch"), the Direct NVMe I/O pool ("direct-nvme"), and
+# every store's lazy async executor ("<Engine>-aio").
+_WORKER_PREFIXES = ("offload-", "direct-nvme")
+
+
+def _worker_threads() -> collections.Counter:
+    return collections.Counter(
+        t.name for t in threading.enumerate()
+        if t.name.startswith(_WORKER_PREFIXES) or "-aio" in t.name)
+
+
+@pytest.fixture(autouse=True)
+def worker_thread_leak_guard():
+    """Suite-wide thread-leak guard: any test that leaves a named pipeline
+    or I/O worker running has leaked a session, store, or SerialWorker.
+    Replaces the ad-hoc per-test thread censuses that used to live in
+    test_overlap_executor.py and test_nvme.py."""
+    before = _worker_threads()
+    yield
+    leaked = _worker_threads() - before
+    assert not leaked, (
+        f"test leaked worker threads: {sorted(leaked.elements())} — close "
+        f"every OffloadSession, TensorStore, and SerialWorker it opened")
 
 
 @pytest.fixture

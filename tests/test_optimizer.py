@@ -85,3 +85,86 @@ def test_skipped_step_changes_nothing(tmp_store_root, rng):
     np.testing.assert_array_equal(
         eng.read_new("w.master", np.float32, w0.shape), before)
     eng.close()
+
+
+def test_split_halves_compose_to_step_subgroup(tmp_store_root, rng):
+    """issue/compute/commit run separately must be byte-identical to the
+    one-call step_subgroup (the pipelined executor uses the halves)."""
+    cfg = AdamConfig(lr=1e-2, weight_decay=0.01)
+    w0 = rng.standard_normal((32, 24)).astype(np.float32)
+    grads = [rng.standard_normal((32, 24)).astype(np.float32)
+             for _ in range(3)]
+    masters = {}
+    for mode in ("fused", "split"):
+        eng = DirectNVMeEngine(f"{tmp_store_root}/{mode}", n_devices=1,
+                               device_capacity=1 << 24)
+        opt = OffloadedAdam(eng, cfg, tracker=MemoryTracker())
+        opt.register("w", w0)
+        for g in grads:
+            opt.begin_step()
+            if mode == "fused":
+                opt.step_subgroup("w", g)
+            else:
+                staged = opt.issue_subgroup("w")
+                opt.compute_subgroup(staged, g)
+                opt.commit_subgroup(staged)
+        assert opt.staging_idle()
+        masters[mode] = eng.read_new("w.master", np.float32, w0.shape)
+        opt.close()
+        eng.close()
+    np.testing.assert_array_equal(masters["fused"].view(np.uint8),
+                                  masters["split"].view(np.uint8))
+
+
+def test_staging_arena_charge_and_bf16_scratch(tmp_store_root, rng):
+    """The double-buffered arena is one tracked allocation sized
+    2 x (3 x max-subgroup fp32 + truncation scratch); the former untracked
+    astype transients are gone.  bf16 state mode needs a scratch (reads
+    and write-backs pass through it); pure-fp32 mode needs none."""
+    for state_dtype, compute_dtype, scratch_per_elem in (
+            ("float32", "float32", 0),
+            ("float32", "bfloat16", 2),
+            # bf16 states: 3 concurrently-written bf16 regions + compute
+            ("bfloat16", "bfloat16", 3 * 2 + 2)):
+        t = MemoryTracker()
+        eng = DirectNVMeEngine(
+            f"{tmp_store_root}/{state_dtype}-{compute_dtype}",
+            n_devices=1, device_capacity=1 << 24)
+        opt = OffloadedAdam(eng, AdamConfig(state_dtype=state_dtype,
+                                            compute_dtype=compute_dtype),
+                            tracker=t)
+        opt.register("small", rng.standard_normal(100).astype(np.float32))
+        opt.register("big", rng.standard_normal(1000).astype(np.float32))
+        opt.begin_step()
+        opt.step_subgroup("big", np.zeros(1000, np.float32))
+        opt.step_subgroup("small", np.zeros(100, np.float32))
+        comp = t.component("optimizer_stream")
+        assert comp.peak_allocated == 2 * (3 * 1000 * 4
+                                           + 1000 * scratch_per_elem)
+        assert comp.n_allocs == 1           # the arena, once — not per call
+        opt.close()
+        assert t.component("optimizer_stream").live_allocated == 0
+        t.assert_quiescent()
+        eng.close()
+
+
+def test_failed_issue_releases_staging_buffer(tmp_store_root, rng):
+    eng = DirectNVMeEngine(tmp_store_root, n_devices=1,
+                           device_capacity=1 << 24)
+    opt = OffloadedAdam(eng, AdamConfig(), tracker=MemoryTracker())
+    opt.register("w", rng.standard_normal(64).astype(np.float32))
+    real_read = eng.read
+
+    def flaky_read(key, out):
+        if key.endswith(".v"):
+            raise IOError("boom")
+        return real_read(key, out)
+
+    eng.read = flaky_read
+    opt.begin_step()
+    import pytest
+    with pytest.raises(IOError, match="boom"):
+        opt.issue_subgroup("w")
+    assert opt.staging_idle()
+    opt.close()
+    eng.close()

@@ -156,11 +156,11 @@ def test_growth_step_unscales_with_pre_growth_scale(tmp_store_root):
         s.scaler.scale = 1024.0
         s.scaler.growth_interval = 1    # next good step doubles the scale
         seen = {}
-        real_step = s.optimizer.step_subgroup
-        def recording_step(key, grad):
-            seen[key] = np.asarray(grad, dtype=np.float32)
-            return real_step(key, grad)
-        s.optimizer.step_subgroup = recording_step
+        real_compute = s.optimizer.compute_subgroup
+        def recording_compute(staged, grad):
+            seen[staged.key] = np.asarray(grad, dtype=np.float32)
+            return real_compute(staged, grad)
+        s.optimizer.compute_subgroup = recording_compute
         m = s.train_step(b["tokens"], b["labels"])
         s.synchronize()   # full overlap: Adam streams on the worker
         assert m["applied"] and s.scaler.scale == 2048.0

@@ -185,3 +185,45 @@ def test_validator_optim_while_resident():
         StreamPlan("bad", _graded_unit("u") + (
             OverflowCheckOp(), FetchOp("u"), OptimStepOp("u"),
             ReleaseOp("u")))
+
+
+# -- per-region overflow screen (OverflowCheckOp.regions) --------------------
+
+def test_train_plan_screens_every_written_region_in_write_order(model):
+    plan = compile_train(model)
+    check = next(op for op in plan.ops if isinstance(op, OverflowCheckOp))
+    writes = [op.unit for op in plan.ops if isinstance(op, GradWriteOp)]
+    assert list(check.regions) == writes
+    blocks = [f"block_{i:03d}" for i in range(CFG.n_layers)]
+    assert list(check.regions) == ["head"] + blocks[::-1] + ["embed"]
+
+
+def test_validator_regions_must_match_write_order():
+    with pytest.raises(PlanError, match="per-region screen order"):
+        StreamPlan("bad", _graded_unit("u") + _graded_unit("v")
+                   + (OverflowCheckOp(regions=("v", "u")),))
+
+
+def test_validator_regions_must_cover_every_written_unit():
+    with pytest.raises(PlanError, match="per-region screen order"):
+        StreamPlan("bad", _graded_unit("u") + _graded_unit("v")
+                   + (OverflowCheckOp(regions=("u",)),))
+
+
+def test_validator_regions_reject_unwritten_unit():
+    with pytest.raises(PlanError, match="per-region screen order"):
+        StreamPlan("bad", _graded_unit("u")
+                   + (OverflowCheckOp(regions=("u", "ghost")),))
+
+
+def test_validator_regions_reject_duplicates():
+    with pytest.raises(PlanError, match="per-region screen order"):
+        StreamPlan("bad", _graded_unit("u") + _graded_unit("v")
+                   + (OverflowCheckOp(regions=("u", "u", "v")),))
+
+
+def test_validator_empty_regions_keep_whole_buffer_scan_valid():
+    # the chained-baseline policy's legacy barrier scan: still a valid plan
+    plan = StreamPlan("ok", _graded_unit("u") + (OverflowCheckOp(),))
+    check = plan.ops[-1]
+    assert check.regions == ()

@@ -127,3 +127,65 @@ def test_pipeline_over_all_tensors(setup):
             ticket.buf.view(np.float32, (4096,)), tensors[k])
         ticket.release()
     assert pool.in_use_payload == 0
+
+
+def test_assert_not_in_flight_guards_store_writers(tmp_store_root, rng):
+    """The Adam commit's compute-weight write path uses this guard: a
+    write over a key with an unconsumed prefetched read must be refused
+    (the pread could race the pwrite and serve half-old bytes)."""
+    store = DirectNVMeEngine(tmp_store_root, n_devices=1,
+                             device_capacity=1 << 24)
+    alloc = AlignmentFreeAllocator(tracker=MemoryTracker(),
+                                   component="pool", backing="numpy")
+    census = PoolCensus((ShapeClass("w", 1024 * 4, 2),), inflight_blocks=2)
+    pool = AdaptiveBufferPool(census, alloc)
+    x = rng.standard_normal(1024).astype(np.float32)
+    store.write("k", x)
+    sw = ParameterSwapper(store, pool, class_of={"k": "w"})
+    sw.assert_not_in_flight("k")          # nothing issued: fine
+    sw.prefetch("k", np.float32, (1024,))
+    with pytest.raises(RuntimeError, match="in flight"):
+        sw.assert_not_in_flight("k")
+    t = sw.get("k", np.float32, (1024,))  # consume the read
+    t.release()
+    sw.assert_not_in_flight("k")          # consumed: fine again
+    sw.drain()
+    pool.close()
+    store.close()
+
+
+def test_write_guard_covers_claimed_but_still_reading_window(
+        tmp_store_root, rng):
+    """claim() pops the ticket out of _inflight while the pread may still
+    be copying — the guard must keep firing until the read future
+    completes (it follows the future, not the ticket)."""
+    import threading
+    store = DirectNVMeEngine(tmp_store_root, n_devices=1,
+                             device_capacity=1 << 24)
+    alloc = AlignmentFreeAllocator(tracker=MemoryTracker(),
+                                   component="pool", backing="numpy")
+    census = PoolCensus((ShapeClass("w", 1024 * 4, 2),), inflight_blocks=2)
+    pool = AdaptiveBufferPool(census, alloc)
+    x = rng.standard_normal(1024).astype(np.float32)
+    store.write("k", x)
+    sw = ParameterSwapper(store, pool, class_of={"k": "w"})
+    release_read = threading.Event()
+    real_read = store.read
+
+    def gated_read(key, out):
+        release_read.wait(timeout=30)
+        return real_read(key, out)
+
+    store.read = gated_read
+    ticket, _hit, _fb = sw.claim("k", np.float32, (1024,))
+    assert len(sw._inflight) == 0          # claimed: ticket popped
+    with pytest.raises(RuntimeError, match="in flight"):
+        sw.assert_not_in_flight("k")       # ...but the pread still runs
+    release_read.set()
+    ticket.wait()
+    sw.record_get(hit=False, fallback=True, wait_seconds=0.0)
+    sw.assert_not_in_flight("k")           # read complete: write is safe
+    ticket.release()
+    sw.drain()
+    pool.close()
+    store.close()
