@@ -5,9 +5,18 @@ Three configurations of the same model, prompts, and greedy loop:
 * ``uncached``     — PR-1 behaviour: every emitted token re-runs the full
                      prefix (O(T^2) compute) and retraces the jitted stages
                      as the (batch, time) shape grows.
-* ``cached``       — spill-able KV cache, every layer host-resident.
-* ``cached_spill`` — KV residency budget of 2 layers: cold layers round-trip
-                     through the SSD store, prefetched under compute.
+* ``cached``       — paged spill-able KV cache, every page host-resident.
+* ``cached_spill`` — KV residency budget of 2 layer-equivalents in pages:
+                     cold pages round-trip through the SSD store,
+                     prefetched + gathered on the staging worker under
+                     compute.
+
+A second, long-context ablation isolates what paging the time axis buys:
+the same generation under the same host KV budget, once with bucket-sized
+pages (only dirty tail pages pay spill writes; clean pages drop for free)
+and once with ``page_tokens == max_seq`` — PR 2's whole-layer spill unit.
+The paged configuration's KV spill bytes must come in strictly below the
+whole-layer value, with identical output tokens.
 
 Reports tokens/s, retrace counts (cold compile count and warm retraces —
 the acceptance bar is zero warm retraces per bucket), peak host bytes,
@@ -48,6 +57,10 @@ CFG = ModelConfig(
 )
 BATCH, PROMPT_LEN, NEW_TOKENS = 4, 32, 48
 BUCKET, MAX_SEQ = 32, 96
+# Long-context spill ablation: same host KV budget (2 layer-equivalents),
+# paged (bucket-sized pages) vs whole-layer (page_tokens == max_seq, the
+# PR-2 spill unit).
+LC_MAX_SEQ, LC_NEW_TOKENS = 192, 48
 OUT_PATH = "BENCH_decode.json"
 
 
@@ -89,8 +102,29 @@ def _run(root: str, spec: DecodeSpec | None) -> dict:
             "step_s_early": early,
             "step_s_late": late,
             "kv": dec.kv_stats,
+            "kv_overlap": dec.kv_overlap_stats,
         }
     return result
+
+
+def _run_spill_ablation(root: str, spec: DecodeSpec, prompts) -> dict:
+    """One long-context cached generate; returns tokens + the KV spill
+    ledger (the paged-vs-whole-layer comparison needs bytes, not time).
+
+    Runs under overlap="sync" so the byte ledgers are exactly
+    deterministic and can gate with zero noise: with the staging worker
+    on, its MRU touches/pins race the compute thread's eviction scan and
+    the dirty-spill vs clean-drop mix can drift run to run."""
+    model = make_offloadable_lm(CFG, jax.random.PRNGKey(0))
+    policy = (
+        OffloadPolicy.preset("memascend")
+        .with_store(root)
+        .with_overlap("sync")
+        .build()
+    )
+    with OffloadedDecoder(model, policy, decode=spec) as dec:
+        tokens = dec.generate(prompts, LC_NEW_TOKENS)
+        return {"tokens": tokens.tolist(), "kv": dec.kv_stats}
 
 
 def _uncached_reference(root: str, prompts) -> tuple[np.ndarray, list]:
@@ -202,14 +236,41 @@ def run() -> None:
     root = tempfile.mkdtemp(prefix="bench_decode_")
     spec = DecodeSpec(batch=BATCH, max_seq=MAX_SEQ, bucket=BUCKET)
     spill = DecodeSpec(batch=BATCH, max_seq=MAX_SEQ, bucket=BUCKET, resident_blocks=2)
+    lc_paged = DecodeSpec(
+        batch=BATCH, max_seq=LC_MAX_SEQ, bucket=BUCKET, resident_blocks=2
+    )
+    lc_layer = DecodeSpec(
+        batch=BATCH,
+        max_seq=LC_MAX_SEQ,
+        bucket=BUCKET,
+        resident_blocks=2,
+        page_tokens=LC_MAX_SEQ,
+    )
     try:
         uncached = _run(root + "/u", None)
         cached = _run(root + "/c", spec)
         spilled = _run(root + "/s", spill)
+        paged = _run_spill_ablation(root + "/lp", lc_paged, _prompts())
+        layer = _run_spill_ablation(root + "/ll", lc_layer, _prompts())
         _ref_tokens, ref_logits = _uncached_reference(root + "/r", _prompts())
         equiv = _cached_equivalence(root + "/e", spec, _prompts(), ref_logits)
     finally:
         shutil.rmtree(root, ignore_errors=True)
+
+    # Page-size acceptance gates for the long-context ablation: paging only
+    # changes the spill/refill unit, never the jitted math, so tokens must
+    # match exactly — and the whole point of the block table is that the
+    # same host budget moves strictly fewer spill bytes.
+    if paged["tokens"] != layer["tokens"]:
+        raise AssertionError(
+            f"page size changed the decoded tokens: {paged['tokens']} vs "
+            f"{layer['tokens']}"
+        )
+    if not paged["kv"]["spill_bytes"] < layer["kv"]["spill_bytes"]:
+        raise AssertionError(
+            f"paged spill I/O ({paged['kv']['spill_bytes']} B) is not below "
+            f"the whole-layer spill unit ({layer['kv']['spill_bytes']} B)"
+        )
 
     # Equivalence acceptance gates, every emitted step, every request:
     # (1) spilling is lossless — the two cached variants run identical
@@ -236,6 +297,9 @@ def run() -> None:
             "bucket": BUCKET,
             "max_seq": MAX_SEQ,
             "spill_resident_blocks": 2,
+            "page_tokens": BUCKET,
+            "lc_max_seq": LC_MAX_SEQ,
+            "lc_new_tokens": LC_NEW_TOKENS,
         },
         "metrics": {
             "tokens_per_s_cached": cached["tokens_per_s"],
@@ -258,9 +322,19 @@ def run() -> None:
                 uncached["step_s_late"] / uncached["step_s_early"]
             ),
             "kv_spills": spilled["kv"]["spills"],
+            "kv_clean_drops": spilled["kv"]["clean_drops"],
             "kv_refills": spilled["kv"]["refills"],
             "kv_prefetch_hits": spilled["kv"]["prefetch_hits"],
+            "kv_spill_bytes": spilled["kv"]["spill_bytes"],
             "kv_wait_s": spilled["kv"]["wait_seconds"],
+            "kv_stage_gets": spilled["kv_overlap"]["kv_stage_gets"],
+            "kv_stage_hits": spilled["kv_overlap"]["kv_stage_hits"],
+            "kv_stage_wait_s": spilled["kv_overlap"]["kv_stage_wait_s"],
+            "lc_kv_spill_bytes_paged": paged["kv"]["spill_bytes"],
+            "lc_kv_spill_bytes_whole_layer": layer["kv"]["spill_bytes"],
+            "lc_kv_refill_bytes_paged": paged["kv"]["refill_bytes"],
+            "lc_kv_refill_bytes_whole_layer": layer["kv"]["refill_bytes"],
+            "lc_kv_clean_drops_paged": paged["kv"]["clean_drops"],
             "logit_max_rel_diff": equiv["logit_max_rel_diff"],
             "argmax_agreement": equiv["argmax_agreement"],
             "argmax_flips_beyond_tol": equiv["argmax_flips_beyond_tol"],
@@ -275,6 +349,13 @@ def run() -> None:
             "retraces_warm_cached": "lower_is_better",
             "argmax_flips_beyond_tol": "lower_is_better",
             "argmax_agreement": "higher_is_better",
+            # the LC ablation runs under overlap="sync", so its byte
+            # ledger is exactly deterministic — a paged-eviction
+            # regression moves it, timing noise cannot.  (kv_spill_bytes
+            # from the overlapped short config is reported but NOT gated:
+            # the staging worker's MRU touches race the eviction scan, so
+            # its dirty/clean mix can drift a little run to run.)
+            "lc_kv_spill_bytes_paged": "lower_is_better",
         },
         "threshold": 0.2,
     }
@@ -302,8 +383,25 @@ def run() -> None:
         1e6 / spilled["tokens_per_s"],
         f"spill_tput={spilled['tokens_per_s']:.1f}tok/s "
         f"spills={spilled['kv']['spills']} "
+        f"clean_drops={spilled['kv']['clean_drops']} "
         f"refills={spilled['kv']['refills']} "
         f"prefetch_hits={spilled['kv']['prefetch_hits']}",
+    )
+    emit(
+        "decode/kv-overlap",
+        spilled["kv_overlap"]["kv_stage_wait_s"] * 1e6,
+        f"staged_gets={spilled['kv_overlap']['kv_stage_gets']} "
+        f"hits={spilled['kv_overlap']['kv_stage_hits']} "
+        f"wait={spilled['kv_overlap']['kv_stage_wait_s'] * 1e3:.1f}ms "
+        f"(KV H2D on the staging worker, off the compute thread)",
+    )
+    emit(
+        "decode/paged-spill-bytes",
+        float(paged["kv"]["spill_bytes"]),
+        f"paged={paged['kv']['spill_bytes'] / 1e6:.2f}MB vs "
+        f"whole-layer={layer['kv']['spill_bytes'] / 1e6:.2f}MB "
+        f"({layer['kv']['spill_bytes'] / max(1, paged['kv']['spill_bytes']):.1f}x less, "
+        f"same budget, tokens identical)",
     )
     emit(
         "decode/peak-host",

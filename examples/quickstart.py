@@ -13,53 +13,60 @@ from repro.core import (AdaptiveBufferPool, AlignmentFreeAllocator,
                         PowerOfTwoCachingAllocator, baseline_overflow_check,
                         fused_overflow_check, fmt_bytes)
 
-cfg = PAPER_MODELS["llama3.1-8b"]
-print(f"model: {cfg.name} ({cfg.param_count() / 1e9:.2f}B params)\n")
 
-# 1) Adaptive buffer pool (paper SIV-B) ------------------------------------
-census = cfg.pool_census(inflight_blocks=1, shards=2)
-fixed = FixedBufferPool(census, AlignmentFreeAllocator(
-    tracker=MemoryTracker(), component="p"))
-adaptive = AdaptiveBufferPool(census, AlignmentFreeAllocator(
-    tracker=MemoryTracker(), component="p"))
-print(f"[1] parameter buffer pool: fixed {fmt_bytes(fixed.pool_bytes)}"
-      f" -> adaptive {fmt_bytes(adaptive.pool_bytes)}"
-      f"  (-{1 - adaptive.pool_bytes / fixed.pool_bytes:.1%})")
+def main() -> None:
+    cfg = PAPER_MODELS["llama3.1-8b"]
+    print(f"model: {cfg.name} ({cfg.param_count() / 1e9:.2f}B params)\n")
 
-# 2) Alignment-free pinned allocation (SIV-C) ------------------------------
-req = int(2.1 * 2**30)
-t1, t2 = MemoryTracker(), MemoryTracker()
-PowerOfTwoCachingAllocator(tracker=t1, component="x").alloc(req)
-AlignmentFreeAllocator(tracker=t2, component="x").alloc(req)
-print(f"[2] pinned alloc of {fmt_bytes(req)}: pow2 reserves "
-      f"{fmt_bytes(t1.live_allocated)}, alignment-free "
-      f"{fmt_bytes(t2.live_allocated)}")
+    # 1) Adaptive buffer pool (paper SIV-B) --------------------------------
+    census = cfg.pool_census(inflight_blocks=1, shards=2)
+    fixed = FixedBufferPool(census, AlignmentFreeAllocator(
+        tracker=MemoryTracker(), component="p"))
+    adaptive = AdaptiveBufferPool(census, AlignmentFreeAllocator(
+        tracker=MemoryTracker(), component="p"))
+    print(f"[1] parameter buffer pool: fixed {fmt_bytes(fixed.pool_bytes)}"
+          f" -> adaptive {fmt_bytes(adaptive.pool_bytes)}"
+          f"  (-{1 - adaptive.pool_bytes / fixed.pool_bytes:.1%})")
 
-# 3) Fused overflow check (SIV-D) ------------------------------------------
-grads = np.random.default_rng(0).standard_normal(20_000_000).astype(
-    np.float32)
-t = MemoryTracker()
-baseline_overflow_check(grads, tracker=t)
-peak_chained = t.component("overflow_tmp").peak_allocated
-t = MemoryTracker()
-fused_overflow_check(grads, tracker=t)
-peak_fused = t.component("overflow_tmp").peak_allocated
-print(f"[3] overflow check temps on a {fmt_bytes(grads.nbytes)} buffer: "
-      f"chained {fmt_bytes(peak_chained)} vs fused {fmt_bytes(peak_fused)}")
+    # 2) Alignment-free pinned allocation (SIV-C) --------------------------
+    req = int(2.1 * 2**30)
+    t1, t2 = MemoryTracker(), MemoryTracker()
+    PowerOfTwoCachingAllocator(tracker=t1, component="x").alloc(req)
+    AlignmentFreeAllocator(tracker=t2, component="x").alloc(req)
+    print(f"[2] pinned alloc of {fmt_bytes(req)}: pow2 reserves "
+          f"{fmt_bytes(t1.live_allocated)}, alignment-free "
+          f"{fmt_bytes(t2.live_allocated)}")
 
-# 4) Direct NVMe engine (SIV-E) --------------------------------------------
-with tempfile.TemporaryDirectory() as root:
-    eng = DirectNVMeEngine(root, n_devices=2, device_capacity=1 << 28)
-    x = np.random.default_rng(1).standard_normal((1024, 1024)).astype(
+    # 3) Fused overflow check (SIV-D) --------------------------------------
+    grads = np.random.default_rng(0).standard_normal(20_000_000).astype(
         np.float32)
-    eng.write("layer0/w_q", x)
-    y = eng.read_new("layer0/w_q", np.float32, x.shape)
-    assert np.array_equal(x, y)
-    ext = eng._locations["layer0/w_q"][2]
-    print(f"[4] direct NVMe engine: {fmt_bytes(x.nbytes)} striped across "
-          f"{len(ext)} raw devices at LBAs "
-          f"{[(e.device, e.offset) for e in ext]}")
-    eng.close()
+    t = MemoryTracker()
+    baseline_overflow_check(grads, tracker=t)
+    peak_chained = t.component("overflow_tmp").peak_allocated
+    t = MemoryTracker()
+    fused_overflow_check(grads, tracker=t)
+    peak_fused = t.component("overflow_tmp").peak_allocated
+    print(f"[3] overflow check temps on a {fmt_bytes(grads.nbytes)} buffer: "
+          f"chained {fmt_bytes(peak_chained)} vs fused {fmt_bytes(peak_fused)}")
 
-fixed.close(); adaptive.close()
-print("\nquickstart OK")
+    # 4) Direct NVMe engine (SIV-E) ----------------------------------------
+    with tempfile.TemporaryDirectory() as root:
+        eng = DirectNVMeEngine(root, n_devices=2, device_capacity=1 << 28)
+        x = np.random.default_rng(1).standard_normal((1024, 1024)).astype(
+            np.float32)
+        eng.write("layer0/w_q", x)
+        y = eng.read_new("layer0/w_q", np.float32, x.shape)
+        assert np.array_equal(x, y)
+        ext = eng._locations["layer0/w_q"][2]
+        print(f"[4] direct NVMe engine: {fmt_bytes(x.nbytes)} striped across "
+              f"{len(ext)} raw devices at LBAs "
+              f"{[(e.device, e.offset) for e in ext]}")
+        eng.close()
+
+    fixed.close()
+    adaptive.close()
+    print("\nquickstart OK")
+
+
+if __name__ == "__main__":
+    main()

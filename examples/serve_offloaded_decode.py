@@ -3,15 +3,19 @@ live on the (raw-file) NVMe store, streamed block-by-block per token through
 the OffloadSession/StreamPlan machinery — serving on a host that cannot
 hold the model in DRAM.
 
-By default generation runs the cached path: a spill-able KV cache in the
-same pinned pool arena as the weight staging slots (``--kv-resident``
-layers stay host-resident, the rest round-trip through the SSD store),
-prefill-then-step with time-bucketed compile-once stages.  ``--no-cache``
-falls back to the O(T²) full-prefix re-run for comparison.
+By default generation runs the cached path: a paged spill-able KV cache in
+the same pinned pool arena as the weight staging slots.  K/V lives in
+fixed-size time-axis pages (``--page-tokens``, default: the bucket size);
+``--kv-resident`` layer-equivalents (or ``--resident-pages`` page slots)
+stay host-resident and colder pages round-trip through the SSD store —
+only dirty pages pay a spill write, and each block's attended window is
+gathered + H2D'd on the staging worker under the previous block's compute.
+``--no-cache`` falls back to the O(T²) full-prefix re-run for comparison.
 
 Run:  PYTHONPATH=src python examples/serve_offloaded_decode.py \
           [--policy memascend|zero-infinity] [--new-tokens 16] \
-          [--kv-resident 2] [--bucket 16] [--no-cache] [--lookahead 2]
+          [--kv-resident 2 | --resident-pages 4] [--bucket 16] \
+          [--page-tokens 16] [--no-cache] [--lookahead 2]
 """
 
 import argparse
@@ -44,7 +48,14 @@ def main() -> None:
     ap.add_argument("--bucket", type=int, default=16,
                     help="KV time-bucket granularity (jit once per bucket)")
     ap.add_argument("--kv-resident", type=int, default=None,
-                    help="host KV budget in layers (default: all resident)")
+                    help="host KV budget in layer-equivalents "
+                         "(default: all pages resident)")
+    ap.add_argument("--page-tokens", type=int, default=None,
+                    help="KV spill page size in tokens (default: bucket; "
+                         "must align with it)")
+    ap.add_argument("--resident-pages", type=int, default=None,
+                    help="host KV budget directly in page slots "
+                         "(overrides --kv-resident)")
     args = ap.parse_args()
 
     model = make_offloadable_lm(CFG, jax.random.PRNGKey(0))
@@ -56,7 +67,10 @@ def main() -> None:
         max_seq = args.prompt_len + args.new_tokens
         decode = DecodeSpec(batch=args.batch, max_seq=max_seq,
                             bucket=min(args.bucket, max_seq),
-                            resident_blocks=args.kv_resident)
+                            resident_blocks=(None if args.resident_pages
+                                             else args.kv_resident),
+                            page_tokens=args.page_tokens,
+                            resident_pages=args.resident_pages)
 
     with tempfile.TemporaryDirectory(prefix="serve_offload_") as root:
         policy = (OffloadPolicy.preset(args.policy).with_store(root)
@@ -77,9 +91,15 @@ def main() -> None:
                   f"{stats['wait_seconds'] * 1e3:.1f}ms")
             if dec.kv_stats is not None:
                 kv = dec.kv_stats
-                print(f"kv: spills {kv['spills']}  refills {kv['refills']}  "
+                ov = dec.kv_overlap_stats
+                print(f"kv: dirty spills {kv['spills']} "
+                      f"({kv['spill_bytes'] / 1e6:.2f}MB)  clean drops "
+                      f"{kv['clean_drops']}  refills {kv['refills']}  "
                       f"prefetched {kv['prefetch_refills']}  "
                       f"kv-wait {kv['wait_seconds'] * 1e3:.1f}ms")
+                print(f"kv-overlap: staged windows {ov['kv_stage_gets']}  "
+                      f"ready-on-arrival {ov['kv_stage_hits']}  "
+                      f"staged-wait {ov['kv_stage_wait_s'] * 1e3:.1f}ms")
             for i in range(min(args.batch, 2)):
                 print(f"  request {i}: {gen[i][:16].tolist()} ...")
     print("offloaded serve OK")

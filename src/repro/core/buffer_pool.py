@@ -52,10 +52,12 @@ class ShapeClass:
         return self.per_block * inflight_blocks + self.standalone
 
 
-# Shape class of per-layer KV-cache slots (offloaded cached decode).  KV
-# state streams through the same arena as the weights it attends against,
-# but its slots are *persistent across steps* (a SpillableKVCache keeps them
-# checked out and spills cold layers to SSD) rather than released at H2D.
+# Shape class of KV-cache page slots (offloaded cached decode).  KV state
+# streams through the same arena as the weights it attends against, but its
+# slots are *persistent across steps* (a SpillableKVCache keeps them checked
+# out and spills cold time-axis pages to SSD) rather than released at H2D.
+# The same name doubles as the staged-KV device-slot class in the overlap
+# executor's DeviceSlots budget.
 KV_CLASS = "kv"
 
 
@@ -83,10 +85,11 @@ class PoolCensus:
 
     def with_kv(self, nbytes: int, slots: int) -> "PoolCensus":
         """Census extended with ``slots`` dedicated KV-cache slots of
-        ``nbytes`` each (one slot holds one layer's full K+V state).
+        ``nbytes`` each (one slot holds one time-axis *page* of one
+        layer's K+V state — ``DecodeSpec.page_size`` tokens).
 
         The slots are standalone — their count is the *host-residency
-        budget* for cached decode, not a per-inflight-block multiple; layers
+        budget* for cached decode, not a per-inflight-block multiple; pages
         beyond it spill to SSD (see :mod:`repro.core.kv_cache`)."""
         if nbytes <= 0 or slots <= 0:
             raise ValueError(f"kv census needs nbytes>0 and slots>0, got "

@@ -1,24 +1,56 @@
-"""Spill-able KV cache: decode state streamed through the offload machinery.
+"""Paged spill-able KV cache: decode state streamed through the offload
+machinery at time-axis page granularity.
 
 Offloaded decode (PR 1) re-ran the full prefix per emitted token because a
 per-layer KV cache would pin ``n_layers × (2, B, S, KH, D)`` of host memory
-— exactly the "pin it all" design the paper exists to break.  This module
-applies MemAscend's core move to *decode state*: KV lives in a bounded
-number of pool slots inside the same pinned arena the weights stream
-through (shape class :data:`~repro.core.buffer_pool.KV_CLASS`), and layers
-that do not fit the budget spill to the SSD tensor store, to be refilled —
-ideally prefetched under the previous layer's compute — on their next turn.
+— exactly the "pin it all" design the paper exists to break.  PR 2 applied
+MemAscend's core move to *decode state*: KV lives in a bounded number of
+pool slots inside the same pinned arena the weights stream through (shape
+class :data:`~repro.core.buffer_pool.KV_CLASS`), spilling to the SSD tensor
+store past the budget.  This revision pages the **time axis** (vLLM-style
+block tables, 10Cache-style sub-tensor migration units): the spill/refill
+unit is one fixed-size *page* of ``page_tokens`` positions, not a layer's
+whole ``max_seq`` slot, so
+
+* eviction writes only **dirty** pages (a decode step dirties one tail page
+  per layer; the read-only pages of older tokens spill once and are then
+  dropped for free — ``clean_drops``),
+* refills read only the pages covering the attended window, not the fixed
+  ``max_seq`` extent,
+* pages materialize lazily, so one slot budget backs several short
+  sequences' layers before anything spills at all.
 
 Residency policy: decode touches layers cyclically (0, 1, …, L−1, 0, …), so
-the block just used is the one whose next use is farthest away — Belady's
-choice is to evict *most-recently-used*.  With a budget of ``R`` slots the
-cache keeps the first ``R−2`` layers host-resident forever and cycles the
-remaining layers through the last two slots (one in use, one prefetching),
-giving a host footprint of ``R`` slots independent of model depth.
+the pages just used are the ones whose next use is farthest away — Belady's
+choice is to evict *most-recently-used*, now applied over pages rather than
+layers.  A budget of ``R`` page slots keeps the coldest-by-MRU pages
+resident and cycles the rest through spill/refill, with prefetched refills
+riding the executor's lookahead window.
 
 :class:`DecodeSpec` carries the serving shape (batch, max sequence, time
-bucket, residency budget); the session sizes the pool census from it and
-buckets the jitted decode stages so each bucket compiles once.
+bucket, page size, residency budget); the session sizes the pool census
+from it and buckets the jitted decode stages so each bucket compiles once.
+
+Thread contract (who may call what)
+-----------------------------------
+
+* **compute/executor thread** — :meth:`~SpillableKVCache.append`,
+  :meth:`~SpillableKVCache.write_prefill`,
+  :meth:`~SpillableKVCache.set_length` / :meth:`~SpillableKVCache.advance`,
+  :meth:`~SpillableKVCache.prefetch_window`, and (sync overlap mode only)
+  :meth:`~SpillableKVCache.gather_window`.
+* **H2D staging worker** — :meth:`~SpillableKVCache.gather_window` for the
+  *next* unit's window while the compute thread runs the current unit (the
+  split KVReadOp's issue half; see :mod:`repro.core.session`).
+* **store worker threads** — only complete the refill futures that
+  :meth:`prefetch_window` issued; they never touch cache state directly.
+
+All page/slot bookkeeping lives under one lock.  Because two threads may
+now ensure/evict concurrently, a page view is only written or copied while
+**pinned** (:meth:`ensure_page` ``pin=True`` → :meth:`unpin`): eviction
+skips pinned pages, so a spill on one thread can never release the pool
+slot another thread is mid-copy on.  :meth:`close` must only run after the
+staging worker has drained (the session's abort path guarantees it).
 """
 
 from __future__ import annotations
@@ -43,14 +75,29 @@ class DecodeSpec:
     ``bucket``           time-bucket granularity: device-side cache slices
                          are padded to the next multiple, so each bucket
                          traces/compiles once and steps within it reuse it.
-    ``resident_blocks``  host KV budget in layers (pool slots); ``None``
-                         keeps every layer resident (no spill I/O).
+    ``resident_blocks``  host KV budget in layer-equivalents: the page-slot
+                         budget is ``resident_blocks × pages_per_seq``;
+                         ``None`` keeps every page resident (no spill I/O).
+    ``page_tokens``      KV spill/refill page size in tokens (the paged
+                         cache's block-table granularity).  Must align with
+                         ``bucket`` (one must divide the other).  ``None``
+                         uses ``bucket``.  ``page_tokens == max_seq``
+                         degenerates to PR 2's whole-layer spill unit — the
+                         bench ablation baseline.
+    ``resident_pages``   host KV budget directly in page slots (overrides
+                         ``resident_blocks``; the two are mutually
+                         exclusive).  Must be >= 2 — the paged gather
+                         copies page-by-page, so two slots (one pinned for
+                         the copy, one turning over) already stream any
+                         window length.
     """
 
     batch: int
     max_seq: int
     bucket: int = 64
     resident_blocks: int | None = None
+    page_tokens: int | None = None
+    resident_pages: int | None = None
 
     def __post_init__(self) -> None:
         if self.batch < 1:
@@ -64,6 +111,45 @@ class DecodeSpec:
             raise ValueError(
                 f"resident_blocks must be >= 2 (one slot computing, one "
                 f"prefetching), got {self.resident_blocks}")
+        if self.page_tokens is not None:
+            if not 1 <= self.page_tokens <= self.max_seq:
+                raise ValueError(
+                    f"page_tokens must be in [1, max_seq={self.max_seq}], "
+                    f"got {self.page_tokens}")
+            if (self.bucket % self.page_tokens != 0
+                    and self.page_tokens % self.bucket != 0):
+                raise ValueError(
+                    f"page_tokens ({self.page_tokens}) must align with the "
+                    f"time bucket ({self.bucket}): one must divide the "
+                    f"other, so gathered windows cover whole pages")
+        if self.resident_pages is not None:
+            if self.resident_blocks is not None:
+                raise ValueError(
+                    "pass resident_blocks or resident_pages, not both "
+                    "(they size the same page-slot budget)")
+            if self.resident_pages < 2:
+                raise ValueError(
+                    f"resident_pages must be >= 2 (one page pinned for a "
+                    f"copy, one turning over), got {self.resident_pages}")
+
+    @property
+    def page_size(self) -> int:
+        """Tokens per KV page (the spill/refill granularity)."""
+        return self.bucket if self.page_tokens is None else self.page_tokens
+
+    @property
+    def pages_per_seq(self) -> int:
+        """Pages covering one request's full ``max_seq`` extent."""
+        return -(-self.max_seq // self.page_size)
+
+    def page_budget(self, n_blocks: int) -> int:
+        """Resolved page-slot budget for ``n_blocks`` cached layers."""
+        total = n_blocks * self.pages_per_seq
+        if self.resident_pages is not None:
+            return min(self.resident_pages, total)
+        if self.resident_blocks is not None:
+            return min(self.resident_blocks * self.pages_per_seq, total)
+        return total
 
     def bucket_len(self, length: int) -> int:
         """Device-cache time extent covering ``length`` positions."""
@@ -76,229 +162,416 @@ class DecodeSpec:
 
 @dataclass
 class KVStats:
-    """Spill-pipeline effectiveness counters (mirrors SwapStats for KV)."""
+    """Spill-pipeline effectiveness counters (mirrors SwapStats for KV).
 
-    spills: int = 0            # host slot written to SSD + released
-    refills: int = 0           # SSD read back into a slot (any path)
+    All byte counters are page-granular: ``spill_bytes`` counts only
+    *dirty* page writes (``clean_drops`` pages were evicted for free —
+    their bytes were already on SSD and unchanged)."""
+
+    spills: int = 0            # dirty page written to SSD + slot released
+    clean_drops: int = 0       # clean page evicted without a write
+    refills: int = 0           # SSD page read back into a slot (any path)
     prefetch_refills: int = 0  # refills issued ahead of use
-    prefetch_hits: int = 0     # refill already complete when ensure() asked
-    sync_refills: int = 0      # ensure() found nothing in flight
+    prefetch_hits: int = 0     # refill already complete when asked for
+    sync_refills: int = 0      # ensure found nothing in flight
     spill_bytes: int = 0
     refill_bytes: int = 0
-    wait_seconds: float = 0.0  # time ensure() blocked on outstanding refills
+    wait_seconds: float = 0.0  # time blocked on outstanding refills
 
     def snapshot(self) -> dict:
         return {k: getattr(self, k) for k in (
-            "spills", "refills", "prefetch_refills", "prefetch_hits",
-            "sync_refills", "spill_bytes", "refill_bytes", "wait_seconds")}
+            "spills", "clean_drops", "refills", "prefetch_refills",
+            "prefetch_hits", "sync_refills", "spill_bytes", "refill_bytes",
+            "wait_seconds")}
 
 
 class SpillableKVCache:
-    """Per-layer KV state in pool slots, spilled to the SSD store on budget.
+    """Per-layer KV state in page-granular pool slots, spilled to SSD on
+    budget.
 
     One instance covers one generate() call-sequence: ``length`` tokens are
-    cached for every unit in ``units``.  Each unit's state is one pool slot
-    holding a ``(2, batch, max_seq, kv_heads, head_dim)`` array (``[0]`` is
-    K, ``[1]`` is V).  The session reads host views via :meth:`ensure`
-    (waiting out any in-flight refill), appends via :meth:`append` /
-    :meth:`write_prefill`, and hints upcoming layers via :meth:`prefetch`.
+    cached for every unit in ``units``.  A unit's state is a sequence of
+    *pages*, each one pool slot holding a
+    ``(2, batch, page_tokens, kv_heads, head_dim)`` array (``[0]`` is K,
+    ``[1]`` is V); page *p* covers absolute positions
+    ``[p·page_tokens, (p+1)·page_tokens)``.  Pages materialize lazily on
+    first write and are zero-filled (slot memory is recycled — stale bytes
+    from a previous sequence would poison the masked softmax through
+    ``0 × NaN``).
 
-    Thread-safety: refills land from store worker threads; all slot/state
-    bookkeeping is under one lock.  Compute-side calls (ensure/append) come
-    from the single executor thread.
+    The session writes via :meth:`append` / :meth:`write_prefill`, reads
+    whole attended windows via :meth:`gather_window`, and hints upcoming
+    units via :meth:`prefetch_window`.  See the module docstring for the
+    thread contract (pinning protocol included).
     """
 
-    def __init__(self, units: list[str], shape: tuple, dtype,
-                 pool: BufferPoolBase, store: TensorStore, *,
+    def __init__(self, units: list[str], page_shape: tuple, max_seq: int,
+                 dtype, pool: BufferPoolBase, store: TensorStore, *,
                  resident_limit: int | None = None) -> None:
         self.units = list(units)
-        self.shape = tuple(shape)
+        self.page_shape = tuple(page_shape)
+        self.page_tokens = int(self.page_shape[2])
+        self.max_seq = int(max_seq)
+        self.pages_per_unit = -(-self.max_seq // self.page_tokens)
         self.dtype = np.dtype(dtype)
-        self.nbytes = int(self.dtype.itemsize *
-                          np.prod(self.shape, dtype=np.int64))
+        self.page_nbytes = int(self.dtype.itemsize *
+                               np.prod(self.page_shape, dtype=np.int64))
         self.pool = pool
         self.store = store
-        n = len(self.units)
-        self.resident_limit = n if resident_limit is None else \
-            min(resident_limit, n)
-        if self.resident_limit < n and self.resident_limit < 2:
+        total = len(self.units) * self.pages_per_unit
+        self.resident_limit = total if resident_limit is None else \
+            min(resident_limit, total)
+        if self.resident_limit < total and self.resident_limit < 2:
             raise ValueError(
-                f"resident_limit {self.resident_limit} < 2 cannot pipeline "
-                f"{n} units (one slot computing, one prefetching)")
-        # Below budget every unit stays resident; at budget, reserve two
-        # slots for the (in use, prefetching) pair cycling the cold units.
-        self._keep = n if self.resident_limit >= n else \
+                f"resident_limit {self.resident_limit} < 2 cannot stream "
+                f"{total} pages (one page pinned for a copy, one turning "
+                f"over)")
+        # Below budget every page stays resident; at budget, reserve two
+        # slots for the (in use, prefetching) pair cycling the cold pages.
+        self._keep = total if self.resident_limit >= total else \
             max(0, self.resident_limit - 2)
         self.length = 0          # tokens cached so far (same for all units)
         self.stats = KVStats()
         self.closed = False
-        self._lock = threading.Lock()
-        self._slots: dict[str, PoolBuffer] = {}     # resident units
-        self._futures: dict[str, tuple[PoolBuffer, Future]] = {}  # refilling
-        self._spilled: set[str] = set()             # state lives on SSD
-        self._use_order: list[str] = []             # LRU ... MRU
+        # A Condition, not a bare Lock: with two ensuring threads (compute
+        # + staging worker) capacity can be transiently held entirely by
+        # in-flight refills and mid-read ensures — a thread needing a slot
+        # then waits for the next land/unpin/spill instead of failing.
+        # Backed by a NON-reentrant Lock on purpose: _spill releases it
+        # around the dirty-page store write, which only balances if no
+        # path ever acquires it twice (an accidental nested acquire should
+        # deadlock loudly, not silently unlock early).
+        self._lock = threading.Condition(threading.Lock())
+        # page key = (unit, page_index)
+        self._slots: dict[tuple, PoolBuffer] = {}     # resident pages
+        self._futures: dict[tuple, tuple[PoolBuffer, Future]] = {}  # refills
+        self._spilled: set[tuple] = set()   # page bytes live on SSD only
+        self._dirty: set[tuple] = set()     # resident page ahead of its SSD copy
+        self._evicting: set[tuple] = set()  # dirty spill write in progress
+        self._pinned: dict[tuple, int] = {}  # page -> pin refcount
+        self._use_order: list[tuple] = []    # LRU ... MRU
+        # Pages whose buffer is held by an ensure_page mid-read (popped out
+        # of _futures / freshly acquired, not yet landed in _slots).  Two
+        # threads ensure concurrently now (compute + staging worker), so
+        # capacity math must count these or the pool oversubscribes.
+        self._in_transit = 0
 
     # -- internals -----------------------------------------------------------
 
-    def _store_key(self, unit: str) -> str:
-        return f"kv/{unit}"
+    def _store_key(self, unit: str, page: int) -> str:
+        return f"kv/{unit}/p{page:04d}"
 
-    def _touch(self, unit: str) -> None:
-        if unit in self._use_order:
-            self._use_order.remove(unit)
-        self._use_order.append(unit)
+    def _touch(self, key: tuple) -> None:
+        if key in self._use_order:
+            self._use_order.remove(key)
+        self._use_order.append(key)
 
-    def _acquire(self, unit: str) -> PoolBuffer:
+    def _acquire(self, key: tuple) -> PoolBuffer:
         # Budget is self-managed: resident + in-flight never exceeds
         # resident_limit (the census slot count), so this never blocks.
-        return self.pool.acquire(KV_CLASS, self.nbytes,
-                                 tag=self._store_key(unit))
+        return self.pool.acquire(KV_CLASS, self.page_nbytes,
+                                 tag=self._store_key(*key))
 
     def _free_capacity(self) -> int:
-        return self.resident_limit - len(self._slots) - len(self._futures)
+        return (self.resident_limit - len(self._slots) - len(self._futures)
+                - self._in_transit)
 
-    def _spill_one(self, exclude: set[str]) -> None:
-        """Evict the most-recently-used resident unit (Belady under cyclic
-        access) not in ``exclude``: write it to SSD, return the slot."""
-        for unit in reversed(self._use_order):
-            if unit in self._slots and unit not in exclude:
-                self._spill(unit)
-                return
-        raise RuntimeError("KV cache cannot make room: every resident "
-                           "slot is excluded from eviction")
+    def _materialized(self, key: tuple) -> bool:
+        return (key in self._slots or key in self._futures
+                or key in self._spilled or key in self._evicting)
 
-    def _spill(self, unit: str) -> None:
-        buf = self._slots.pop(unit)
-        view = buf.view(self.dtype, self.shape)
-        self.store.write(self._store_key(unit), view)
+    def _try_spill_one(self, exclude: set) -> bool:
+        """Evict the most-recently-used resident page (Belady under cyclic
+        access) that is neither excluded nor pinned; False when every
+        resident page is pinned/excluded (the caller waits for capacity)."""
+        for key in reversed(self._use_order):
+            if (key in self._slots and key not in exclude
+                    and not self._pinned.get(key)):
+                self._spill(key)
+                return True
+        return False
+
+    def _spill(self, key: tuple) -> None:
+        """Evict one resident page.  Called with the lock held; a dirty
+        page's store write runs with the lock RELEASED so the other
+        thread can keep gathering/appending meanwhile — the page sits in
+        ``_evicting`` for the duration (materialized-but-busy: ensure
+        waits it out, eviction scans cannot see it).  A failed write puts
+        the page back resident + dirty: the host copy is the only one."""
+        buf = self._slots.pop(key)
+        self._use_order.remove(key)
+        if key in self._dirty:
+            self._dirty.discard(key)
+            self._evicting.add(key)
+            self._in_transit += 1     # slot still held during the write
+            self._lock.release()
+            ok = False
+            try:
+                view = buf.view(self.dtype, self.page_shape)
+                self.store.write(self._store_key(*key), view)
+                ok = True
+            finally:
+                self._lock.acquire()
+                self._evicting.discard(key)
+                self._in_transit -= 1
+                if not ok:
+                    # failed write: the host copy is the only one — put
+                    # the page back resident (and dirty) rather than leak
+                    # the slot or forget the data; the error propagates
+                    self._slots[key] = buf
+                    self._use_order.append(key)
+                    self._dirty.add(key)
+                    self._lock.notify_all()
+            self.stats.spills += 1
+            self.stats.spill_bytes += self.page_nbytes
+        else:
+            # clean page: its bytes already live on SSD, unchanged — the
+            # paged design's whole point is that this write is free
+            self.stats.clean_drops += 1
         buf.release()
-        self._spilled.add(unit)
-        self._use_order.remove(unit)
-        self.stats.spills += 1
-        self.stats.spill_bytes += self.nbytes
+        self._spilled.add(key)
+        self._lock.notify_all()   # freed capacity: wake slot waiters
 
-    def _maybe_spill_after_use(self, unit: str) -> None:
-        """Spill-after-use: once a unit's append landed, its next use is a
-        full cycle away — spill it (and anything else over the keep line)."""
+    def _maybe_spill_after_use(self) -> None:
+        """Spill-after-use: once a unit's write landed, its pages' next use
+        is a full cycle away — evict MRU pages over the keep line (skipping
+        pinned pages; a concurrent gather may hold one mid-copy)."""
         with self._lock:
             while len(self._slots) > self._keep:
-                self._spill_one(exclude=set())
+                if not self._try_spill_one(exclude=set()):
+                    break
 
     # -- the session-facing API ----------------------------------------------
 
-    def prefetch(self, unit: str) -> None:
-        """Hint that ``unit`` is needed soon: issue an async SSD refill into
-        a free slot.  No-op for non-KV units, resident/in-flight units,
-        units with no spilled state, or when no slot is free."""
-        with self._lock:
-            if (self.closed or unit not in self.units
-                    or unit in self._slots or unit in self._futures
-                    or unit not in self._spilled
-                    or self._free_capacity() < 1):
-                return
-            buf = self._acquire(unit)
-            view = buf.view(self.dtype, self.shape)
-            future = self.store.read_async(self._store_key(unit), view)
-            self._futures[unit] = (buf, future)
-            self._spilled.discard(unit)
-            self.stats.prefetch_refills += 1
+    def pages_for(self, extent: int) -> int:
+        """Pages covering ``extent`` positions (capped at the per-unit
+        page count)."""
+        return min(-(-extent // self.page_tokens), self.pages_per_unit)
 
-    def ensure(self, unit: str) -> np.ndarray:
-        """Host view of ``unit``'s KV state, resident.  Waits out an
-        in-flight refill; synchronously refills a spilled unit; acquires
-        (and zero-fills) a fresh slot for a never-written unit."""
+    def prefetch_window(self, unit: str, extent: int) -> None:
+        """Hint that ``unit``'s window of ``extent`` positions is needed
+        soon: issue async SSD refills for its spilled pages into free
+        slots.  No-op for unknown units, non-spilled pages, or when fewer
+        than two slots are free (one is kept in reserve so a concurrent
+        fresh-page write can always evict its way to a slot)."""
+        if unit not in self.units or extent < 1:
+            return
+        with self._lock:
+            if self.closed:
+                return
+            for p in range(self.pages_for(extent)):
+                key = (unit, p)
+                if (key not in self._spilled or key in self._slots
+                        or key in self._futures):
+                    continue
+                if self._free_capacity() < 2:
+                    return
+                buf = self._acquire(key)
+                view = buf.view(self.dtype, self.page_shape)
+                future = self.store.read_async(self._store_key(*key), view)
+                self._futures[key] = (buf, future)
+                self._spilled.discard(key)
+                self.stats.prefetch_refills += 1
+
+    def ensure_page(self, unit: str, page: int, *,
+                    pin: bool = False) -> np.ndarray:
+        """Host view of one page, resident.  Waits out an in-flight refill;
+        synchronously refills a spilled page; acquires (and zero-fills) a
+        fresh slot for a never-written page.  With ``pin=True`` the page is
+        returned pinned (evictions skip it) — the caller MUST :meth:`unpin`
+        after its copy/write; writers must also mark the page dirty before
+        unpinning or the write may be lost to a clean eviction."""
         if unit not in self.units:
             raise KeyError(f"unknown KV unit {unit!r}")
+        if not 0 <= page < self.pages_per_unit:
+            raise ValueError(f"page {page} outside [0, "
+                             f"{self.pages_per_unit}) for unit {unit!r}")
+        key = (unit, page)
         with self._lock:
             if self.closed:
                 raise RuntimeError("KV cache is closed")
-            entry = self._futures.pop(unit, None)
-            spilled = unit in self._spilled
+            # A page mid-spill (dirty write in flight on the other thread,
+            # lock dropped) is materialized but in no map: wait for the
+            # write to land, then take the _spilled path below.
+            while key in self._evicting:
+                if not self._lock.wait(timeout=30.0):
+                    raise RuntimeError(
+                        f"KV page {key!r} stuck in eviction for 30s")
+            entry = self._futures.pop(key, None)
+            spilled = key in self._spilled
             if entry is not None:
                 buf, future = entry
                 hit = future.done()
-            elif unit in self._slots:
-                self._touch(unit)
-                return self._slots[unit].view(self.dtype, self.shape)
+            elif key in self._slots:
+                self._touch(key)
+                if pin:
+                    self._pinned[key] = self._pinned.get(key, 0) + 1
+                return self._slots[key].view(self.dtype, self.page_shape)
             else:
                 # Sync path: spilled (refill now) or first touch (zero).
-                if self._free_capacity() < 1:
-                    self._spill_one(exclude={unit})
-                buf = self._acquire(unit)
+                # When no page is evictable (all pinned, or the capacity
+                # sits in other pages' in-flight refills / mid-read
+                # ensures), wait: the other thread's land/unpin frees it.
+                while self._free_capacity() < 1:
+                    if not self._try_spill_one(exclude={key}):
+                        if not self._lock.wait(timeout=30.0):
+                            raise RuntimeError(
+                                f"KV cache slot wait timed out for page "
+                                f"{key!r}: every slot pinned or in flight "
+                                f"for 30s (budget {self.resident_limit})")
+                buf = self._acquire(key)
                 future = None
                 hit = False
-        view = buf.view(self.dtype, self.shape)
+            self._in_transit += 1   # buf held outside _slots/_futures
+        view = buf.view(self.dtype, self.page_shape)
         t0 = time.perf_counter()
         try:
             if future is not None:
                 future.result()
             elif spilled:
-                self.store.read(self._store_key(unit), view)
+                self.store.read(self._store_key(*key), view)
             else:
-                view[...] = np.zeros((), self.dtype)  # fresh state
+                view[...] = np.zeros((), self.dtype)  # fresh page
         except BaseException:
+            with self._lock:
+                self._in_transit -= 1
+                if future is not None:
+                    # a failed prefetched refill must not forget the page:
+                    # the SSD copy is still valid (prefetch_window removed
+                    # the key from _spilled when it issued the read) — the
+                    # sync path below keeps _spilled until success, this
+                    # mirrors it so a retry refills instead of zero-fills
+                    self._spilled.add(key)
+                self._lock.notify_all()
             buf.release()   # slot must not leak on a failed read
             raise
         wait = time.perf_counter() - t0
-        # Counters strictly under the lock: prefetch() bumps its stats from
-        # the executor thread while refills land from store workers, and
-        # under the full-overlap executor more threads observe snapshots —
-        # unlocked read-modify-writes here tore the ledger.
+        # Counters strictly under the lock: the staging worker and the
+        # compute thread both run ensure/prefetch while refills land from
+        # store workers — unlocked read-modify-writes tore the ledger.
         with self._lock:
             if future is not None:
                 self.stats.refills += 1
-                self.stats.refill_bytes += self.nbytes
+                self.stats.refill_bytes += self.page_nbytes
                 self.stats.prefetch_hits += int(hit)
             elif spilled:
                 self.stats.refills += 1
-                self.stats.refill_bytes += self.nbytes
+                self.stats.refill_bytes += self.page_nbytes
                 self.stats.sync_refills += 1
             self.stats.wait_seconds += wait
-            self._spilled.discard(unit)
-            self._slots[unit] = buf
-            self._touch(unit)
+            self._in_transit -= 1
+            self._spilled.discard(key)
+            self._slots[key] = buf
+            self._touch(key)
+            if pin:
+                self._pinned[key] = self._pinned.get(key, 0) + 1
+            self._lock.notify_all()   # landed page is evictable again
         return view
+
+    def unpin(self, unit: str, page: int) -> None:
+        """Release one pin on a page (see :meth:`ensure_page`)."""
+        key = (unit, page)
+        with self._lock:
+            n = self._pinned.get(key, 0) - 1
+            if n <= 0:
+                self._pinned.pop(key, None)
+                self._lock.notify_all()   # page is evictable again
+            else:
+                self._pinned[key] = n
+
+    def gather_window(self, unit: str, extent: int) -> tuple[np.ndarray,
+                                                             np.ndarray]:
+        """Contiguous host (K, V) arrays of shape
+        ``(batch, extent, kv_heads, head_dim)`` covering positions
+        ``[0, extent)`` — the attended window one ``block_step`` H2Ds.
+
+        Pages are ensured (refilled if spilled) and copied one at a time
+        under a pin, so the budget floor is two slots, not a whole window.
+        Never-materialized pages read as zeros: positions ``>= length`` are
+        masked by the attention kernel, but the values must still be finite
+        (``0 × NaN`` would poison the masked softmax).
+        """
+        if unit not in self.units:
+            raise KeyError(f"unknown KV unit {unit!r}")
+        if not 1 <= extent <= self.max_seq:
+            raise ValueError(f"extent {extent} outside [1, {self.max_seq}]")
+        _two, b, pt, kh, d = self.page_shape
+        k_out = np.zeros((b, extent, kh, d), self.dtype)
+        v_out = np.zeros((b, extent, kh, d), self.dtype)
+        for p in range(self.pages_for(extent)):
+            with self._lock:
+                materialized = self._materialized((unit, p))
+            if not materialized:
+                continue    # lazily never written: stays zero
+            view = self.ensure_page(unit, p, pin=True)
+            try:
+                lo = p * pt
+                m = min(pt, extent - lo)
+                k_out[:, lo:lo + m] = view[0][:, :m]
+                v_out[:, lo:lo + m] = view[1][:, :m]
+            finally:
+                self.unpin(unit, p)
+        return k_out, v_out
 
     def append(self, unit: str, k_new: np.ndarray, v_new: np.ndarray) -> None:
         """Write one decoded token's K/V (``(B, 1, KH, D)``) at position
-        ``length`` (advance once per step via :meth:`advance`)."""
-        if self.length >= self.shape[2]:
+        ``length`` (advance once per step via :meth:`advance`) into the
+        tail page — the only page a decode step dirties."""
+        if self.length >= self.max_seq:
             raise ValueError(f"KV cache full: length {self.length} at "
-                             f"capacity {self.shape[2]}")
-        view = self.ensure(unit)
-        view[0][:, self.length] = k_new[:, 0]
-        view[1][:, self.length] = v_new[:, 0]
-        self._maybe_spill_after_use(unit)
+                             f"capacity {self.max_seq}")
+        page, off = divmod(self.length, self.page_tokens)
+        view = self.ensure_page(unit, page, pin=True)
+        try:
+            view[0][:, off] = k_new[:, 0]
+            view[1][:, off] = v_new[:, 0]
+            with self._lock:
+                self._dirty.add((unit, page))
+        finally:
+            self.unpin(unit, page)
+        self._maybe_spill_after_use()
 
     def write_prefill(self, unit: str, k: np.ndarray, v: np.ndarray) -> None:
         """Write the prefill pass's K/V (``(B, S_bucket, KH, D)``; entries
-        past the true prompt length are masked garbage, overwritten by later
-        appends)."""
+        past the true prompt length are masked garbage, overwritten by
+        later appends), scattered page by page."""
         s = k.shape[1]
-        if s > self.shape[2]:
+        if s > self.max_seq:
             raise ValueError(f"prefill extent {s} exceeds capacity "
-                             f"{self.shape[2]}")
-        view = self.ensure(unit)
-        view[0][:, :s] = k
-        view[1][:, :s] = v
-        self._maybe_spill_after_use(unit)
+                             f"{self.max_seq}")
+        pt = self.page_tokens
+        for p in range(-(-s // pt)):
+            lo = p * pt
+            m = min(pt, s - lo)
+            view = self.ensure_page(unit, p, pin=True)
+            try:
+                view[0][:, :m] = k[:, lo:lo + m]
+                view[1][:, :m] = v[:, lo:lo + m]
+                with self._lock:
+                    self._dirty.add((unit, p))
+            finally:
+                self.unpin(unit, p)
+        self._maybe_spill_after_use()
 
     def set_length(self, length: int) -> None:
-        if not 0 <= length <= self.shape[2]:
-            raise ValueError(f"length {length} outside [0, {self.shape[2]}]")
+        if not 0 <= length <= self.max_seq:
+            raise ValueError(f"length {length} outside [0, {self.max_seq}]")
         self.length = length
 
     def advance(self, n: int = 1) -> None:
         self.set_length(self.length + n)
 
     @property
-    def resident_units(self) -> list[str]:
+    def resident_pages(self) -> list[tuple]:
+        """Sorted (unit, page) keys currently host-resident."""
         with self._lock:
             return sorted(self._slots)
 
     def close(self) -> None:
         """Wait out in-flight refills and return every slot.  Idempotent;
-        runs on generate()'s error path, so nothing may leak."""
+        runs on generate()'s error path, so nothing may leak.  Callers must
+        drain any worker still gathering first (the session's abort path
+        does) — close does not wait for pins."""
         with self._lock:
             if self.closed:
                 return
@@ -308,6 +581,8 @@ class SpillableKVCache:
             slots = list(self._slots.values())
             self._slots.clear()
             self._use_order.clear()
+            self._dirty.clear()
+            self._pinned.clear()
         for buf, future in futures:
             try:
                 future.result()

@@ -18,11 +18,38 @@ The paper's pipeline has four legs that should all hide under compute:
                     arithmetic runs — the Adam stage's own store I/O hides
                     under its own compute.
 
+Cached-decode KV windows ride the same H2D staging worker: the executor
+queues a page-gather + H2D task per block (the split KVReadOp's issue
+half) behind that block's weight staging, bounded by a dedicated ``kv``
+device-slot class, so the serving path's last synchronous transfer also
+hides under the previous block's compute.
+
 This module holds the machinery shared by those legs; the session wires it
 to the StreamPlan executor (:mod:`repro.core.session`).  Everything here is
 model-agnostic: a SerialWorker is just an order-preserving single-thread
 task queue with latched-error semantics, and DeviceSlots is a counted
 per-shape-class staging budget.
+
+Thread contract (who may call what)
+-----------------------------------
+
+* :meth:`SerialWorker.submit` may be called from any thread (it only
+  enqueues; a bounded queue blocks the *producer*), but each worker's
+  tasks run strictly FIFO on its single daemon thread — tasks never need
+  locks against each other, only against state shared with other threads.
+* :meth:`SerialWorker.drain` / :meth:`SerialWorker.close` re-raise the
+  latched first failure exactly once; callers that already delivered a
+  task's exception out-of-band must :meth:`SerialWorker.consume_error` it
+  first or teardown double-reports.
+* :meth:`DeviceSlots.acquire` is only ever called by the single H2D
+  staging worker, in fetch order; :meth:`DeviceSlots.release_all` is
+  called by the executor thread (at ``ReleaseOp`` / abort).  That pairing
+  is the deadlock-freedom argument: every blocked acquire sits at or
+  before the worker's queue head, with all earlier units' slots already
+  releasable by the live executor.
+* :class:`OverlapStats` plain fields are executor-thread-only; counters
+  accrued on worker threads go through
+  :meth:`OverlapStats.add_worker_seconds`, which locks.
 """
 
 from __future__ import annotations
@@ -201,6 +228,9 @@ class OverlapStats:
     at a FetchOp waiting for staged device weights.  Under full overlap the
     swapper's own wait moves onto the H2D worker thread (off the critical
     path) and this is the number that should stay near zero instead.
+    ``kv_stage_wait_seconds`` is the cached-decode analogue: executor
+    blocking at a KVReadOp for a staged KV window (page refill waits move
+    onto the staging worker and into the KV cache's own wait ledger).
 
     Most fields are mutated by the single executor thread only.  The two
     worker-side counters — ``optim_prefetch_wait_seconds`` (the optimizer
@@ -216,6 +246,9 @@ class OverlapStats:
     h2d_gets: int = 0           # FetchOps served from the staging pipeline
     h2d_hits: int = 0           # device weights ready when the FetchOp asked
     h2d_wait_seconds: float = 0.0
+    kv_stage_gets: int = 0      # KVReadOps served from the staging pipeline
+    kv_stage_hits: int = 0      # KV window staged when the KVReadOp asked
+    kv_stage_wait_seconds: float = 0.0  # executor blocked on staged KV
     gradwrite_drain_seconds: float = 0.0  # OverflowCheckOp writer-drain stall
     optim_gate_seconds: float = 0.0       # prefetch blocked on step k-1 Adam
     optim_prefetch_wait_seconds: float = 0.0  # Adam blocked on staged state
@@ -238,5 +271,8 @@ class OverlapStats:
         return {"fetch_seconds": self.fetch_seconds,
                 "h2d_gets": self.h2d_gets, "h2d_hits": self.h2d_hits,
                 "h2d_wait_seconds": self.h2d_wait_seconds,
+                "kv_stage_gets": self.kv_stage_gets,
+                "kv_stage_hits": self.kv_stage_hits,
+                "kv_stage_wait_seconds": self.kv_stage_wait_seconds,
                 "gradwrite_drain_seconds": self.gradwrite_drain_seconds,
                 "optim_gate_seconds": self.optim_gate_seconds, **worker}

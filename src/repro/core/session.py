@@ -50,12 +50,18 @@ The session runs four workloads through the same machinery:
 * ``decode_logits``— compile_decode plan (weight-streamed serving,
                      uncached full-prefix pass; see
                      :mod:`repro.serve.offloaded`),
-* ``prefill`` / ``decode_step`` — cached decode over a spill-able KV cache
-                     (:mod:`repro.core.kv_cache`): sessions built with
-                     ``decode=DecodeSpec(...)`` reserve ``kv``-class pool
-                     slots in the census, stream each layer's K/V next to
-                     its weights, and bucket the time axis so every jitted
-                     stage compiles once per bucket.
+* ``prefill`` / ``decode_step`` — cached decode over a *paged* spill-able
+                     KV cache (:mod:`repro.core.kv_cache`): sessions built
+                     with ``decode=DecodeSpec(...)`` reserve page-granular
+                     ``kv``-class pool slots in the census, stream each
+                     layer's KV pages next to its weights, and bucket the
+                     time axis so every jitted stage compiles once per
+                     bucket.  Under ``overlap`` ≠ ``"sync"`` the KVReadOp
+                     splits like FetchOp: the attended window's page
+                     gather + H2D runs on the staging worker under the
+                     previous block's compute, double-buffered by a ``kv``
+                     device-slot class — no synchronous transfer is left
+                     in the serving hot loop.
 
 ``mode="serve"`` opens a leaner session: no optimizer state is written to
 the store and no gradient flat buffer is pinned — only the compute-precision
@@ -75,6 +81,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .buffer_pool import KV_CLASS
 from .kv_cache import DecodeSpec, SpillableKVCache
 from .loss_scale import DynamicLossScaler
 from .memory_tracker import MemoryTracker
@@ -116,7 +123,7 @@ class _ExecState:
                  "loss", "logits", "live", "live_slots", "h2d", "grads",
                  "checkpoints", "overflowed", "apply", "optim_begun",
                  "kv", "kv_live", "kv_append", "kv_time", "cache_len",
-                 "last_pos")
+                 "last_pos", "kv_stage", "kv_slots", "stage_seq")
 
     def __init__(self, tokens=None, labels=None, scale=1.0):
         self.tokens = None if tokens is None else jnp.asarray(tokens)
@@ -134,11 +141,17 @@ class _ExecState:
         self.optim_begun = False             # begin_step() sequenced once
         # cached-decode bindings (prefill / decode_cached plans only)
         self.kv: SpillableKVCache | None = None
-        self.kv_live: dict[str, tuple] = {}    # unit -> device (k, v) bucket
-        self.kv_append: dict[str, tuple] = {}  # unit -> (mode, k, v)
+        self.kv_live: dict[str, tuple] = {}    # unit -> device (k, v) window
+        self.kv_append: dict[str, tuple] = {}  # unit -> device (k, v) to land
+        self.kv_stage: dict[str, Future] = {}  # unit -> staged-KV future
+        self.kv_slots: dict[str, tuple] = {}   # unit -> kv device-slot tokens
         self.kv_time = 0          # device-cache bucket extent this run
         self.cache_len = None     # traced: tokens already cached
         self.last_pos = None      # traced: last prompt index (prefill head)
+        # (kind, unit) per staging-worker submission, in FIFO order —
+        # "w" weight stages and "kv" window stages interleave on ONE
+        # worker, so the abort path must drain them in this exact order
+        self.stage_seq: list[tuple[str, str]] = []
 
 
 class OffloadSession:
@@ -177,7 +190,7 @@ class OffloadSession:
         # the census (paper §IV-B sizing, extended to decode state).
         self.decode_spec = decode
         self._kv_units = tuple(u.name for u in model.units[1:-1])
-        self._kv_slot_shape = None
+        self._kv_page_shape = None
         self._kv_resident = 0
         self._kv_cache: SpillableKVCache | None = None
         if decode is not None:
@@ -188,13 +201,15 @@ class OffloadSession:
                     "mixer family (see model_adapter.make_offloadable_lm)")
             if not self._kv_units:
                 raise ValueError("model has no block units to cache KV for")
-            n_blocks = len(self._kv_units)
-            self._kv_resident = n_blocks if decode.resident_blocks is None \
-                else min(decode.resident_blocks, n_blocks)
-            self._kv_slot_shape = tuple(
-                model.kv_shape(decode.batch, decode.max_seq))
+            # Page-granular census: one kv-class slot per page of
+            # ``spec.page_size`` tokens; the budget is the paged cache's
+            # host-residency limit (paper §IV-B sizing, extended to decode
+            # state at block-table granularity).
+            self._kv_resident = decode.page_budget(len(self._kv_units))
+            self._kv_page_shape = tuple(
+                model.kv_shape(decode.batch, decode.page_size))
             kv_nbytes = int(policy.adam.compute_np_dtype.itemsize * np.prod(
-                self._kv_slot_shape, dtype=np.int64))
+                self._kv_page_shape, dtype=np.int64))
             census = census.with_kv(kv_nbytes, self._kv_resident)
         self.pool = policy.pool_cls(census, self.allocator)
         self.swapper = ParameterSwapper(self.store, self.pool, class_of={
@@ -249,8 +264,12 @@ class OffloadSession:
                     per_unit[cls] = max(per_unit.get(cls, 0), c)
             # Two units' worth of device buffers per shape class: one in
             # use by compute, one being staged — the Fig. 6 double buffer.
-            self._device_slots = DeviceSlots(
-                {cls: 2 * c for cls, c in per_unit.items()})
+            depths = {cls: 2 * c for cls, c in per_unit.items()}
+            if decode is not None:
+                # staged KV windows double-buffer too: one block's (K, V)
+                # in use by compute, one being gathered + H2D'd
+                depths[KV_CLASS] = 2
+            self._device_slots = DeviceSlots(depths)
             # latch=False: every staging future is awaited by the executor
             # (FetchOp wait half, or the abort path), which delivers any
             # failure — a close()-time re-raise would double-report it.
@@ -479,6 +498,32 @@ class OffloadSession:
         fut = self._h2d.submit(
             functools.partial(self._h2d_stage_unit, unit_name))
         state.h2d.setdefault(unit_name, deque()).append(fut)
+        state.stage_seq.append(("w", unit_name))
+
+    def _submit_kv_stage(self, unit_name: str, state: _ExecState) -> None:
+        """Issue half of the split KVReadOp: queue page-refill waits +
+        window gather + H2D onto the staging worker, behind the same
+        unit's weight staging; KVReadOp pops the future (wait half)."""
+        fut = self._h2d.submit(functools.partial(
+            self._stage_kv_unit, state.kv, unit_name, state.kv_time))
+        state.kv_stage[unit_name] = fut
+        state.stage_seq.append(("kv", unit_name))
+
+    def _stage_kv_unit(self, kv: SpillableKVCache, unit_name: str,
+                       extent: int) -> tuple:
+        """H2D-worker body for one unit's KV window: gather the attended
+        window's pages (waiting out / refilling spilled ones) and stage
+        device copies under a counted ``kv`` device slot.  The acquire
+        blocks the *worker*, never the compute thread, until ReleaseOp
+        returns the older window's slot — the same Fig. 6 rotation as the
+        weight double buffer."""
+        k_host, v_host = kv.gather_window(unit_name, extent)
+        self._device_slots.acquire(KV_CLASS)
+        try:
+            return self._h2d_copy(k_host), self._h2d_copy(v_host)
+        except BaseException:
+            self._device_slots.release_all([KV_CLASS])
+            raise
 
     def _h2d_stage_unit(self, unit_name: str) -> tuple[dict, list]:
         """H2D-worker body: claim the unit's tickets, wait each read,
@@ -616,6 +661,13 @@ class OffloadSession:
         fetch_order = plan.fetch_order
         fetch_pos = 0       # index of the FetchOp being executed
         next_prefetch = 0   # first fetch position not yet issued async
+        # Units whose KV window this plan reads (decode_cached blocks):
+        # only they get KV refill prefetch + staged-gather submissions —
+        # prefill plans overwrite whole pages, so refilling ahead of a
+        # write would be wasted I/O.
+        kv_read_units = (frozenset(
+            op.unit for op in plan.ops if isinstance(op, KVReadOp))
+            if state.kv is not None else frozenset())
         try:
             for op in plan.ops:
                 if isinstance(op, FetchOp):
@@ -648,11 +700,15 @@ class OffloadSession:
                         self._prefetch_unit(unit)
                         if self._h2d is not None:
                             self._submit_h2d(unit, state)
-                        if state.kv is not None:
-                            # ride the same window: block i+1's KV refill
-                            # overlaps block i's compute (no-op for units
+                        if unit in kv_read_units:
+                            # ride the same window: block i+1's KV page
+                            # refills + window gather/H2D overlap block
+                            # i's compute (refill is a no-op for pages
                             # that are resident or never spilled)
-                            state.kv.prefetch(unit)
+                            state.kv.prefetch_window(unit, state.kv_time)
+                            if self._h2d is not None and \
+                                    unit not in state.kv_stage:
+                                self._submit_kv_stage(unit, state)
                         next_prefetch += 1
                     t_fetch = time.perf_counter()
                     state.live[op.unit] = self._fetch_unit(op.unit, state)
@@ -664,7 +720,7 @@ class OffloadSession:
                 elif isinstance(op, KVReadOp):
                     self._read_kv(op.unit, state)
                 elif isinstance(op, KVWriteOp):
-                    self._write_kv(op.unit, state)
+                    self._write_kv(op, state)
                 elif isinstance(op, GradWriteOp):
                     self._dispatch_grad_write(op.unit, state)
                 elif isinstance(op, OverflowCheckOp):
@@ -676,6 +732,9 @@ class OffloadSession:
                     tokens = state.live_slots.pop(op.unit, None)
                     if tokens:
                         self._device_slots.release_all(tokens)
+                    kv_tokens = state.kv_slots.pop(op.unit, None)
+                    if kv_tokens:
+                        self._device_slots.release_all(kv_tokens)
         except BaseException:
             self._abort_execute(state)
             raise
@@ -694,18 +753,40 @@ class OffloadSession:
         for tokens in state.live_slots.values():
             self._device_slots.release_all(tokens)
         state.live_slots.clear()
+        for tokens in state.kv_slots.values():
+            self._device_slots.release_all(tokens)
+        state.kv_slots.clear()
         state.live.clear()
-        # Staged fetches must settle before the swapper drain: a queued
-        # H2D job that ran *after* the drain would re-issue its reads and
-        # leak device slots.  FIFO order keeps the worker's next blocked
-        # acquire always satisfiable by the tokens released just before it.
-        for pending in state.h2d.values():
-            for fut in pending:
+        # Staged fetches/KV windows must settle before the swapper drain: a
+        # queued staging job that ran *after* the drain would re-issue its
+        # reads and leak device slots.  Weight and KV stages interleave on
+        # ONE FIFO worker, so waits must follow stage_seq's submission
+        # order — waiting a later weight future while an earlier KV task
+        # still blocks on a kv device slot would deadlock.  Consumed
+        # submissions have empty deques / absent keys and are skipped; each
+        # released token keeps the worker's next blocked acquire
+        # satisfiable.
+        for kind, unit in state.stage_seq:
+            if kind == "w":
+                pending = state.h2d.get(unit)
+                if not pending:
+                    continue
+                fut = pending.popleft()
                 try:
                     _params, tokens = fut.result()
                 except BaseException:
                     continue      # the worker released its own claims
                 self._device_slots.release_all(tokens)
+            else:
+                fut = state.kv_stage.pop(unit, None)
+                if fut is None:
+                    continue
+                try:
+                    fut.result()
+                except BaseException:
+                    continue      # the worker released its own slot
+                self._device_slots.release_all([KV_CLASS])
+        state.stage_seq.clear()
         state.h2d.clear()
         state.kv_live.clear()
         state.kv_append.clear()
@@ -737,12 +818,12 @@ class OffloadSession:
                                                state.last_pos)
         elif op.kind == "block_prefill":
             state.h, k, v = self._jit_block_prefill(params, state.h)
-            state.kv_append[op.unit] = ("prefill", k, v)
+            state.kv_append[op.unit] = (k, v)
         elif op.kind == "block_step":
             k_dev, v_dev = state.kv_live.pop(op.unit)
             state.h, k, v = self._jit_block_step(
                 params, state.h, k_dev, v_dev, state.cache_len)
-            state.kv_append[op.unit] = ("step", k, v)
+            state.kv_append[op.unit] = (k, v)
         elif op.kind == "block_bwd":
             x = self._restore_checkpoint(state.checkpoints.pop(op.unit))
             state.grads[op.unit], state.dh = self._jit_block_bwd(
@@ -754,23 +835,39 @@ class OffloadSession:
             raise ValueError(f"unknown compute kind {op.kind!r}")
 
     def _read_kv(self, unit_name: str, state: _ExecState) -> None:
-        """Blocking KV half: wait out a refill, H2D the current bucket."""
-        view = state.kv.ensure(unit_name)
-        sb = state.kv_time
-        # copy=True for the same reason as weights: the host view is a pool
-        # slot that may be spilled (and its memory reused) while the jitted
-        # step still reads the device buffer asynchronously.
-        state.kv_live[unit_name] = (jnp.array(view[0][:, :sb], copy=True),
-                                    jnp.array(view[1][:, :sb], copy=True))
+        """Wait half of the split KVReadOp: take the staged device K/V
+        window (overlap modes — the gather + H2D already ran on the
+        staging worker under the previous block's compute) or gather and
+        H2D inline (sync mode)."""
+        fut = state.kv_stage.pop(unit_name, None)
+        if fut is not None:
+            hit = fut.done()
+            t0 = time.perf_counter()
+            k_dev, v_dev = fut.result()
+            self._ostats.kv_stage_wait_seconds += time.perf_counter() - t0
+            self._ostats.kv_stage_gets += 1
+            self._ostats.kv_stage_hits += int(hit)
+            state.kv_slots[unit_name] = (KV_CLASS,)
+            state.kv_live[unit_name] = (k_dev, v_dev)
+            return
+        # Inline path (sync overlap): the gather already copies out of the
+        # pool pages under pins, and _h2d_copy copies again into jax — the
+        # page slots are free to be spilled (and their memory reused)
+        # while the jitted step still reads the device buffer.
+        k_host, v_host = state.kv.gather_window(unit_name, state.kv_time)
+        state.kv_live[unit_name] = (self._h2d_copy(k_host),
+                                    self._h2d_copy(v_host))
 
-    def _write_kv(self, unit_name: str, state: _ExecState) -> None:
-        """Land this unit's new K/V in its host slot (D2H); the cache
-        spills it onward if the residency budget is exceeded."""
-        mode, k, v = state.kv_append.pop(unit_name)
-        if mode == "prefill":
-            state.kv.write_prefill(unit_name, np.asarray(k), np.asarray(v))
+    def _write_kv(self, op: KVWriteOp, state: _ExecState) -> None:
+        """Land this unit's new K/V in its host pages (D2H): one token
+        appended to the tail page (``step``) or the whole padded prompt
+        window scattered across pages (``prefill``); the cache spills
+        dirty pages onward if the residency budget is exceeded."""
+        k, v = state.kv_append.pop(op.unit)
+        if op.mode == "prefill":
+            state.kv.write_prefill(op.unit, np.asarray(k), np.asarray(v))
         else:
-            state.kv.append(unit_name, np.asarray(k), np.asarray(v))
+            state.kv.append(op.unit, np.asarray(k), np.asarray(v))
 
     # -- gradient write-back -------------------------------------------------
 
@@ -1107,21 +1204,23 @@ class OffloadSession:
     # -- cached decode (spill-able KV) ---------------------------------------
 
     def open_kv_cache(self) -> SpillableKVCache:
-        """A fresh spill-able KV cache drawing from this session's pool.
+        """A fresh paged spill-able KV cache drawing from this session's
+        pool.
 
-        One at a time: the census reserves exactly ``resident_blocks`` KV
-        slots, so a second open cache would deadlock on slot backpressure.
-        Close it (``finally:``) to return the slots.
+        One at a time: the census reserves exactly the spec's page-slot
+        budget, so a second open cache would deadlock on slot
+        backpressure.  Close it (``finally:``) to return the slots.
         """
         if self.decode_spec is None:
             raise RuntimeError(
                 "session was built without decode=DecodeSpec(...); cached "
-                "decode needs its KV slots sized into the pool census")
+                "decode needs its KV page slots sized into the pool census")
         if self._kv_cache is not None and not self._kv_cache.closed:
             raise RuntimeError("a KV cache is already open on this session; "
                                "close it first (its pool slots are shared)")
         self._kv_cache = SpillableKVCache(
-            list(self._kv_units), self._kv_slot_shape,
+            list(self._kv_units), self._kv_page_shape,
+            self.decode_spec.max_seq,
             self.policy.adam.compute_np_dtype, self.pool, self.store,
             resident_limit=self._kv_resident)
         return self._kv_cache
@@ -1180,6 +1279,15 @@ class OffloadSession:
         state = self.execute(self.plan("decode_cached"), state)
         kv.advance(1)
         return np.asarray(state.logits)[:, 0]
+
+    def overlap_snapshot(self) -> dict:
+        """Point-in-time copy of the overlap-pipeline stall counters
+        (:class:`~repro.core.overlap.OverlapStats`), including the staged-
+        KV numbers serving cares about: ``kv_stage_gets`` / ``_hits`` (was
+        the window already on device when the KVReadOp asked?) and
+        ``kv_stage_wait_seconds`` (executor stall when it was not).  See
+        docs/METRICS.md for the full glossary."""
+        return self._ostats.snapshot()
 
     def decode_compiles(self) -> int:
         """Total jit traces across the decode stages — the bench/test probe

@@ -101,19 +101,29 @@ class ReleaseOp:
 
 @dataclass(frozen=True)
 class KVReadOp:
-    """Make the unit's KV cache device-resident for its ``block_step``:
-    wait out any in-flight SSD refill, H2D the current time bucket."""
+    """Make the unit's attended KV window device-resident for its
+    ``block_step``: gather the window's pages out of the paged cache
+    (waiting out / issuing SSD refills for spilled pages) and H2D the
+    current time-bucket extent.  Like :class:`FetchOp`, the executor
+    splits this into an issue half (a gather + H2D task queued on the
+    staging worker inside the lookahead window, under the previous
+    block's compute) and a wait half (this op, which only blocks on the
+    staged device K/V) whenever ``policy.overlap`` enables the staging
+    worker."""
 
     unit: str
 
 
 @dataclass(frozen=True)
 class KVWriteOp:
-    """Land the unit's freshly produced K/V in its host pool slot (one
-    token for ``block_step``, the whole prompt for ``block_prefill``),
-    spilling to SSD if the residency budget is exceeded."""
+    """Land the unit's freshly produced K/V in its host pages, spilling
+    dirty pages onward past the residency budget.  ``mode`` is validated
+    against the producing compute kind: ``"step"`` appends one token to
+    the tail page (``block_step``), ``"prefill"`` scatters the whole
+    padded prompt window across pages (``block_prefill``)."""
 
     unit: str
+    mode: str = "step"
 
 
 @dataclass(frozen=True)
@@ -189,7 +199,9 @@ class StreamPlan:
           (host checkpoint memory is returned),
         * ``block_step`` consumes a prior KVReadOp for its unit, every
           KVReadOp is consumed, and every KV-producing compute is landed by
-          a KVWriteOp (device K/V is never silently dropped),
+          a KVWriteOp whose ``mode`` matches the producing kind (one-token
+          append vs whole-window prefill scatter — device K/V is never
+          silently dropped, nor landed at the wrong page granularity),
         * at most one OverflowCheckOp, after every GradWriteOp (it is the
           barrier that makes the flat buffer whole); when it names
           ``regions`` they must cover every grad-written unit exactly
@@ -204,7 +216,7 @@ class StreamPlan:
         pending_grads: set[str] = set()
         saved_inputs: set[str] = set()
         kv_loaded: set[str] = set()
-        pending_kv: set[str] = set()
+        pending_kv: dict[str, str] = {}   # unit -> producing compute kind
         grads_written: set[str] = set()
         grad_write_order: list[str] = []
         optim_stepped: set[str] = set()
@@ -244,17 +256,27 @@ class StreamPlan:
                     if op.unit in pending_kv:
                         raise PlanError(f"{where}: {op.unit!r} already has "
                                         f"unwritten K/V")
-                    pending_kv.add(op.unit)
+                    pending_kv[op.unit] = op.kind
             elif isinstance(op, KVReadOp):
                 if op.unit in kv_loaded:
                     raise PlanError(f"{where}: double KV read for "
                                     f"{op.unit!r}")
                 kv_loaded.add(op.unit)
             elif isinstance(op, KVWriteOp):
-                if op.unit not in pending_kv:
+                kind = pending_kv.pop(op.unit, None)
+                if kind is None:
                     raise PlanError(f"{where}: KV write for {op.unit!r} "
                                     f"with no K/V produced")
-                pending_kv.discard(op.unit)
+                if op.mode not in ("step", "prefill"):
+                    raise PlanError(f"{where}: unknown KV write mode "
+                                    f"{op.mode!r}")
+                expected = "prefill" if kind == "block_prefill" else "step"
+                if op.mode != expected:
+                    raise PlanError(
+                        f"{where}: KV write mode {op.mode!r} for "
+                        f"{op.unit!r} does not match its producing kind "
+                        f"{kind!r} (expected {expected!r}: a step appends "
+                        f"one token, a prefill scatters the whole window)")
             elif isinstance(op, GradWriteOp):
                 if op.unit not in pending_grads:
                     raise PlanError(f"{where}: grad write for {op.unit!r} "
@@ -412,8 +434,8 @@ def compile_prefill(model) -> StreamPlan:
     ops: list[Op] = [FetchOp(embed), ComputeOp(embed, "embed"),
                      ReleaseOp(embed)]
     for b in blocks:
-        ops += [FetchOp(b), ComputeOp(b, "block_prefill"), KVWriteOp(b),
-                ReleaseOp(b)]
+        ops += [FetchOp(b), ComputeOp(b, "block_prefill"),
+                KVWriteOp(b, "prefill"), ReleaseOp(b)]
     ops += [FetchOp(head), ComputeOp(head, "head_logits_last"),
             ReleaseOp(head)]
     return StreamPlan("prefill", tuple(ops))
@@ -430,7 +452,7 @@ def compile_decode_cached(model) -> StreamPlan:
                      ReleaseOp(embed)]
     for b in blocks:
         ops += [FetchOp(b), KVReadOp(b), ComputeOp(b, "block_step"),
-                KVWriteOp(b), ReleaseOp(b)]
+                KVWriteOp(b, "step"), ReleaseOp(b)]
     ops += [FetchOp(head), ComputeOp(head, "head_logits"), ReleaseOp(head)]
     return StreamPlan("decode_cached", tuple(ops))
 

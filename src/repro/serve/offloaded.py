@@ -10,10 +10,15 @@ Two serving modes:
 
 * **cached** (default when the session carries a
   :class:`~repro.core.kv_cache.DecodeSpec`): prefill-then-step over a
-  spill-able KV cache.  Per-layer K/V lives in pool slots inside the same
-  pinned arena as the weight staging buffers, spilling to SSD past the
-  residency budget, so per-token cost is O(bucket) — independent of how
-  many tokens were emitted — and each time bucket jit-compiles once.
+  **paged** spill-able KV cache.  K/V lives in fixed-size time-axis pages
+  (``spec.page_size`` tokens each) in pool slots inside the same pinned
+  arena as the weight staging buffers; only *dirty* pages pay a spill
+  write past the residency budget and only the attended window's pages
+  refill, so per-token cost is O(bucket) — independent of how many tokens
+  were emitted — and each time bucket jit-compiles once.  Under
+  ``policy.overlap`` ≠ ``"sync"`` each block's KV window is gathered and
+  H2D'd on the staging worker beneath the previous block's compute
+  (:meth:`OffloadedDecoder.kv_overlap_stats` shows the hit rate).
 * **uncached**: the PR-1 behaviour — every emitted token re-runs the full
   prefix (O(T²) compute, a retrace per step).  Kept as the ablation
   baseline (``benchmarks/bench_decode.py``) and for model families without
@@ -151,3 +156,16 @@ class OffloadedDecoder:
     def fetch_stats(self) -> dict:
         """Swapper counters — how well decode hides SSD latency."""
         return self.session.swapper.stats.snapshot()
+
+    @property
+    def kv_overlap_stats(self) -> dict:
+        """Staged-KV transfer counters (session lifetime): how often a
+        decode step found its KV window already on device
+        (``kv_stage_hits``/``kv_stage_gets``, staged under the previous
+        block's compute) and how long it blocked when it had not
+        (``kv_stage_wait_s``).  All zero under ``overlap="sync"``, where
+        the gather + H2D run inline on the compute thread."""
+        snap = self.session.overlap_snapshot()
+        return {"kv_stage_gets": snap["kv_stage_gets"],
+                "kv_stage_hits": snap["kv_stage_hits"],
+                "kv_stage_wait_s": snap["kv_stage_wait_seconds"]}

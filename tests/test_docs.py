@@ -1,0 +1,19 @@
+"""Docs stay true: markdown links resolve and examples import (the same
+checks CI's ``docs`` job runs via tools/check_docs.py, so drift like a
+renamed DecodeSpec field or a moved doc fails tier-1 locally too)."""
+
+import os
+import sys
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_REPO_ROOT, "tools"))
+
+from check_docs import check_example_imports, check_markdown_links  # noqa: E402
+
+
+def test_markdown_links_resolve():
+    assert check_markdown_links(_REPO_ROOT) == []
+
+
+def test_examples_import():
+    assert check_example_imports(_REPO_ROOT) == []

@@ -1,0 +1,105 @@
+"""Docs drift gate: intra-repo markdown links must resolve, and every
+example must import.
+
+Two checks, both cheap enough for CI's ``docs`` job and for tier-1
+(``tests/test_docs.py`` wraps the same functions):
+
+* :func:`check_markdown_links` — every relative link target in the repo's
+  markdown files exists on disk.  Catches renamed/moved docs, deleted
+  baselines, and README references to files that never landed.
+* :func:`check_example_imports` — every ``examples/*.py`` smoke-imports
+  (module level only; the demos keep their work under ``main()``).
+  Catches doc/code drift like renamed ``DecodeSpec`` fields or moved
+  public API the examples still reference.
+
+Usage::
+
+    PYTHONPATH=src python tools/check_docs.py [repo_root]
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import os
+import re
+import sys
+
+# [text](target) — target captured up to the first unescaped ')'
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+_SKIP_DIRS = {".git", "__pycache__", ".hypothesis", "node_modules",
+              ".pytest_cache", ".ruff_cache"}
+
+
+def _markdown_files(root: str) -> list[str]:
+    found = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in _SKIP_DIRS]
+        for name in filenames:
+            if name.endswith(".md"):
+                found.append(os.path.join(dirpath, name))
+    return sorted(found)
+
+
+def check_markdown_links(root: str) -> list[str]:
+    """Failure messages for relative markdown links that do not resolve."""
+    failures = []
+    for path in _markdown_files(root):
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        for target in _LINK_RE.findall(text):
+            if target.startswith(_SKIP_PREFIXES):
+                continue
+            target = target.split("#", 1)[0]   # strip anchors
+            if not target:
+                continue
+            base = root if target.startswith("/") else os.path.dirname(path)
+            resolved = os.path.normpath(
+                os.path.join(base, target.lstrip("/")))
+            if not os.path.exists(resolved):
+                rel = os.path.relpath(path, root)
+                failures.append(f"{rel}: broken link -> {target}")
+    return failures
+
+
+def check_example_imports(root: str) -> list[str]:
+    """Failure messages for examples/*.py files that fail to import."""
+    failures = []
+    examples = os.path.join(root, "examples")
+    if not os.path.isdir(examples):
+        return [f"missing examples directory at {examples}"]
+    # examples import `benchmarks.*` helpers; make the repo root importable
+    # the way running from a checkout does
+    if root not in sys.path:
+        sys.path.insert(0, root)
+    for name in sorted(os.listdir(examples)):
+        if not name.endswith(".py"):
+            continue
+        mod_name = f"_docs_check_example_{name[:-3]}"
+        spec = importlib.util.spec_from_file_location(
+            mod_name, os.path.join(examples, name))
+        module = importlib.util.module_from_spec(spec)
+        try:
+            spec.loader.exec_module(module)
+        except BaseException as e:   # noqa: BLE001 — report, don't crash
+            failures.append(f"examples/{name}: import failed: {e!r}")
+        finally:
+            sys.modules.pop(mod_name, None)
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = argv if argv is not None else sys.argv[1:]
+    root = os.path.abspath(
+        args[0] if args else os.path.join(os.path.dirname(__file__), ".."))
+    failures = check_markdown_links(root) + check_example_imports(root)
+    for msg in failures:
+        print(f"check_docs: FAIL {msg}")
+    if not failures:
+        n_md = len(_markdown_files(root))
+        print(f"check_docs: OK ({n_md} markdown files, examples import)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
