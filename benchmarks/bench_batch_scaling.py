@@ -1,28 +1,122 @@
-"""Paper Figs. 10/17: peak memory vs batch size + max batch under 128 GiB.
-Paper: batch 4 -> 32 on Qwen2.5-7B under 128 GiB (8x tokens/s)."""
+"""Batch scaling, measured: the slot-occupancy ablation.
+
+Two halves:
+
+* **Measured** (the point of this bench): the same seeded ragged workload
+  served through real offloaded sessions at several batch widths, once
+  with static full-batch scheduling and once with the continuous per-slot
+  lifecycle — identical KV page budget per width.  Static pays the
+  drain tax (finished lanes idle until the whole batch retires);
+  continuous backfills them, so its slot occupancy and aggregate tokens/s
+  scale with batch width while static's occupancy *falls* as width grows.
+  Merges ``occupancy_*`` / ``speedup_*`` per width into
+  ``BENCH_serving.json`` (same CI regression gate as ``bench_serving``).
+* **Paper model** (Figs. 10/17 context): the analytic peak-memory curve vs
+  batch size that motivates serving many requests per session at all.
+"""
 
 from __future__ import annotations
 
-from repro.configs import PAPER_MODELS
+import json
+import os
+import shutil
+import tempfile
 
-from .common import emit, gib, time_us
+import jax
+
+from repro.configs import PAPER_MODELS
+from repro.core import DecodeSpec, OffloadPolicy
+from repro.core.model_adapter import make_offloadable_lm
+
+from .bench_serving import (BUCKET, CFG, MAX_SEQ, OUT_PATH, serve_metrics,
+                            solo_outputs, timed_run)
+from .common import emit, gib
 from .memory_model import GIB, estimate_peak, max_batch_under
 
-BATCHES = (1, 4, 8, 16, 32, 64, 96)
+BATCHES = (2, 4)                 # measured widths: 3 requests per slot
 LIMIT = 128 * GIB
 
 
+def _measure_width(batch: int) -> dict:
+    from repro.serve import OffloadedDecoder
+
+    root = tempfile.mkdtemp(prefix=f"bench_occupancy_b{batch}_")
+    spec = DecodeSpec(batch=batch, max_seq=MAX_SEQ, bucket=BUCKET)
+    model = make_offloadable_lm(CFG, jax.random.PRNGKey(0))
+    policy = OffloadPolicy.preset("memascend").with_store(root).build()
+    n = 3 * batch
+    try:
+        with OffloadedDecoder(model, policy, decode=spec) as dec:
+            solo = solo_outputs(dec, n=n)
+            cont_report, cont_wall = timed_run(dec, "continuous", n=n)
+            stat_report, stat_wall = timed_run(dec, "static", n=n)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    cont = serve_metrics(cont_report, cont_wall, solo)
+    stat = serve_metrics(stat_report, stat_wall, solo)
+    if cont["token_mismatches"] or stat["token_mismatches"]:
+        raise AssertionError(
+            f"batch={batch}: batched output diverged from solo decode")
+    return {
+        f"occupancy_continuous_b{batch}": cont["occupancy"],
+        f"occupancy_static_b{batch}": stat["occupancy"],
+        f"continuous_speedup_b{batch}":
+            cont["tokens_per_s"] / stat["tokens_per_s"],
+        f"tokens_per_s_continuous_b{batch}": cont["tokens_per_s"],
+        f"tokens_per_s_static_b{batch}": stat["tokens_per_s"],
+    }
+
+
+def _merge_into_report(metrics: dict, gates: dict) -> None:
+    """Fold the sweep into BENCH_serving.json (bench_serving writes it
+    first under benchmarks/run.py's ordering; standalone runs start a
+    fresh report)."""
+    if os.path.exists(OUT_PATH):
+        with open(OUT_PATH) as f:
+            report = json.load(f)
+    else:
+        report = {"bench": "serving", "config": {}, "metrics": {},
+                  "gates": {}, "threshold": 0.2}
+    report["config"]["occupancy_batches"] = list(BATCHES)
+    report["metrics"].update(metrics)
+    report["gates"].update(gates)
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
 def run() -> None:
+    metrics: dict = {}
+    gates: dict = {}
+    for batch in BATCHES:
+        m = _measure_width(batch)
+        metrics.update(m)
+        # Only occupancy gates: it is a deterministic lane-step ledger for
+        # a fixed workload.  The per-width wall-clock speedups are reported
+        # but not gated — at 3 requests per slot the pass-count gap is
+        # within this container's timing noise (the headline bench gates
+        # the speedup on a workload sized to dominate it).
+        gates[f"occupancy_continuous_b{batch}"] = "higher_is_better"
+        emit(
+            f"batch/occupancy/b{batch}",
+            0.0,
+            f"continuous={m[f'occupancy_continuous_b{batch}']:.3f} "
+            f"static={m[f'occupancy_static_b{batch}']:.3f} "
+            f"speedup={m[f'continuous_speedup_b{batch}']:.2f}x "
+            f"({3 * batch} requests, equal page budget)",
+        )
+    _merge_into_report(metrics, gates)
+
+    # Paper Figs. 10/17: the analytic memory headroom that makes wide
+    # serving batches feasible at all (batch 4 -> 32 on qwen2.5-7b under
+    # 128 GiB in the paper).
     for name in ("llama3.1-8b", "qwen2.5-7b"):
         cfg = PAPER_MODELS[name]
-        for b in BATCHES:
-            us = time_us(lambda: estimate_peak(cfg, memascend=True, batch=b),
-                         repeats=2)
-            base = estimate_peak(cfg, memascend=False, batch=b).total
-            mem = estimate_peak(cfg, memascend=True, batch=b).total
-            emit(f"batch/{name}/{b}", us,
-                 f"baseline={gib(base):.1f}GiB memascend={gib(mem):.1f}GiB")
+        base = estimate_peak(cfg, memascend=False, batch=32).total
+        mem = estimate_peak(cfg, memascend=True, batch=32).total
         bb = max_batch_under(cfg, LIMIT, memascend=False)
         bm = max_batch_under(cfg, LIMIT, memascend=True)
         emit(f"batch/{name}/max@128GiB", 0.0,
-             f"baseline_max={bb} memascend_max={bm} paper(qwen2.5-7b)=4->32")
+             f"baseline_max={bb} memascend_max={bm} "
+             f"(batch32: baseline={gib(base):.1f}GiB "
+             f"memascend={gib(mem):.1f}GiB) paper(qwen2.5-7b)=4->32")

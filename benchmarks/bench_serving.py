@@ -1,0 +1,301 @@
+"""Continuous batching vs static batching on the offloaded serving path.
+
+One seeded ragged workload — Poisson arrivals, mixed prompt lengths, mixed
+generation budgets — served three ways through the same session, model,
+and KV page budget:
+
+* ``solo``       — every request decoded entirely alone (a fresh engine
+                   run per request).  This is the reference ledger for the
+                   token-equality gate AND the jit warmup: a solo pass
+                   visits every prompt bucket and every step extent the
+                   batched runs can produce, so the timed runs must
+                   retrace nothing.
+* ``continuous`` — per-slot request lifecycle: joiners prefill-scatter
+                   into free slots mid-flight, finished requests retire
+                   (pages reclaimed, slot rejoins the free list) while the
+                   rest keep decoding.
+* ``static``     — the ablation: full batches formed in arrival order,
+                   nothing admitted until the whole batch drains.
+
+Acceptance gates (hard failures here, regression-gated in CI):
+
+* every request's continuous-run tokens == its solo-run tokens (greedy,
+  exact) — batching must never change output;
+* zero warm retraces across both timed runs;
+* continuous beats static on aggregate tokens/s AND p99 time-to-first-
+  token under the identical page budget — judged on the median of
+  ``N_TRIALS`` back-to-back paired runs, so a one-off scheduler burst
+  on a small CI box cannot flip the verdict.
+
+Writes ``BENCH_serving.json`` for ``benchmarks/check_regression.py``
+(committed baseline in ``benchmarks/baselines/serving.json``);
+``bench_batch_scaling.py`` merges its occupancy ablation into the same
+report.
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import DecodeSpec, OffloadPolicy
+from repro.core.model_adapter import make_offloadable_lm
+from repro.serve import OffloadedDecoder, Request, RequestState, ServingEngine
+
+from .common import emit
+
+CFG = ModelConfig(
+    name="bench-20m",
+    family="dense",
+    n_layers=4,
+    d_model=256,
+    n_heads=8,
+    n_kv_heads=4,
+    d_ff=1024,
+    vocab=8192,
+)
+BATCH, MAX_SEQ, BUCKET = 4, 160, 32
+N_REQUESTS = 16
+PROMPT_LEN_RANGE = (6, 32)      # rng.integers bounds (exclusive high)
+# Serving economics at bench scale: every join costs one full prefill pass
+# (a whole weight-streamed sweep), so continuous batching only wins when
+# decode steps outnumber joins decisively — generations must run long, and
+# their *spread* is the drain tax static batching pays (it drains at the
+# batch max while continuous pays the mean).  Short or narrow generation
+# budgets make both modes do nearly the same number of weight-streamed
+# passes and the comparison sinks into 2-CPU wall-clock noise.
+MAX_NEW_RANGE = (16, 96)
+LONG_PROMPT_LEN = 45            # r00: spans two prompt buckets (coverage
+                                # for multi-bucket prefill at bench scale)
+ARRIVAL_MEAN_S = 0.005          # Poisson: arrivals much faster than service
+# The structural continuous-vs-static margin at this scale (~1.15-1.2x) is
+# real but thinner than 2-CPU wall-clock noise on a bad day: one scheduler
+# burst landing inside a single timed window can flip an unpaired sample.
+# So each trial times the two modes back-to-back (paired — drift hits
+# both) and the gates take the *median of the per-trial ratios*: a noise
+# event has to corrupt two of three pairs to change the verdict.
+N_TRIALS = 3
+OUT_PATH = "BENCH_serving.json"
+
+
+def make_workload(seed: int = 0, n: int = N_REQUESTS) -> list[Request]:
+    """The seeded ragged-arrival request set (fresh Request objects each
+    call — requests are stateful)."""
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(*PROMPT_LEN_RANGE, size=n)
+    lens[0] = LONG_PROMPT_LEN
+    news = rng.integers(*MAX_NEW_RANGE, size=n)
+    arrivals = np.cumsum(rng.exponential(scale=ARRIVAL_MEAN_S, size=n))
+    return [
+        Request(
+            rid=f"r{i:02d}",
+            prompt=rng.integers(3, CFG.vocab, size=int(lens[i]),
+                                dtype=np.int32),
+            max_new_tokens=int(news[i]),
+            arrival=float(arrivals[i]),
+        )
+        for i in range(n)
+    ]
+
+
+def solo_outputs(decoder, seed: int = 0, n: int = N_REQUESTS) -> dict:
+    """Decode every request alone through the engine (reference + warmup:
+    covers each prompt bucket and every step extent the batched runs use)."""
+    outputs = {}
+    for i, req in enumerate(make_workload(seed, n)):
+        req.arrival = 0.0
+        report = ServingEngine(decoder).run([req])
+        assert report.requests[0].state is RequestState.DONE
+        outputs[req.rid] = list(report.requests[0].output)
+    return outputs
+
+
+def timed_run(decoder, mode: str, seed: int = 0, n: int = N_REQUESTS):
+    t0 = time.perf_counter()
+    report = ServingEngine(decoder).run(make_workload(seed, n), mode=mode)
+    wall = time.perf_counter() - t0
+    return report, wall
+
+
+def _mismatches(report, solo: dict) -> int:
+    return sum(1 for r in report.requests if list(r.output) != solo[r.rid])
+
+
+def serve_metrics(report, wall: float, solo: dict) -> dict:
+    assert not report.refused, "workload must be fully admissible"
+    return {
+        "tokens_per_s": report.total_tokens / wall,
+        "ttft_p50_s": report.ttft_percentile(50),
+        "ttft_p99_s": report.ttft_percentile(99),
+        "occupancy": report.occupancy,
+        "decode_steps": report.decode_steps,
+        "prefills": report.prefills,
+        "token_mismatches": _mismatches(report, solo),
+        "kv_reclaims": report.kv_stats["reclaims"],
+        "kv_spills": report.kv_stats["spills"],
+    }
+
+
+def run() -> None:
+    root = tempfile.mkdtemp(prefix="bench_serving_")
+    spec = DecodeSpec(batch=BATCH, max_seq=MAX_SEQ, bucket=BUCKET)
+    model = make_offloadable_lm(CFG, jax.random.PRNGKey(0))
+    policy = OffloadPolicy.preset("memascend").with_store(root).build()
+    trials = []
+    try:
+        with OffloadedDecoder(model, policy, decode=spec) as dec:
+            solo = solo_outputs(dec)
+            warm = dec.session.decode_compiles()
+            for _ in range(N_TRIALS):
+                cont_report, cont_wall = timed_run(dec, "continuous")
+                stat_report, stat_wall = timed_run(dec, "static")
+                trials.append(
+                    (
+                        serve_metrics(cont_report, cont_wall, solo),
+                        serve_metrics(stat_report, stat_wall, solo),
+                        len(cont_report.refused) + len(stat_report.refused),
+                    )
+                )
+            retraces = dec.session.decode_compiles() - warm
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+    # Everything but wall time is deterministic across trials (same seeded
+    # workload, same drive loop); pick the median-throughput continuous
+    # trial for the reported absolutes and gate on median paired ratios.
+    speedups = sorted(
+        c["tokens_per_s"] / s["tokens_per_s"] for c, s, _ in trials
+    )
+    ttft_ratios = sorted(
+        s["ttft_p99_s"] / c["ttft_p99_s"] for c, s, _ in trials
+    )
+    cont, stat, _ = sorted(trials, key=lambda t: t[0]["tokens_per_s"])[
+        len(trials) // 2
+    ]
+
+    # Hard acceptance gates — these are correctness/ordering claims, not
+    # perf points, so they fail the bench outright rather than drifting
+    # through the 20% regression window.
+    bad = [
+        (i, c["token_mismatches"], s["token_mismatches"])
+        for i, (c, s, _) in enumerate(trials)
+        if c["token_mismatches"] or s["token_mismatches"]
+    ]
+    if bad:
+        raise AssertionError(
+            f"batched serving changed greedy output vs solo decode "
+            f"(trial, continuous, static mismatch counts): {bad}"
+        )
+    if retraces:
+        raise AssertionError(
+            f"{retraces} warm retraces in the timed serving runs — the "
+            f"solo pass must have warmed every bucket and extent"
+        )
+    speedup = speedups[len(speedups) // 2]
+    ttft_ratio = ttft_ratios[len(ttft_ratios) // 2]
+    if speedup <= 1.0:
+        raise AssertionError(
+            f"continuous batching did not beat static on aggregate "
+            f"throughput: median paired speedup {speedup:.2f}x "
+            f"(samples {[f'{x:.2f}' for x in speedups]})"
+        )
+    if ttft_ratio <= 1.0:
+        raise AssertionError(
+            f"continuous batching did not beat static on p99 TTFT: "
+            f"median paired ratio {ttft_ratio:.2f}x "
+            f"(samples {[f'{x:.2f}' for x in ttft_ratios]})"
+        )
+
+    report = {
+        "bench": "serving",
+        "config": {
+            "model": CFG.name,
+            "n_layers": CFG.n_layers,
+            "batch": BATCH,
+            "max_seq": MAX_SEQ,
+            "bucket": BUCKET,
+            "n_requests": N_REQUESTS,
+            "prompt_len_range": list(PROMPT_LEN_RANGE),
+            "max_new_range": list(MAX_NEW_RANGE),
+            "arrival_mean_s": ARRIVAL_MEAN_S,
+            "workload_seed": 0,
+            "n_trials": N_TRIALS,
+        },
+        "metrics": {
+            "tokens_per_s_continuous": cont["tokens_per_s"],
+            "tokens_per_s_static": stat["tokens_per_s"],
+            "continuous_speedup": speedup,
+            "ttft_p50_s_continuous": cont["ttft_p50_s"],
+            "ttft_p99_s_continuous": cont["ttft_p99_s"],
+            "ttft_p50_s_static": stat["ttft_p50_s"],
+            "ttft_p99_s_static": stat["ttft_p99_s"],
+            "ttft_p99_ratio_static_over_continuous": ttft_ratio,
+            "occupancy_continuous": cont["occupancy"],
+            "occupancy_static": stat["occupancy"],
+            "decode_steps_continuous": cont["decode_steps"],
+            "decode_steps_static": stat["decode_steps"],
+            "prefills_continuous": cont["prefills"],
+            "kv_reclaims_continuous": cont["kv_reclaims"],
+            "token_mismatches": sum(
+                c["token_mismatches"] + s["token_mismatches"]
+                for c, s, _ in trials
+            ),
+            "retraces_warm_serving": retraces,
+            "requests_refused": sum(r for _, _, r in trials),
+        },
+        # absolute tokens/s is machine-dependent (same stance as
+        # bench_decode); the speedup and TTFT ratios are measured within
+        # one run, so they hold across runner generations.  The three
+        # zero-valued counters gate at exactly zero (check_regression
+        # tolerates no increase from a zero baseline).
+        "gates": {
+            "tokens_per_s_continuous": "higher_is_better",
+            "continuous_speedup": "higher_is_better",
+            "ttft_p99_ratio_static_over_continuous": "higher_is_better",
+            "occupancy_continuous": "higher_is_better",
+            "token_mismatches": "lower_is_better",
+            "retraces_warm_serving": "lower_is_better",
+            "requests_refused": "lower_is_better",
+        },
+        "threshold": 0.2,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+    emit(
+        "serving/throughput",
+        1e6 / cont["tokens_per_s"],
+        f"continuous={cont['tokens_per_s']:.1f}tok/s "
+        f"static={stat['tokens_per_s']:.1f}tok/s "
+        f"speedup={speedup:.2f}x median of {N_TRIALS} paired trials "
+        f"(same KV page budget)",
+    )
+    emit(
+        "serving/ttft",
+        cont["ttft_p99_s"] * 1e6,
+        f"p50={cont['ttft_p50_s'] * 1e3:.1f}ms "
+        f"p99={cont['ttft_p99_s'] * 1e3:.1f}ms vs static "
+        f"p99={stat['ttft_p99_s'] * 1e3:.1f}ms ({ttft_ratio:.2f}x)",
+    )
+    emit(
+        "serving/occupancy",
+        0.0,
+        f"continuous={cont['occupancy']:.3f} static={stat['occupancy']:.3f} "
+        f"steps={cont['decode_steps']}/{stat['decode_steps']} "
+        f"prefills={cont['prefills']}",
+    )
+    emit(
+        "serving/equivalence",
+        0.0,
+        f"token_mismatches=0/{2 * N_TRIALS * N_REQUESTS} "
+        f"retraces_warm={retraces} "
+        f"reclaims={cont['kv_reclaims']} (greedy output identical to "
+        f"decoding each request alone)",
+    )

@@ -8,7 +8,8 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
   bench_nvme             Fig. 14
   bench_peak_memory      Table II / Fig. 15
   bench_context_scaling  Figs. 9/16
-  bench_batch_scaling    Figs. 10/17
+  bench_batch_scaling    Figs. 10/17 + (ours) measured slot-occupancy
+                         ablation (merges into BENCH_serving.json)
   bench_moe_pool         Fig. 18
   bench_io_volume        Fig. 20 / Table VI
   bench_e2e_throughput   Table IV (real steps, container scale)
@@ -16,6 +17,9 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
   bench_decode           (ours) cached vs uncached offloaded decode
                          (also writes BENCH_decode.json for the CI
                          regression gate; see check_regression.py)
+  bench_serving          (ours) continuous vs static batching over the
+                         paged KV cache (writes BENCH_serving.json for
+                         the CI regression gate)
 """
 
 from __future__ import annotations
@@ -29,18 +33,18 @@ def main() -> None:
                    bench_context_scaling, bench_decode,
                    bench_e2e_throughput, bench_io_volume, bench_kernels,
                    bench_moe_pool, bench_nvme, bench_overflow,
-                   bench_peak_memory, bench_pinned_alloc)
+                   bench_peak_memory, bench_pinned_alloc, bench_serving)
     modules = [
         bench_buffer_pool, bench_pinned_alloc, bench_overflow, bench_nvme,
-        bench_peak_memory, bench_context_scaling, bench_batch_scaling,
-        bench_moe_pool, bench_io_volume, bench_e2e_throughput, bench_kernels,
-        bench_decode,
+        bench_peak_memory, bench_context_scaling, bench_moe_pool,
+        bench_io_volume, bench_e2e_throughput, bench_kernels,
+        bench_decode, bench_serving, bench_batch_scaling,
     ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    only = sys.argv[1:] or None
     print("name,us_per_call,derived")
     failed = []
     for mod in modules:
-        if only and only not in mod.__name__:
+        if only and not any(o in mod.__name__ for o in only):
             continue
         try:
             mod.run()

@@ -12,10 +12,18 @@ only dirty pages pay a spill write, and each block's attended window is
 gathered + H2D'd on the staging worker under the previous block's compute.
 ``--no-cache`` falls back to the O(T²) full-prefix re-run for comparison.
 
+With ``--requests N`` the example becomes a continuous-batching server:
+N requests with ragged prompt lengths arrive as a seeded Poisson process
+(``--arrival-rate`` per second) and stream through the ServingEngine —
+each finishing request's slot and KV pages are reclaimed and handed to
+the next queued request mid-flight, and per-request TTFT / queue-wait /
+throughput metrics are printed at the end.
+
 Run:  PYTHONPATH=src python examples/serve_offloaded_decode.py \
           [--policy memascend|zero-infinity] [--new-tokens 16] \
           [--kv-resident 2 | --resident-pages 4] [--bucket 16] \
-          [--page-tokens 16] [--no-cache] [--lookahead 2]
+          [--page-tokens 16] [--no-cache] [--lookahead 2] \
+          [--requests 8 --arrival-rate 50]
 """
 
 import argparse
@@ -28,10 +36,47 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import OffloadPolicy, fmt_bytes
 from repro.core.model_adapter import make_offloadable_lm
-from repro.serve import DecodeSpec, OffloadedDecoder
+from repro.serve import (DecodeSpec, OffloadedDecoder, Request,
+                         ServingEngine)
 
 CFG = ModelConfig(name="serve-20m", family="dense", n_layers=4, d_model=256,
                   n_heads=8, n_kv_heads=4, d_ff=1024, vocab=8192)
+
+
+def serve_requests(dec, args) -> None:
+    """Continuous-batching demo: ragged Poisson arrivals through the
+    per-slot request lifecycle (join / prefill-scatter / decode / retire)."""
+    rng = np.random.default_rng(0)
+    arrivals = np.cumsum(rng.exponential(1.0 / args.arrival_rate,
+                                         size=args.requests))
+    reqs = []
+    for i in range(args.requests):
+        n = int(rng.integers(max(1, args.prompt_len // 2),
+                             args.prompt_len + 1))
+        reqs.append(Request(
+            rid=f"r{i:02d}",
+            prompt=rng.integers(3, CFG.vocab, size=n, dtype=np.int32),
+            max_new_tokens=args.new_tokens,
+            arrival=float(arrivals[i])))
+    report = ServingEngine(dec).run(reqs)
+    print(f"served {len(report.completed)}/{args.requests} requests "
+          f"({len(report.refused)} refused) in {report.duration_s:.2f}s: "
+          f"{report.tokens_per_s:.1f} tok/s aggregate, "
+          f"occupancy {report.occupancy:.2f} over "
+          f"{report.decode_steps} steps / {report.prefills} prefills")
+    if report.completed:
+        print(f"ttft p50 {report.ttft_percentile(50) * 1e3:.1f}ms  "
+              f"p99 {report.ttft_percentile(99) * 1e3:.1f}ms")
+    kv = dec.kv_stats
+    print(f"kv: reclaims {kv['reclaims']} "
+          f"({kv['reclaim_bytes'] / 1e6:.2f}MB dropped spill-free)  "
+          f"dirty spills {kv['spills']}  refills {kv['refills']}")
+    for r in report.requests[:3]:
+        m = r.metrics
+        print(f"  {r.rid} [{r.state.value}] prompt {r.prompt_len:3d}  "
+              f"out {m.tokens_out:3d}  wait {1e3 * (m.queue_wait_s or 0):6.1f}ms  "
+              f"ttft {1e3 * (m.ttft_s or 0):6.1f}ms  "
+              f"tokens: {r.output[:8]} ...")
 
 
 def main() -> None:
@@ -56,7 +101,14 @@ def main() -> None:
     ap.add_argument("--resident-pages", type=int, default=None,
                     help="host KV budget directly in page slots "
                          "(overrides --kv-resident)")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="serve N ragged requests through the continuous-"
+                         "batching engine instead of one joint generate")
+    ap.add_argument("--arrival-rate", type=float, default=50.0,
+                    help="Poisson arrival rate for --requests, per second")
     args = ap.parse_args()
+    if args.requests is not None and args.no_cache:
+        ap.error("--requests needs the paged KV cache (drop --no-cache)")
 
     model = make_offloadable_lm(CFG, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
@@ -79,6 +131,10 @@ def main() -> None:
             print(f"policy {policy.name}  lookahead {dec.session.lookahead}  "
                   f"pool {fmt_bytes(dec.session.pool.pool_bytes)}  "
                   f"cache {'KV (spill-able)' if decode else 'none (O(T^2))'}")
+            if args.requests is not None:
+                serve_requests(dec, args)
+                print("offloaded serve OK")
+                return
             dec.generate(prompts, args.new_tokens)   # warmup/compile
             t0 = time.time()
             gen = dec.generate(prompts, args.new_tokens)

@@ -57,6 +57,7 @@ from __future__ import annotations
 
 import threading
 import time
+from collections import deque
 from concurrent.futures import Future
 from dataclasses import dataclass
 
@@ -177,37 +178,51 @@ class KVStats:
     spill_bytes: int = 0
     refill_bytes: int = 0
     wait_seconds: float = 0.0  # time blocked on outstanding refills
+    reclaims: int = 0          # pages dropped by slot retirement (no write)
+    reclaim_bytes: int = 0     # bytes those reclaimed pages did NOT spill
 
     def snapshot(self) -> dict:
         return {k: getattr(self, k) for k in (
             "spills", "clean_drops", "refills", "prefetch_refills",
             "prefetch_hits", "sync_refills", "spill_bytes", "refill_bytes",
-            "wait_seconds")}
+            "wait_seconds", "reclaims", "reclaim_bytes")}
 
 
 class SpillableKVCache:
     """Per-layer KV state in page-granular pool slots, spilled to SSD on
     budget.
 
-    One instance covers one generate() call-sequence: ``length`` tokens are
-    cached for every unit in ``units``.  A unit's state is a sequence of
-    *pages*, each one pool slot holding a
-    ``(2, batch, page_tokens, kv_heads, head_dim)`` array (``[0]`` is K,
-    ``[1]`` is V); page *p* covers absolute positions
+    One instance covers one generate() call-sequence or serving session.
+    The batch dimension is carved into ``slots`` independent *batch slots*
+    (``slots == 1`` keeps the whole batch as one joint slot — the
+    generate() path).  A (unit, slot)'s state is a sequence of *pages*,
+    each one pool slot holding a
+    ``(2, rows, page_tokens, kv_heads, head_dim)`` array (``[0]`` is K,
+    ``[1]`` is V; ``rows`` is the whole batch for a joint cache and 1 per
+    batch slot otherwise); page *p* covers absolute positions
     ``[p·page_tokens, (p+1)·page_tokens)``.  Pages materialize lazily on
     first write and are zero-filled (slot memory is recycled — stale bytes
     from a previous sequence would poison the masked softmax through
     ``0 × NaN``).
 
+    Continuous batching (``slots > 1``): each batch slot independently
+    :meth:`join`\\ s (drawn from a FIFO free list), prefills + decodes at
+    its own per-slot length, and :meth:`retire`\\ s — page reclaim drops
+    its dirty pages *without* a spill write, forgets its SSD keys (a
+    reused slot reads zeros, never a previous request's bytes), and
+    returns the slot to the free list.  :meth:`admissible` is the
+    scheduler's KV-page admission check.
+
     The session writes via :meth:`append` / :meth:`write_prefill`, reads
     whole attended windows via :meth:`gather_window`, and hints upcoming
     units via :meth:`prefetch_window`.  See the module docstring for the
-    thread contract (pinning protocol included).
+    thread contract (pinning protocol included); :meth:`join` /
+    :meth:`retire` belong to the drive thread, *between* plan runs.
     """
 
     def __init__(self, units: list[str], page_shape: tuple, max_seq: int,
                  dtype, pool: BufferPoolBase, store: TensorStore, *,
-                 resident_limit: int | None = None) -> None:
+                 resident_limit: int | None = None, slots: int = 1) -> None:
         self.units = list(units)
         self.page_shape = tuple(page_shape)
         self.page_tokens = int(self.page_shape[2])
@@ -218,7 +233,18 @@ class SpillableKVCache:
                                np.prod(self.page_shape, dtype=np.int64))
         self.pool = pool
         self.store = store
-        total = len(self.units) * self.pages_per_unit
+        if slots < 1:
+            raise ValueError(f"slots must be >= 1, got {slots}")
+        if slots > 1 and self.page_shape[1] != 1:
+            raise ValueError(
+                f"per-slot paging (slots={slots}) needs single-row pages, "
+                f"got page batch dim {self.page_shape[1]} (pass the "
+                f"model's kv_shape(1, page_tokens))")
+        self.slots = int(slots)
+        # rows in a gathered window: whole batch for a joint cache, one
+        # row per batch slot otherwise
+        self.batch = self.page_shape[1] if self.slots == 1 else self.slots
+        total = len(self.units) * self.pages_per_unit * self.slots
         self.resident_limit = total if resident_limit is None else \
             min(resident_limit, total)
         if self.resident_limit < total and self.resident_limit < 2:
@@ -230,7 +256,13 @@ class SpillableKVCache:
         # slots for the (in use, prefetching) pair cycling the cold pages.
         self._keep = total if self.resident_limit >= total else \
             max(0, self.resident_limit - 2)
-        self.length = 0          # tokens cached so far (same for all units)
+        # Per-slot cached-token counts.  All slots start active (the joint
+        # generate() path drives them in lockstep); a serving engine
+        # retires them into the free list first, then join/retire churns
+        # them per request.
+        self.lengths = np.zeros(self.slots, dtype=np.int64)
+        self.active: set[int] = set(range(self.slots))
+        self._free: deque[int] = deque()
         self.stats = KVStats()
         self.closed = False
         # A Condition, not a bare Lock: with two ensuring threads (compute
@@ -242,7 +274,7 @@ class SpillableKVCache:
         # path ever acquires it twice (an accidental nested acquire should
         # deadlock loudly, not silently unlock early).
         self._lock = threading.Condition(threading.Lock())
-        # page key = (unit, page_index)
+        # page key = (unit, batch_slot, page_index)
         self._slots: dict[tuple, PoolBuffer] = {}     # resident pages
         self._futures: dict[tuple, tuple[PoolBuffer, Future]] = {}  # refills
         self._spilled: set[tuple] = set()   # page bytes live on SSD only
@@ -258,8 +290,12 @@ class SpillableKVCache:
 
     # -- internals -----------------------------------------------------------
 
-    def _store_key(self, unit: str, page: int) -> str:
-        return f"kv/{unit}/p{page:04d}"
+    def _store_key(self, unit: str, slot: int, page: int) -> str:
+        # joint caches keep the PR-5 key format (no slot segment) so their
+        # on-SSD layout — and the tests pinned to it — is unchanged
+        if self.slots == 1:
+            return f"kv/{unit}/p{page:04d}"
+        return f"kv/{unit}/s{slot:02d}/p{page:04d}"
 
     def _touch(self, key: tuple) -> None:
         if key in self._use_order:
@@ -359,21 +395,23 @@ class SpillableKVCache:
         with self._lock:
             if self.closed:
                 return
-            for p in range(self.pages_for(extent)):
-                key = (unit, p)
-                if (key not in self._spilled or key in self._slots
-                        or key in self._futures):
-                    continue
-                if self._free_capacity() < 2:
-                    return
-                buf = self._acquire(key)
-                view = buf.view(self.dtype, self.page_shape)
-                future = self.store.read_async(self._store_key(*key), view)
-                self._futures[key] = (buf, future)
-                self._spilled.discard(key)
-                self.stats.prefetch_refills += 1
+            for slot in range(self.slots):
+                for p in range(self.pages_for(extent)):
+                    key = (unit, slot, p)
+                    if (key not in self._spilled or key in self._slots
+                            or key in self._futures):
+                        continue
+                    if self._free_capacity() < 2:
+                        return
+                    buf = self._acquire(key)
+                    view = buf.view(self.dtype, self.page_shape)
+                    future = self.store.read_async(self._store_key(*key),
+                                                   view)
+                    self._futures[key] = (buf, future)
+                    self._spilled.discard(key)
+                    self.stats.prefetch_refills += 1
 
-    def ensure_page(self, unit: str, page: int, *,
+    def ensure_page(self, unit: str, page: int, *, slot: int = 0,
                     pin: bool = False) -> np.ndarray:
         """Host view of one page, resident.  Waits out an in-flight refill;
         synchronously refills a spilled page; acquires (and zero-fills) a
@@ -386,7 +424,9 @@ class SpillableKVCache:
         if not 0 <= page < self.pages_per_unit:
             raise ValueError(f"page {page} outside [0, "
                              f"{self.pages_per_unit}) for unit {unit!r}")
-        key = (unit, page)
+        if not 0 <= slot < self.slots:
+            raise ValueError(f"slot {slot} outside [0, {self.slots})")
+        key = (unit, slot, page)
         with self._lock:
             if self.closed:
                 raise RuntimeError("KV cache is closed")
@@ -468,9 +508,9 @@ class SpillableKVCache:
             self._lock.notify_all()   # landed page is evictable again
         return view
 
-    def unpin(self, unit: str, page: int) -> None:
+    def unpin(self, unit: str, page: int, *, slot: int = 0) -> None:
         """Release one pin on a page (see :meth:`ensure_page`)."""
-        key = (unit, page)
+        key = (unit, slot, page)
         with self._lock:
             n = self._pinned.get(key, 0) - 1
             if n <= 0:
@@ -495,77 +535,225 @@ class SpillableKVCache:
             raise KeyError(f"unknown KV unit {unit!r}")
         if not 1 <= extent <= self.max_seq:
             raise ValueError(f"extent {extent} outside [1, {self.max_seq}]")
-        _two, b, pt, kh, d = self.page_shape
-        k_out = np.zeros((b, extent, kh, d), self.dtype)
-        v_out = np.zeros((b, extent, kh, d), self.dtype)
-        for p in range(self.pages_for(extent)):
-            with self._lock:
-                materialized = self._materialized((unit, p))
-            if not materialized:
-                continue    # lazily never written: stays zero
-            view = self.ensure_page(unit, p, pin=True)
-            try:
-                lo = p * pt
-                m = min(pt, extent - lo)
-                k_out[:, lo:lo + m] = view[0][:, :m]
-                v_out[:, lo:lo + m] = view[1][:, :m]
-            finally:
-                self.unpin(unit, p)
+        pt = self.page_shape[2]
+        kh, d = self.page_shape[3], self.page_shape[4]
+        k_out = np.zeros((self.batch, extent, kh, d), self.dtype)
+        v_out = np.zeros((self.batch, extent, kh, d), self.dtype)
+        rows = slice(None) if self.slots == 1 else None
+        for slot in range(self.slots):
+            if self.slots > 1:
+                rows = slice(slot, slot + 1)
+            for p in range(self.pages_for(extent)):
+                with self._lock:
+                    materialized = self._materialized((unit, slot, p))
+                if not materialized:
+                    continue    # lazily never written: stays zero
+                view = self.ensure_page(unit, p, slot=slot, pin=True)
+                try:
+                    lo = p * pt
+                    m = min(pt, extent - lo)
+                    k_out[rows, lo:lo + m] = view[0][:, :m]
+                    v_out[rows, lo:lo + m] = view[1][:, :m]
+                finally:
+                    self.unpin(unit, p, slot=slot)
         return k_out, v_out
 
+    def _rows(self, arr: np.ndarray, slot: int) -> np.ndarray:
+        """The batch rows a slot owns: everything for a joint cache, one
+        row (kept 2-D-leading) per batch slot otherwise."""
+        return arr if self.slots == 1 else arr[slot:slot + 1]
+
     def append(self, unit: str, k_new: np.ndarray, v_new: np.ndarray) -> None:
-        """Write one decoded token's K/V (``(B, 1, KH, D)``) at position
-        ``length`` (advance once per step via :meth:`advance`) into the
-        tail page — the only page a decode step dirties."""
-        if self.length >= self.max_seq:
-            raise ValueError(f"KV cache full: length {self.length} at "
-                             f"capacity {self.max_seq}")
-        page, off = divmod(self.length, self.page_tokens)
-        view = self.ensure_page(unit, page, pin=True)
-        try:
-            view[0][:, off] = k_new[:, 0]
-            view[1][:, off] = v_new[:, 0]
-            with self._lock:
-                self._dirty.add((unit, page))
-        finally:
-            self.unpin(unit, page)
+        """Write one decoded token's K/V (``(B, 1, KH, D)``) into each
+        **active** slot's tail page at that slot's own length (advance once
+        per step via :meth:`advance`) — the only pages a decode step
+        dirties.  Inactive slots' rows are ignored (their lanes carry
+        masked garbage)."""
+        targets = sorted(self.active)
+        if not targets:
+            raise RuntimeError("append with no active slots")
+        for s in targets:
+            if self.lengths[s] >= self.max_seq:
+                raise ValueError(f"KV cache full: slot {s} length "
+                                 f"{int(self.lengths[s])} at capacity "
+                                 f"{self.max_seq}")
+        for s in targets:
+            page, off = divmod(int(self.lengths[s]), self.page_tokens)
+            view = self.ensure_page(unit, page, slot=s, pin=True)
+            try:
+                view[0][:, off] = self._rows(k_new, s)[:, 0]
+                view[1][:, off] = self._rows(v_new, s)[:, 0]
+                with self._lock:
+                    self._dirty.add((unit, s, page))
+            finally:
+                self.unpin(unit, page, slot=s)
         self._maybe_spill_after_use()
 
-    def write_prefill(self, unit: str, k: np.ndarray, v: np.ndarray) -> None:
+    def write_prefill(self, unit: str, k: np.ndarray, v: np.ndarray, *,
+                      slots: list[int] | None = None) -> None:
         """Write the prefill pass's K/V (``(B, S_bucket, KH, D)``; entries
         past the true prompt length are masked garbage, overwritten by
-        later appends), scattered page by page."""
-        s = k.shape[1]
-        if s > self.max_seq:
-            raise ValueError(f"prefill extent {s} exceeds capacity "
+        later appends), scattered page by page.  ``slots`` restricts the
+        scatter to the named batch slots' rows — the continuous-batching
+        joiner path, where the other lanes belong to mid-flight requests
+        whose pages must not be touched."""
+        s_extent = k.shape[1]
+        if s_extent > self.max_seq:
+            raise ValueError(f"prefill extent {s_extent} exceeds capacity "
                              f"{self.max_seq}")
+        targets = range(self.slots) if slots is None else slots
         pt = self.page_tokens
-        for p in range(-(-s // pt)):
-            lo = p * pt
-            m = min(pt, s - lo)
-            view = self.ensure_page(unit, p, pin=True)
-            try:
-                view[0][:, :m] = k[:, lo:lo + m]
-                view[1][:, :m] = v[:, lo:lo + m]
-                with self._lock:
-                    self._dirty.add((unit, p))
-            finally:
-                self.unpin(unit, p)
+        for slot in targets:
+            if not 0 <= slot < self.slots:
+                raise ValueError(f"slot {slot} outside [0, {self.slots})")
+            kr, vr = self._rows(k, slot), self._rows(v, slot)
+            for p in range(-(-s_extent // pt)):
+                lo = p * pt
+                m = min(pt, s_extent - lo)
+                view = self.ensure_page(unit, p, slot=slot, pin=True)
+                try:
+                    view[0][:, :m] = kr[:, lo:lo + m]
+                    view[1][:, :m] = vr[:, lo:lo + m]
+                    with self._lock:
+                        self._dirty.add((unit, slot, p))
+                finally:
+                    self.unpin(unit, p, slot=slot)
         self._maybe_spill_after_use()
 
+    # -- lengths + slot lifecycle --------------------------------------------
+
+    @property
+    def length(self) -> int:
+        """Longest cached sequence (all slots agree on the joint path)."""
+        return int(self.lengths.max(initial=0))
+
+    def slot_length(self, slot: int) -> int:
+        return int(self.lengths[slot])
+
     def set_length(self, length: int) -> None:
+        """Joint-path length update: every slot in lockstep."""
         if not 0 <= length <= self.max_seq:
             raise ValueError(f"length {length} outside [0, {self.max_seq}]")
-        self.length = length
+        self.lengths[:] = length
+
+    def set_slot_length(self, slot: int, length: int) -> None:
+        """One slot's length (the serving prefill lands a joiner here)."""
+        if not 0 <= length <= self.max_seq:
+            raise ValueError(f"length {length} outside [0, {self.max_seq}]")
+        if slot not in self.active:
+            raise RuntimeError(f"slot {slot} is not active")
+        self.lengths[slot] = length
 
     def advance(self, n: int = 1) -> None:
-        self.set_length(self.length + n)
+        """Advance every **active** slot by ``n`` (one decode step)."""
+        for s in self.active:
+            new = int(self.lengths[s]) + n
+            if not 0 <= new <= self.max_seq:
+                raise ValueError(f"length {new} outside [0, {self.max_seq}] "
+                                 f"for slot {s}")
+        for s in self.active:
+            self.lengths[s] += n
+
+    @property
+    def free_slots(self) -> int:
+        """Batch slots available to :meth:`join`."""
+        with self._lock:
+            return len(self._free)
+
+    def admissible(self, prompt_len: int) -> bool:
+        """KV-page admission check: can a request with this prompt stream
+        its own attended window?  Its per-unit prompt pages plus one
+        turnover slot must fit the page budget — a longer prompt would
+        evict a page it is about to read *within a single gather*, every
+        step, forever (thrash, not progress), so the scheduler refuses it
+        terminally rather than queueing it."""
+        if not 1 <= prompt_len <= self.max_seq:
+            return False
+        return self.pages_for(prompt_len) + 1 <= self.resident_limit
+
+    def join(self) -> int | None:
+        """Claim a retired batch slot for a new request (FIFO over the
+        free list); ``None`` when every slot is mid-request.  The slot
+        comes back empty: length 0, no pages materialized (its previous
+        request's pages were reclaimed and its SSD keys forgotten by
+        :meth:`retire`, so the first gather reads zeros)."""
+        with self._lock:
+            if self.closed:
+                raise RuntimeError("KV cache is closed")
+            if not self._free:
+                return None
+            slot = self._free.popleft()
+            self.active.add(slot)
+            self.lengths[slot] = 0
+            return slot
+
+    def retire(self, slot: int) -> None:
+        """Retire one batch slot: reclaim its pages and return it to the
+        free list.  Reclaim is the cheap half of the spill machinery —
+        resident pages (dirty or not) release their pool slots *without*
+        a store write, in-flight refills are waited out and dropped, and
+        the slot's SSD keys are forgotten so a rejoining request can
+        never read the retired request's bytes.  Drive-thread only,
+        between plan runs: pages of a retiring slot must not be pinned
+        (the staging worker is quiesced between runs)."""
+        if not 0 <= slot < self.slots:
+            raise ValueError(f"slot {slot} outside [0, {self.slots})")
+        with self._lock:
+            if slot in self._free:
+                raise RuntimeError(f"slot {slot} already retired")
+            self.active.discard(slot)
+            self.lengths[slot] = 0
+            # wait out a dirty spill write mid-flight on another thread;
+            # it lands the key in _spilled, which is forgotten below
+            while any(k[1] == slot for k in self._evicting):
+                if not self._lock.wait(timeout=30.0):
+                    raise RuntimeError(
+                        f"slot {slot} page stuck in eviction for 30s")
+            if any(self._pinned.get(k) for k in self._slots
+                   if k[1] == slot):
+                raise RuntimeError(
+                    f"retire({slot}) with pinned pages: retire only "
+                    f"between plan runs, after staging has drained")
+            fut_entries = [(k, self._futures.pop(k))
+                           for k in [k for k in self._futures
+                                     if k[1] == slot]]
+            # popped futures no longer count toward capacity via _futures;
+            # hold their slots via _in_transit until the reads settle
+            self._in_transit += len(fut_entries)
+            reclaimed = []
+            for k in [k for k in self._slots if k[1] == slot]:
+                reclaimed.append(self._slots.pop(k))
+                self._use_order.remove(k)
+                self._dirty.discard(k)
+                self.stats.reclaims += 1
+                self.stats.reclaim_bytes += self.page_nbytes
+            for k in [k for k in self._spilled if k[1] == slot]:
+                self._spilled.discard(k)   # SSD bytes orphaned, unreadable
+            self._free.append(slot)
+        for buf in reclaimed:
+            buf.release()
+        for _k, (buf, future) in fut_entries:
+            try:
+                future.result()   # the async read targets buf: settle first
+            except BaseException:
+                pass              # data is being discarded
+            finally:
+                buf.release()
+        with self._lock:
+            self._in_transit -= len(fut_entries)
+            self.stats.reclaims += len(fut_entries)
+            self.stats.reclaim_bytes += len(fut_entries) * self.page_nbytes
+            self._lock.notify_all()   # freed capacity: wake slot waiters
 
     @property
     def resident_pages(self) -> list[tuple]:
-        """Sorted (unit, page) keys currently host-resident."""
+        """Sorted keys currently host-resident: ``(unit, page)`` for a
+        joint cache (the PR-5 shape), ``(unit, slot, page)`` otherwise."""
         with self._lock:
-            return sorted(self._slots)
+            keys = sorted(self._slots)
+        if self.slots == 1:
+            return [(u, p) for (u, _s, p) in keys]
+        return keys
 
     def close(self) -> None:
         """Wait out in-flight refills and return every slot.  Idempotent;

@@ -87,10 +87,14 @@ def make_offloadable_lm(cfg: ModelConfig, key,
             h, _aux = apply_ffn(cfg, kinds[1], params, h + mix)
             return h, k, v
 
-        def block_step(params, h, k_cache, v_cache, cache_len):
+        def block_step(params, h, k_cache, v_cache, cache_len, *,
+                       chunk=None):
+            # ``chunk`` (static under jit) keeps the attention reductions
+            # extent-invariant — see gqa_step; the session passes its
+            # decode time-bucket size
             hn = rms_norm(h, params["norm_mixer"], cfg.rms_eps)
             mix, k_new, v_new = gqa_step(params, hn, cfg, k_cache, v_cache,
-                                         cache_len)
+                                         cache_len, chunk=chunk)
             h, _aux = apply_ffn(cfg, kinds[1], params, h + mix)
             return h, k_new, v_new
 

@@ -123,7 +123,8 @@ class _ExecState:
                  "loss", "logits", "live", "live_slots", "h2d", "grads",
                  "checkpoints", "overflowed", "apply", "optim_begun",
                  "kv", "kv_live", "kv_append", "kv_time", "cache_len",
-                 "last_pos", "kv_stage", "kv_slots", "stage_seq")
+                 "last_pos", "kv_stage", "kv_slots", "kv_write_slots",
+                 "stage_seq")
 
     def __init__(self, tokens=None, labels=None, scale=1.0):
         self.tokens = None if tokens is None else jnp.asarray(tokens)
@@ -146,8 +147,14 @@ class _ExecState:
         self.kv_stage: dict[str, Future] = {}  # unit -> staged-KV future
         self.kv_slots: dict[str, tuple] = {}   # unit -> kv device-slot tokens
         self.kv_time = 0          # device-cache bucket extent this run
-        self.cache_len = None     # traced: tokens already cached
-        self.last_pos = None      # traced: last prompt index (prefill head)
+        self.cache_len = None     # traced: tokens already cached (scalar on
+        #                           the joint path, (B,) per-slot vector on
+        #                           the continuous-batching path)
+        self.last_pos = None      # traced: last prompt index (prefill head;
+        #                           scalar or (B,) like cache_len)
+        self.kv_write_slots = None  # prefill-scatter target slots (runtime
+        #                             state, NOT plan state: plans stay
+        #                             static across join/retire churn)
         # (kind, unit) per staging-worker submission, in FIFO order —
         # "w" weight stages and "kv" window stages interleave on ONE
         # worker, so the abort path must drain them in this exact order
@@ -204,10 +211,14 @@ class OffloadSession:
             # Page-granular census: one kv-class slot per page of
             # ``spec.page_size`` tokens; the budget is the paged cache's
             # host-residency limit (paper §IV-B sizing, extended to decode
-            # state at block-table granularity).
-            self._kv_resident = decode.page_budget(len(self._kv_units))
+            # state at block-table granularity).  Pages are per batch slot
+            # (single-row) so continuous batching can reclaim one request's
+            # pages without touching its neighbours'; the spec's
+            # per-request budget scales by batch to keep the same bytes.
+            self._kv_resident = (decode.page_budget(len(self._kv_units))
+                                 * decode.batch)
             self._kv_page_shape = tuple(
-                model.kv_shape(decode.batch, decode.page_size))
+                model.kv_shape(1, decode.page_size))
             kv_nbytes = int(policy.adam.compute_np_dtype.itemsize * np.prod(
                 self._kv_page_shape, dtype=np.int64))
             census = census.with_kv(kv_nbytes, self._kv_resident)
@@ -354,7 +365,12 @@ class OffloadSession:
         self._jit_block_prefill = (jax.jit(model.block_prefill)
                                    if getattr(model, "block_prefill", None)
                                    else None)
-        self._jit_block_step = (jax.jit(model.block_step)
+        # chunk is static: it selects the reduction grid that makes a
+        # row's attention bitwise invariant to the shared device extent
+        # (without it, a co-lane crossing a bucket boundary regroups the
+        # softmax/PV reductions and can flip a near-tie greedy argmax)
+        self._jit_block_step = (jax.jit(model.block_step,
+                                        static_argnames=("chunk",))
                                 if getattr(model, "block_step", None)
                                 else None)
         self._jit_head_last = None
@@ -363,7 +379,14 @@ class OffloadSession:
             def _head_last(params, h, pos):
                 # pos is traced: slicing the last valid prompt position out
                 # of the padded bucket costs no retrace per prompt length.
-                h_last = jax.lax.dynamic_slice_in_dim(h, pos, 1, axis=1)
+                # A scalar pos selects one position for the whole batch
+                # (joint prefill); a (B,) pos selects per row (serving
+                # prefill, where joiners' prompt lengths differ).
+                if pos.ndim == 0:
+                    h_last = jax.lax.dynamic_slice_in_dim(h, pos, 1, axis=1)
+                else:
+                    h_last = jnp.take_along_axis(h, pos[:, None, None],
+                                                 axis=1)
                 return model.head_logits(params, h_last)
             self._jit_head_last = jax.jit(_head_last)
 
@@ -486,11 +509,17 @@ class OffloadSession:
                    self._param_keys(unit_name))
 
     def _h2d_copy(self, host_view):
-        """H2D transfer.  ``copy=True`` is essential: on the CPU backend
-        jax may alias host memory, and the pool slot is reused as soon as
-        it is released (the paper's lifecycle) — an alias would race with
-        async dispatch."""
-        return jnp.array(host_view, copy=True)
+        """H2D transfer.  ``copy=True`` alone is NOT enough: jax dispatches
+        the copy asynchronously, so without the barrier the pool slot can be
+        released, reacquired, and overwritten by the next unit's SSD pread
+        before the bytes were actually read — the caller then computes with
+        another tensor's weights.  ``block_until_ready`` pins the slot's
+        contents until the copy has landed; it blocks the *staging* worker
+        (or, in sync mode, the compute thread that was going to wait
+        anyway), never an overlapped compute."""
+        arr = jnp.array(host_view, copy=True)
+        arr.block_until_ready()
+        return arr
 
     def _submit_h2d(self, unit_name: str, state: _ExecState) -> None:
         """Issue half of the split FetchOp: queue SSD-read-wait + H2D onto
@@ -822,7 +851,8 @@ class OffloadSession:
         elif op.kind == "block_step":
             k_dev, v_dev = state.kv_live.pop(op.unit)
             state.h, k, v = self._jit_block_step(
-                params, state.h, k_dev, v_dev, state.cache_len)
+                params, state.h, k_dev, v_dev, state.cache_len,
+                chunk=self.decode_spec.bucket)
             state.kv_append[op.unit] = (k, v)
         elif op.kind == "block_bwd":
             x = self._restore_checkpoint(state.checkpoints.pop(op.unit))
@@ -865,7 +895,8 @@ class OffloadSession:
         dirty pages onward if the residency budget is exceeded."""
         k, v = state.kv_append.pop(op.unit)
         if op.mode == "prefill":
-            state.kv.write_prefill(op.unit, np.asarray(k), np.asarray(v))
+            state.kv.write_prefill(op.unit, np.asarray(k), np.asarray(v),
+                                   slots=state.kv_write_slots)
         else:
             state.kv.append(op.unit, np.asarray(k), np.asarray(v))
 
@@ -1222,7 +1253,8 @@ class OffloadSession:
             list(self._kv_units), self._kv_page_shape,
             self.decode_spec.max_seq,
             self.policy.adam.compute_np_dtype, self.pool, self.store,
-            resident_limit=self._kv_resident)
+            resident_limit=self._kv_resident,
+            slots=self.decode_spec.batch)
         return self._kv_cache
 
     def _decode_state(self, kv: SpillableKVCache) -> DecodeSpec:
@@ -1232,28 +1264,66 @@ class OffloadSession:
             raise RuntimeError("KV cache is closed")
         return self.decode_spec
 
-    def prefill(self, kv: SpillableKVCache, tokens: np.ndarray) -> np.ndarray:
+    def prefill(self, kv: SpillableKVCache, tokens: np.ndarray, *,
+                slots: list[int] | None = None,
+                lengths: list[int] | None = None) -> np.ndarray:
         """Prompt pass: cache every block's K/V, return the last valid
         position's logits as (batch, vocab).  Prompts are right-padded to
         the spec's time bucket so each prompt-length bucket compiles once.
+
+        Joint path (``slots=None``): every lane carries the same prompt
+        length and the whole cache must be empty.
+
+        Joiner path (continuous batching): ``slots`` names the batch slots
+        being prefilled — freshly :meth:`~SpillableKVCache.join`\\ ed, empty
+        — and ``lengths`` their true per-request prompt lengths (``tokens``
+        rows are right-padded to the longest).  Only those slots' pages are
+        written (prefill-scatter); the other lanes' rows are computed and
+        discarded, so mid-flight requests are untouched and the jitted
+        shapes stay fixed.  Callers should group joiners by prompt
+        *bucket*: a joiner then runs the exact trace a solo prefill of that
+        request would, which is what makes continuously-batched greedy
+        output bit-identical to decoding each request alone.
         """
         spec = self._decode_state(kv)
         tokens = np.asarray(tokens)
         if tokens.ndim != 2 or tokens.shape[0] != spec.batch:
             raise ValueError(f"prompts must be (batch={spec.batch}, time), "
                              f"got {tokens.shape}")
-        if kv.length != 0:
-            raise RuntimeError("prefill on a non-empty KV cache; open a "
-                               "fresh one per generation")
         t0 = tokens.shape[1]
+        if slots is None:
+            if kv.length != 0:
+                raise RuntimeError("prefill on a non-empty KV cache; open a "
+                                   "fresh one per generation")
+            last = jnp.asarray(t0 - 1, jnp.int32)
+        else:
+            if lengths is None or len(lengths) != len(slots):
+                raise ValueError("joiner prefill needs lengths, one per slot")
+            for s, n in zip(slots, lengths):
+                if s not in kv.active or kv.slot_length(s) != 0:
+                    raise RuntimeError(
+                        f"slot {s} is not a freshly joined empty slot")
+                if not 1 <= n <= t0:
+                    raise ValueError(f"prompt length {n} outside [1, {t0}]")
+            # per-row last valid position; non-joiner rows read position 0
+            # (their logits rows are discarded by the caller)
+            pos = np.zeros(spec.batch, np.int32)
+            for s, n in zip(slots, lengths):
+                pos[s] = n - 1
+            last = jnp.asarray(pos)
         s_bucket = spec.bucket_len(t0)
         padded = np.zeros((spec.batch, s_bucket), np.int32)
         padded[:, :t0] = tokens
         state = _ExecState(padded)
         state.kv = kv
-        state.last_pos = jnp.asarray(t0 - 1, jnp.int32)
+        state.kv_write_slots = slots
+        state.last_pos = last
         state = self.execute(self.plan("prefill"), state)
-        kv.set_length(t0)
+        if slots is None:
+            kv.set_length(t0)
+        else:
+            for s, n in zip(slots, lengths):
+                kv.set_slot_length(s, n)
         return np.asarray(state.logits)[:, 0]
 
     def decode_step(self, kv: SpillableKVCache,
@@ -1276,6 +1346,45 @@ class OffloadSession:
         state.kv = kv
         state.kv_time = spec.bucket_len(kv.length)
         state.cache_len = jnp.asarray(kv.length, jnp.int32)
+        state = self.execute(self.plan("decode_cached"), state)
+        kv.advance(1)
+        return np.asarray(state.logits)[:, 0]
+
+    def decode_step_slots(self, kv: SpillableKVCache,
+                          tokens: np.ndarray) -> np.ndarray:
+        """One cached decode step over per-slot lengths (continuous
+        batching): every **active** slot's lane appends its token at that
+        slot's own position; inactive lanes carry token 0 and are masked
+        to self-attention only (``cache_len`` 0), their logits discarded.
+
+        Same ``decode_cached`` plan and jitted stages as
+        :meth:`decode_step` — ``cache_len`` is a traced (B,) vector, so
+        join/retire churn costs no retrace; the device extent is the time
+        bucket covering the *longest* active slot.  Masked-extent
+        invariance of the attention step (tested) keeps each lane's output
+        bit-identical to a solo decode of that request.
+        """
+        spec = self._decode_state(kv)
+        tokens = np.asarray(tokens)
+        if tokens.shape != (spec.batch, 1):
+            raise ValueError(f"step tokens must be (batch={spec.batch}, 1), "
+                             f"got {tokens.shape}")
+        active = sorted(kv.active)
+        if not active:
+            raise RuntimeError("decode_step_slots with no active slots")
+        for s in active:
+            if kv.slot_length(s) < 1:
+                raise RuntimeError(f"decode step before slot {s}'s prefill")
+            if kv.slot_length(s) + 1 > spec.max_seq:
+                raise ValueError(f"slot {s} full at max_seq={spec.max_seq}")
+        state = _ExecState(tokens.astype(np.int32))
+        state.kv = kv
+        state.kv_time = spec.bucket_len(
+            max(kv.slot_length(s) for s in active))
+        lens = np.zeros(spec.batch, np.int32)
+        for s in active:
+            lens[s] = kv.slot_length(s)
+        state.cache_len = jnp.asarray(lens)
         state = self.execute(self.plan("decode_cached"), state)
         kv.advance(1)
         return np.asarray(state.logits)[:, 0]

@@ -176,33 +176,78 @@ def gqa_prefill(params, x, cfg, *, window=None):
     return dense(out.reshape(b, s, -1), params["attn.w_o"]), k, v
 
 
-def gqa_step(params, x, cfg, k_cache, v_cache, cache_len, *, window=None):
+def gqa_step(params, x, cfg, k_cache, v_cache, cache_len, *, window=None,
+             chunk=None):
     """One-token attention against a host-fed cache slice.
 
     x: (B, 1, D); k_cache/v_cache: (B, S_bucket, KH, D) with positions
-    < cache_len valid; cache_len: traced int scalar (no retrace per token).
+    < cache_len valid; cache_len: traced int scalar, or a traced (B,)
+    vector of per-row lengths (continuous batching: each batch slot sits
+    at its own position; a row with length 0 attends only to itself).
     Returns (out, k_new, v_new) — the caller appends the (B, 1, KH, D)
-    slices to the host cache at position cache_len.
+    slices to the host cache at each row's cache_len position.
+
+    ``chunk`` (static) makes the softmax/PV reductions **extent-
+    invariant**: the cache axis is processed in fixed-size chunks on an
+    absolute position grid and the partials combined in a fixed order, so
+    a row's output is bitwise identical no matter how far S_bucket
+    extends past its own length.  Without chunking, XLA regroups the
+    reductions when S_bucket changes and the same row rounds differently
+    at different extents — enough to flip a near-tie greedy argmax, which
+    breaks continuous batching's output-equals-solo-decode contract
+    whenever a co-lane pushes the shared extent across a bucket boundary.
+    Masked positions score ``NEG_INF`` and contribute exactly 0.0 to
+    every partial, so a fully-masked chunk is a bitwise no-op; callers
+    must keep ``chunk`` constant and a divisor of every extent step (the
+    serving session passes its time-bucket size).  ``None`` keeps the
+    whole axis as one chunk.
     """
     b, one, _ = x.shape
-    positions = jnp.full((b, 1), cache_len, dtype=jnp.int32)
+    cl = jnp.asarray(cache_len, dtype=jnp.int32)
+    cl_col = cl.reshape((-1, 1))     # scalar -> (1,1); per-row -> (B,1)
+    positions = jnp.broadcast_to(cl_col, (b, 1))
     q, k_new, v_new = gqa_project_qkv(params, x, cfg, positions)
     n_rep = cfg.n_heads // cfg.n_kv_heads
-    kk = _repeat_kv(jnp.concatenate([k_cache, k_new], axis=1), n_rep)
-    vv = _repeat_kv(jnp.concatenate([v_cache, v_new], axis=1), n_rep)
-    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kk,
-                        preferred_element_type=jnp.float32)
-    scores = scores / math.sqrt(cfg.head_dim)
     s_bucket = k_cache.shape[1]
-    idx = jnp.arange(s_bucket + 1)
-    pos = jnp.where(idx == s_bucket, cache_len, idx)  # new token's position
-    valid = (idx < cache_len) | (idx == s_bucket)
+    c = s_bucket if chunk is None else int(chunk)
     w = cfg.sliding_window if window is None else window
-    if w:
-        valid = valid & (pos > cache_len - w)
-    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
-    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv).astype(x.dtype)
+    scale = math.sqrt(cfg.head_dim)
+
+    # per-chunk masked scores, fixed (B, H, 1, <=c) shapes on the absolute
+    # position grid [0, c), [c, 2c), ... — identical at every extent
+    score_chunks, v_chunks = [], []
+    for lo in range(0, s_bucket, c):
+        hi = min(lo + c, s_bucket)
+        kk_c = _repeat_kv(k_cache[:, lo:hi], n_rep)
+        sc = jnp.einsum("bqhd,bkhd->bhqk", q, kk_c,
+                        preferred_element_type=jnp.float32) / scale
+        idx = jnp.arange(lo, hi)[None, :]
+        valid = idx < cl_col                          # (1 or B, hi-lo)
+        if w:
+            valid = valid & (idx > cl_col - w)
+        score_chunks.append(
+            jnp.where(valid[:, None, None, :], sc, NEG_INF))
+        v_chunks.append(_repeat_kv(v_cache[:, lo:hi], n_rep))
+    # the new token attends to itself at position cache_len (always in
+    # window): its score anchors the max, so every row's m is finite
+    s_new = (jnp.einsum("bqhd,bkhd->bhqk", q, _repeat_kv(k_new, n_rep),
+                        preferred_element_type=jnp.float32) / scale)
+
+    # two-pass softmax with fixed combine order: max, then denominator —
+    # a fully-masked chunk adds exp(NEG_INF - m) == 0.0 exactly
+    m = s_new
+    for sc in score_chunks:
+        m = jnp.maximum(m, jnp.max(sc, axis=-1, keepdims=True))
+    denom = jnp.exp(s_new - m)
+    for sc in score_chunks:
+        denom = denom + jnp.sum(jnp.exp(sc - m), axis=-1, keepdims=True)
+
+    out = (jnp.exp(s_new - m) / denom).astype(x.dtype) * \
+        _repeat_kv(v_new, n_rep).transpose(0, 2, 1, 3)    # (B,H,1,D)
+    for sc, vv_c in zip(score_chunks, v_chunks):
+        p_c = (jnp.exp(sc - m) / denom).astype(x.dtype)
+        out = out + jnp.einsum("bhqk,bkhd->bhqd", p_c, vv_c)
+    out = out.transpose(0, 2, 1, 3).astype(x.dtype)       # (B,1,H,D)
     out = dense(out.reshape(b, 1, -1), params["attn.w_o"])
     return out, k_new, v_new
 

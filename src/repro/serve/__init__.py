@@ -2,5 +2,9 @@ from repro.core.kv_cache import DecodeSpec
 
 from .decode import build_serve_step
 from .offloaded import OffloadedDecoder
+from .request import Request, RequestMetrics, RequestState
+from .scheduler import FifoScheduler, ServingEngine, ServingReport
 
-__all__ = ["build_serve_step", "DecodeSpec", "OffloadedDecoder"]
+__all__ = ["build_serve_step", "DecodeSpec", "OffloadedDecoder",
+           "Request", "RequestMetrics", "RequestState",
+           "FifoScheduler", "ServingEngine", "ServingReport"]

@@ -61,7 +61,10 @@ class OffloadedDecoder:
         self.session = session or OffloadSession(model, policy, mode="serve",
                                                  decode=decode)
         self._owns_session = session is None
-        self.kv_stats: dict | None = None   # last cached generate()'s stats
+        self.kv_stats: dict | None = None   # last cached run's KV stats
+        self._closed = False
+        self._last_fetch: dict | None = None
+        self._last_overlap: dict | None = None
 
     def __enter__(self) -> "OffloadedDecoder":
         return self
@@ -70,8 +73,21 @@ class OffloadedDecoder:
         self.close()
 
     def close(self) -> None:
+        """Idempotent teardown.  Counter snapshots are taken first so
+        :attr:`fetch_stats` / :attr:`kv_overlap_stats` keep answering
+        after the session (and its worker threads) are gone — post-mortem
+        reads see the final numbers instead of raising."""
+        if self._closed:
+            return
+        self._last_fetch = self.session.swapper.stats.snapshot()
+        self._last_overlap = self._overlap_live()
+        self._closed = True
         if self._owns_session:
             self.session.close()
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
 
     @property
     def decode_spec(self) -> DecodeSpec | None:
@@ -91,9 +107,15 @@ class OffloadedDecoder:
             raise ValueError(f"{name} holds negative token ids")
         return np.ascontiguousarray(arr, dtype=np.int32)
 
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError("decoder is closed (stats properties still "
+                               "answer; compute paths do not)")
+
     def step_logits(self, tokens: np.ndarray) -> np.ndarray:
         """Next-token logits for a (batch, time) prompt — one full streamed
         pass (uncached; see :meth:`generate` for the cached loop)."""
+        self._check_open()
         tokens = self._validate_tokens(tokens)
         logits = self.session.decode_logits(tokens)
         return logits[:, -1, :]
@@ -106,6 +128,7 @@ class OffloadedDecoder:
         DecodeSpec; ``use_cache=False`` forces the O(T²) full-prefix path
         (the bench ablation).
         """
+        self._check_open()
         tokens = self._validate_tokens(prompts, name="prompts")
         if tokens.shape[1] < 1:
             raise ValueError("prompts must hold at least one token")
@@ -152,9 +175,19 @@ class OffloadedDecoder:
             tokens = np.concatenate([tokens, nxt[:, None]], axis=1)
         return np.stack(out, axis=1)
 
+    def _overlap_live(self) -> dict:
+        snap = self.session.overlap_snapshot()
+        return {"kv_stage_gets": snap["kv_stage_gets"],
+                "kv_stage_hits": snap["kv_stage_hits"],
+                "kv_stage_wait_s": snap["kv_stage_wait_seconds"]}
+
     @property
     def fetch_stats(self) -> dict:
-        """Swapper counters — how well decode hides SSD latency."""
+        """Swapper counters — how well decode hides SSD latency.  After
+        :meth:`close`, the final pre-teardown snapshot."""
+        if self._closed:
+            assert self._last_fetch is not None
+            return dict(self._last_fetch)
         return self.session.swapper.stats.snapshot()
 
     @property
@@ -164,8 +197,9 @@ class OffloadedDecoder:
         (``kv_stage_hits``/``kv_stage_gets``, staged under the previous
         block's compute) and how long it blocked when it had not
         (``kv_stage_wait_s``).  All zero under ``overlap="sync"``, where
-        the gather + H2D run inline on the compute thread."""
-        snap = self.session.overlap_snapshot()
-        return {"kv_stage_gets": snap["kv_stage_gets"],
-                "kv_stage_hits": snap["kv_stage_hits"],
-                "kv_stage_wait_s": snap["kv_stage_wait_seconds"]}
+        the gather + H2D run inline on the compute thread.  After
+        :meth:`close`, the final pre-teardown snapshot."""
+        if self._closed:
+            assert self._last_overlap is not None
+            return dict(self._last_overlap)
+        return self._overlap_live()

@@ -345,6 +345,23 @@ def test_kv_gather_zero_pads_unmaterialized_pages(tmp_store_root):
     kv.close()
 
 
+def test_h2d_copy_survives_source_buffer_reuse(tmp_store_root):
+    """The H2D materialization barrier: a pool slot is reacquired (and
+    overwritten by the next unit's SSD pread) the moment it is released,
+    so ``_h2d_copy`` must have fully read the host view *before it
+    returns* — ``copy=True`` alone dispatches asynchronously.  Without the
+    barrier, decode computes with another tensor's weights (caught live as
+    nondeterministic logits at bench scale)."""
+    with OffloadSession(_model(), memascend_policy(tmp_store_root, lr=1e-3),
+                        mode="serve") as s:
+        src = np.arange(4096, dtype=np.float32)
+        view = src[256:2304]                 # a slot-interior view, as used
+        dev = s._h2d_copy(view)
+        expect = view.copy()
+        view[:] = -1.0                       # slot recycled: pread lands
+        np.testing.assert_array_equal(np.asarray(dev), expect)
+
+
 # -- pool integration ----------------------------------------------------------
 
 def test_session_census_reserves_kv_slots(tmp_store_root):
@@ -352,9 +369,10 @@ def test_session_census_reserves_kv_slots(tmp_store_root):
     with OffloadSession(_model(), memascend_policy(tmp_store_root, lr=1e-3),
                         mode="serve", decode=spec) as s:
         stats = s.pool.stats()
-        # page-granular: 2 layer-equivalents x (16/8 =) 2 pages per seq
-        assert stats["slots"][KV_CLASS] == 4
-        expected = 2 * 2 * 8 * CFG.n_kv_heads * CFG.head_dim * 2  # bf16 page
+        # page-granular AND per-slot: 2 layer-equivalents x (16/8 =) 2 pages
+        # per seq x batch 2 slots; each page holds one request's rows
+        assert stats["slots"][KV_CLASS] == 8
+        expected = 2 * 1 * 8 * CFG.n_kv_heads * CFG.head_dim * 2  # bf16 page
         assert stats["slot_size"][KV_CLASS] == expected
 
 
@@ -364,8 +382,10 @@ def test_session_census_reserves_explicit_page_budget(tmp_store_root):
     with OffloadSession(_model(), memascend_policy(tmp_store_root, lr=1e-3),
                         mode="serve", decode=spec) as s:
         stats = s.pool.stats()
-        assert stats["slots"][KV_CLASS] == 3
-        expected = 2 * 2 * 4 * CFG.n_kv_heads * CFG.head_dim * 2  # bf16 page
+        # resident_pages caps the per-request budget; the census scales it
+        # by the batch's slot count
+        assert stats["slots"][KV_CLASS] == 3 * 2
+        expected = 2 * 1 * 4 * CFG.n_kv_heads * CFG.head_dim * 2  # bf16 page
         assert stats["slot_size"][KV_CLASS] == expected
 
 
@@ -380,11 +400,11 @@ def test_pool_slots_released_on_mid_generate_failure(tmp_store_root):
     calls = {"n": 0}
     real_step = s._jit_block_step
 
-    def flaky_step(params, h, k, v, cache_len):
+    def flaky_step(params, h, k, v, cache_len, **kw):
         calls["n"] += 1
         if calls["n"] == 4:     # second decode step, mid-stack
             raise RuntimeError("injected step failure")
-        return real_step(params, h, k, v, cache_len)
+        return real_step(params, h, k, v, cache_len, **kw)
 
     s._jit_block_step = flaky_step
     with pytest.raises(RuntimeError, match="injected"):

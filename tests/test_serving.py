@@ -1,0 +1,371 @@
+"""Continuous-batching serving: per-slot request lifecycle over the paged
+KV cache (join / prefill-scatter / per-slot decode / retire-and-reclaim),
+the FIFO scheduler's admission policy, greedy-output equivalence with
+decoding every request alone, and decoder teardown hardening."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import (DecodeSpec, MemoryTracker, SpillableKVCache,
+                        memascend_policy)
+from repro.core.buffer_pool import (AdaptiveBufferPool, PoolCensus,
+                                    ShapeClass)
+from repro.core.model_adapter import make_offloadable_lm
+from repro.core.nvme import FilesystemEngine
+from repro.core.pinned_alloc import AlignmentFreeAllocator
+from repro.serve import (OffloadedDecoder, Request, RequestState,
+                         ServingEngine)
+
+CFG = ModelConfig(name="tiny", family="dense", n_layers=3, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab=256)
+
+
+def _model(seed=0):
+    return make_offloadable_lm(CFG, jax.random.PRNGKey(seed))
+
+
+def _prompt(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(3, CFG.vocab, size=n, dtype=np.int32)
+
+
+class FakeClock:
+    """Deterministic engine clock: advances only via sleep() plus an
+    optional fixed tick per observation (so arrivals can land while the
+    engine is mid-decode without any wall time passing)."""
+
+    def __init__(self, tick=0.0):
+        self.t = 0.0
+        self.tick = tick
+
+    def __call__(self):
+        now = self.t
+        self.t += self.tick
+        return now
+
+    def sleep(self, d):
+        self.t += d
+
+
+def _engine(decoder, tick=0.0):
+    clk = FakeClock(tick)
+    return ServingEngine(decoder, clock=clk, sleep=clk.sleep)
+
+
+# -- per-slot cache lifecycle (no model) --------------------------------------
+
+def _slotted_kv(tmp_store_root, units=("a",), slots=2, resident=3,
+                max_seq=4):
+    """Paged cache with batch slots over a real pool + store: per-slot
+    pages of 2 tokens x 1 row, 4-token capacity (2 pages per slot)."""
+    page_shape = (2, 1, 2, 1, 2)
+    nbytes = int(np.prod(page_shape)) * 4
+    census = PoolCensus((ShapeClass("w", 64, per_block=1),),
+                        inflight_blocks=1).with_kv(nbytes, resident)
+    alloc = AlignmentFreeAllocator(tracker=MemoryTracker(),
+                                   component="pinned", backing="numpy")
+    pool = AdaptiveBufferPool(census, alloc)
+    store = FilesystemEngine(tmp_store_root)
+    kv = SpillableKVCache(list(units), page_shape, max_seq, np.float32,
+                          pool, store, resident_limit=resident, slots=slots)
+    return kv, pool, store
+
+
+def test_join_retire_refcount_balance(tmp_store_root):
+    """N join/write/retire cycles leak nothing: every retired slot's pages
+    come back to the pool as reclaims (no spill writes), the free list
+    refills, and the pool's payload refcount lands back at zero."""
+    kv, pool, _store = _slotted_kv(tmp_store_root, slots=3, resident=7)
+    for s in sorted(kv.active):
+        kv.retire(s)
+    assert kv.free_slots == 3 and not kv.active
+    assert pool.in_use_payload == 0
+    rng = np.random.default_rng(0)
+    for cycle in range(6):
+        s = kv.join()
+        assert s is not None
+        k = rng.standard_normal((3, 4, 1, 2), dtype=np.float32)
+        kv.write_prefill("a", k, k, slots=[s])
+        kv.set_slot_length(s, 4)
+        kv.retire(s)
+        assert kv.free_slots == 3
+    assert kv.stats.reclaims >= 6 * 2          # 2 pages per retired slot
+    assert kv.stats.spills == 0                # reclaim never pays a write
+    assert pool.in_use_payload == 0
+    kv.close()
+    assert pool.in_use_payload == 0
+
+
+def test_retired_slot_pages_never_readable_by_next_request(tmp_store_root):
+    """Retire forgets the slot's spilled SSD keys and drops its resident
+    pages, so a request rejoining the same slot reads zeros — never the
+    previous occupant's K/V, even when its pages reached the store."""
+    kv, pool, store = _slotted_kv(tmp_store_root, slots=2, resident=3)
+    junk = np.full((2, 4, 1, 2), 7.5, np.float32)
+    kv.write_prefill("a", junk, junk)          # 4 pages through 3 slots
+    kv.set_length(4)
+    assert kv.stats.spills >= 1                # slot 0's page hit the store
+    assert any(store.contains(f"kv/a/s00/p{p:04d}") for p in (0, 1))
+    kv.retire(0)
+    s = kv.join()
+    assert s == 0                              # same physical slot
+    kg, vg = kv.gather_window("a", 4)
+    assert (kg[0] == 0).all() and (vg[0] == 0).all()       # not 7.5
+    np.testing.assert_array_equal(kg[1], junk[1])          # slot 1 untouched
+    kv.close()
+    assert pool.in_use_payload == 0
+
+
+def test_retire_rejects_pinned_pages(tmp_store_root):
+    """Retire is a between-plan-runs operation: a pinned page (staging
+    worker mid-copy) must fail loudly, not be yanked."""
+    kv, _pool, _store = _slotted_kv(tmp_store_root)
+    kv.ensure_page("a", 0, slot=0, pin=True)
+    with pytest.raises(RuntimeError, match="pinned"):
+        kv.retire(0)
+    kv.unpin("a", 0, slot=0)
+    kv.retire(0)
+    kv.close()
+
+
+def test_admissible_page_budget_check(tmp_store_root):
+    """A prompt whose page window plus one turnover slot exceeds the
+    residency budget can never stream a gather without self-eviction —
+    admissible() is the scheduler's terminal-refusal predicate."""
+    kv, _pool, _store = _slotted_kv(tmp_store_root, resident=2, max_seq=4)
+    assert kv.admissible(2)                    # 1 page + 1 turnover = 2
+    assert not kv.admissible(3)                # 2 pages + 1 > 2
+    assert not kv.admissible(0) and not kv.admissible(5)   # bounds
+    kv.close()
+
+
+# -- the serving engine over a real offloaded session --------------------------
+
+def _requests(specs):
+    """specs: list of (prompt_len, max_new, arrival[, eos]) tuples."""
+    out = []
+    for i, spec in enumerate(specs):
+        n, max_new, arrival = spec[:3]
+        eos = spec[3] if len(spec) > 3 else None
+        out.append(Request(rid=f"r{i}", prompt=_prompt(n, seed=i),
+                           max_new_tokens=max_new, arrival=arrival,
+                           eos_token=eos))
+    return out
+
+
+def _solo_reference(tmp_store_root, req, batch=2):
+    """Greedy tokens for one request decoded entirely alone, through the
+    uncached full-prefix path (the independently-trusted oracle: PR-5
+    pinned cached == uncached on the joint path)."""
+    with OffloadedDecoder(_model(),
+                          memascend_policy(tmp_store_root, lr=1e-3)) as dec:
+        tokens = np.tile(req.prompt[None, :], (batch, 1))
+        out = dec.generate(tokens, req.max_new_tokens)[0]
+    toks = []
+    for t in out:
+        toks.append(int(t))
+        if req.eos_token is not None and int(t) == req.eos_token:
+            break
+    return toks
+
+
+def test_continuous_matches_solo_greedy_with_ragged_arrivals(tmp_store_root):
+    """The acceptance gate: a ragged-arrival continuous-batched run emits,
+    per request, exactly the greedy tokens that request produces decoded
+    alone — joins, retires, slot reuse, and lane masking included — and a
+    second identically-shaped run retraces nothing."""
+    specs = [(3, 6, 0.0), (6, 4, 0.0), (9, 5, 0.02), (5, 6, 0.05)]
+    spec = DecodeSpec(batch=2, max_seq=32, bucket=8)
+    with OffloadedDecoder(_model(), memascend_policy(tmp_store_root + "c",
+                                                     lr=1e-3),
+                          decode=spec) as dec:
+        report = _engine(dec, tick=0.005).run(_requests(specs))
+        warm = dec.session.decode_compiles()
+        report2 = _engine(dec, tick=0.005).run(_requests(specs))
+        assert dec.session.decode_compiles() == warm   # zero warm retraces
+        assert report.kv_stats["reclaims"] > 0         # retires reclaimed
+    assert [r.state for r in report.requests] == [RequestState.DONE] * 4
+    assert report.occupancy > 0.5
+    for i, r in enumerate(sorted(report.requests, key=lambda r: r.rid)):
+        ref = _solo_reference(tmp_store_root + f"s{i}", r)
+        assert r.output == ref, f"request {r.rid} diverged from solo decode"
+        assert r.metrics.tokens_out == len(ref)
+    for r1, r2 in zip(report.requests, report2.requests):
+        assert r1.output == r2.output                  # runs are deterministic
+
+
+def test_eos_retires_slot_early(tmp_store_root):
+    """An emitted EOS retires the request at that token (EOS kept in the
+    output) and hands the slot to the queue's next request."""
+    spec = DecodeSpec(batch=2, max_seq=32, bucket=8)
+    with OffloadedDecoder(_model(), memascend_policy(tmp_store_root,
+                                                     lr=1e-3),
+                          decode=spec) as dec:
+        probe = _engine(dec).run(_requests([(4, 8, 0.0)]))
+        full = probe.requests[0].output
+        # pick an emitted token at its own first occurrence as the EOS, so
+        # the stop index is well-defined
+        idx = next(i for i, t in enumerate(full) if t not in full[:i])
+        reqs = _requests([(4, 8, 0.0, full[idx]), (5, 3, 0.0), (6, 3, 0.0)])
+        report = _engine(dec).run(reqs)
+    r0 = report.requests[0]
+    assert r0.state is RequestState.DONE
+    assert r0.output == full[:idx + 1]                 # EOS kept, then stop
+    assert all(r.state is RequestState.DONE for r in report.requests)
+
+
+def test_scheduler_refuses_oversized_prompt_terminally(tmp_store_root):
+    """A prompt too long for the page budget is REFUSED (terminal), while
+    admissible requests behind it in the queue are served normally."""
+    spec = DecodeSpec(batch=2, max_seq=16, bucket=4, page_tokens=4,
+                      resident_pages=2)
+    with OffloadedDecoder(_model(), memascend_policy(tmp_store_root,
+                                                     lr=1e-3),
+                          decode=spec) as dec:
+        kv_probe = dec.session.open_kv_cache()
+        assert kv_probe.admissible(12) and not kv_probe.admissible(13)
+        kv_probe.close()
+        reqs = _requests([(14, 4, 0.0), (4, 3, 0.0)])
+        report = _engine(dec).run(reqs)
+    assert report.requests[0].state is RequestState.REFUSED
+    assert report.requests[0].output == []
+    assert report.requests[1].state is RequestState.DONE
+    assert len(report.requests[1].output) == 3
+
+
+def test_static_mode_matches_continuous_tokens(tmp_store_root):
+    """The ablation baseline decodes the same greedy tokens — it only
+    schedules worse (whole batches, no backfill), it is not allowed to
+    change outputs."""
+    specs = [(3, 5, 0.0), (6, 3, 0.0), (4, 4, 0.01)]
+    spec = DecodeSpec(batch=2, max_seq=32, bucket=8)
+    with OffloadedDecoder(_model(), memascend_policy(tmp_store_root,
+                                                     lr=1e-3),
+                          decode=spec) as dec:
+        cont = _engine(dec, tick=0.005).run(_requests(specs))
+        stat = _engine(dec, tick=0.005).run(_requests(specs), mode="static")
+    assert all(r.state is RequestState.DONE for r in stat.requests)
+    for rc, rs in zip(cont.requests, stat.requests):
+        assert rc.output == rs.output
+
+
+def test_gqa_step_bitwise_invariant_to_cache_extent():
+    """The kernel contract continuous batching stands on: a row's decode
+    attention output is BITWISE identical no matter how far the shared
+    device extent stretches past its own length (a co-lane crossing a
+    time-bucket boundary grows the extent for everyone).  The chunked
+    reduction grid makes this exact; without it XLA regroups the softmax
+    and PV reductions per extent shape and the same row rounds
+    differently — one bf16 ulp, enough to flip a near-tie argmax."""
+    import jax.numpy as jnp
+
+    from repro.models.attention import gqa_step
+    from repro.models.transformer import init_layer_params
+
+    chunk, length = 8, 5
+    params = {k: jnp.asarray(v, jnp.bfloat16)
+              for k, v in init_layer_params(jax.random.PRNGKey(1),
+                                            CFG, 0).items()}
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 1, CFG.d_model)), jnp.bfloat16)
+    kh, hd = CFG.n_kv_heads, CFG.d_model // CFG.n_heads
+    valid_k = rng.normal(size=(2, length, kh, hd))
+    valid_v = rng.normal(size=(2, length, kh, hd))
+    outs = []
+    for extent in (chunk, 3 * chunk):
+        # junk past each row's length: huge values, different per extent —
+        # masking must keep them out of the math entirely
+        k = rng.normal(size=(2, extent, kh, hd)) * 50.0
+        v = rng.normal(size=(2, extent, kh, hd)) * 50.0
+        k[:, :length], v[:, :length] = valid_k, valid_v
+        cl = jnp.asarray([length, extent - 1], jnp.int32)
+        out, _k, _v = gqa_step(params, x, CFG, jnp.asarray(k, jnp.bfloat16),
+                               jnp.asarray(v, jnp.bfloat16), cl, chunk=chunk)
+        outs.append(np.asarray(out[0], np.float32))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+def test_fake_clock_arrival_and_queue_metrics(tmp_store_root):
+    """Deterministic clock: a request arriving at t=5 is admitted at
+    exactly t=5 after an idle sleep, with zero queue wait; the first
+    request's TTFT is zero (no queue, instant prefill on the fake clock)."""
+    spec = DecodeSpec(batch=2, max_seq=32, bucket=8)
+    with OffloadedDecoder(_model(), memascend_policy(tmp_store_root,
+                                                     lr=1e-3),
+                          decode=spec) as dec:
+        report = _engine(dec).run(_requests([(4, 2, 0.0), (4, 2, 5.0)]))
+    r0, r1 = report.requests
+    assert r0.metrics.ttft_s == 0.0 and r0.metrics.queue_wait_s == 0.0
+    assert r1.metrics.admitted_at == 5.0
+    assert r1.metrics.queue_wait_s == 0.0
+    assert report.duration_s == 5.0
+    assert report.ttft_percentile(99) == 0.0
+
+
+def test_run_reclaims_pages_on_mid_run_abort(tmp_store_root):
+    """A compute failure mid-run must reclaim every in-flight request's
+    pages (engine closes the cache on the error path) and leave the
+    session serviceable for the next run."""
+    spec = DecodeSpec(batch=2, max_seq=32, bucket=8)
+    dec = OffloadedDecoder(_model(), memascend_policy(tmp_store_root,
+                                                     lr=1e-3), decode=spec)
+    s = dec.session
+    calls = {"n": 0}
+    real_step = s._jit_block_step
+
+    def flaky_step(params, h, k, v, cache_len, **kw):
+        calls["n"] += 1
+        if calls["n"] == 7:                    # mid-decode, requests active
+            raise RuntimeError("injected step failure")
+        return real_step(params, h, k, v, cache_len, **kw)
+
+    s._jit_block_step = flaky_step
+    with pytest.raises(RuntimeError, match="injected"):
+        _engine(dec).run(_requests([(4, 6, 0.0), (5, 6, 0.0)]))
+    assert s.pool.in_use_payload == 0          # weights AND kv pages back
+    assert dec.kv_stats is not None            # abort still snapshots stats
+    s._jit_block_step = real_step
+    report = _engine(dec).run(_requests([(4, 2, 0.0)]))
+    assert report.requests[0].state is RequestState.DONE
+    dec.close()
+
+
+def test_decoder_close_idempotent_stats_survive(tmp_store_root):
+    """Teardown hardening: close() twice is fine, the stats properties
+    answer with the final pre-teardown snapshot instead of raising, and
+    compute entry points refuse cleanly."""
+    spec = DecodeSpec(batch=2, max_seq=16, bucket=8)
+    dec = OffloadedDecoder(_model(), memascend_policy(tmp_store_root,
+                                                     lr=1e-3), decode=spec)
+    prompts = np.tile(_prompt(4)[None, :], (2, 1))
+    dec.generate(prompts, 2)
+    live = dec.fetch_stats
+    dec.close()
+    dec.close()                                # idempotent
+    assert dec.closed
+    assert dec.fetch_stats == live             # snapshot, not a raise
+    assert set(dec.kv_overlap_stats) == {"kv_stage_gets", "kv_stage_hits",
+                                         "kv_stage_wait_s"}
+    with pytest.raises(RuntimeError, match="closed"):
+        dec.generate(prompts, 1)
+    with pytest.raises(RuntimeError, match="closed"):
+        dec.step_logits(prompts)
+
+
+def test_request_and_scheduler_validation():
+    from repro.serve import FifoScheduler
+    with pytest.raises(ValueError, match="non-empty"):
+        Request(rid="a", prompt=np.zeros((0,), np.int32), max_new_tokens=1)
+    with pytest.raises(ValueError, match="non-empty"):
+        Request(rid="a", prompt=np.zeros((2, 2), np.int32), max_new_tokens=1)
+    with pytest.raises(TypeError, match="integer"):
+        Request(rid="a", prompt=np.ones(3, np.float32), max_new_tokens=1)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        Request(rid="a", prompt=np.ones(3, np.int32), max_new_tokens=0)
+    dup = _requests([(3, 1, 0.0)]) + [Request(rid="r0",
+                                              prompt=np.ones(3, np.int32),
+                                              max_new_tokens=1)]
+    with pytest.raises(ValueError, match="duplicate"):
+        FifoScheduler(dup)
