@@ -28,12 +28,19 @@ from repro.configs import PAPER_MODELS
 from repro.core import DecodeSpec, OffloadPolicy
 from repro.core.model_adapter import make_offloadable_lm
 
-from .bench_serving import (BUCKET, CFG, MAX_SEQ, OUT_PATH, serve_metrics,
-                            solo_outputs, timed_run)
+from .bench_serving import (
+    BUCKET,
+    CFG,
+    MAX_SEQ,
+    OUT_PATH,
+    serve_metrics,
+    solo_outputs,
+    timed_run,
+)
 from .common import emit, gib
 from .memory_model import GIB, estimate_peak, max_batch_under
 
-BATCHES = (2, 4)                 # measured widths: 3 requests per slot
+BATCHES = (2, 4)  # measured widths: 3 requests per slot
 LIMIT = 128 * GIB
 
 
@@ -55,13 +62,11 @@ def _measure_width(batch: int) -> dict:
     cont = serve_metrics(cont_report, cont_wall, solo)
     stat = serve_metrics(stat_report, stat_wall, solo)
     if cont["token_mismatches"] or stat["token_mismatches"]:
-        raise AssertionError(
-            f"batch={batch}: batched output diverged from solo decode")
+        raise AssertionError(f"batch={batch}: batched output diverged from solo decode")
     return {
         f"occupancy_continuous_b{batch}": cont["occupancy"],
         f"occupancy_static_b{batch}": stat["occupancy"],
-        f"continuous_speedup_b{batch}":
-            cont["tokens_per_s"] / stat["tokens_per_s"],
+        f"continuous_speedup_b{batch}": cont["tokens_per_s"] / stat["tokens_per_s"],
         f"tokens_per_s_continuous_b{batch}": cont["tokens_per_s"],
         f"tokens_per_s_static_b{batch}": stat["tokens_per_s"],
     }
@@ -75,8 +80,13 @@ def _merge_into_report(metrics: dict, gates: dict) -> None:
         with open(OUT_PATH) as f:
             report = json.load(f)
     else:
-        report = {"bench": "serving", "config": {}, "metrics": {},
-                  "gates": {}, "threshold": 0.2}
+        report = {
+            "bench": "serving",
+            "config": {},
+            "metrics": {},
+            "gates": {},
+            "threshold": 0.2,
+        }
     report["config"]["occupancy_batches"] = list(BATCHES)
     report["metrics"].update(metrics)
     report["gates"].update(gates)
@@ -116,7 +126,10 @@ def run() -> None:
         mem = estimate_peak(cfg, memascend=True, batch=32).total
         bb = max_batch_under(cfg, LIMIT, memascend=False)
         bm = max_batch_under(cfg, LIMIT, memascend=True)
-        emit(f"batch/{name}/max@128GiB", 0.0,
-             f"baseline_max={bb} memascend_max={bm} "
-             f"(batch32: baseline={gib(base):.1f}GiB "
-             f"memascend={gib(mem):.1f}GiB) paper(qwen2.5-7b)=4->32")
+        emit(
+            f"batch/{name}/max@128GiB",
+            0.0,
+            f"baseline_max={bb} memascend_max={bm} "
+            f"(batch32: baseline={gib(base):.1f}GiB "
+            f"memascend={gib(mem):.1f}GiB) paper(qwen2.5-7b)=4->32",
+        )

@@ -62,7 +62,7 @@ CFG = ModelConfig(
 )
 BATCH, MAX_SEQ, BUCKET = 4, 160, 32
 N_REQUESTS = 16
-PROMPT_LEN_RANGE = (6, 32)      # rng.integers bounds (exclusive high)
+PROMPT_LEN_RANGE = (6, 32)  # rng.integers bounds (exclusive high)
 # Serving economics at bench scale: every join costs one full prefill pass
 # (a whole weight-streamed sweep), so continuous batching only wins when
 # decode steps outnumber joins decisively — generations must run long, and
@@ -71,9 +71,10 @@ PROMPT_LEN_RANGE = (6, 32)      # rng.integers bounds (exclusive high)
 # budgets make both modes do nearly the same number of weight-streamed
 # passes and the comparison sinks into 2-CPU wall-clock noise.
 MAX_NEW_RANGE = (16, 96)
-LONG_PROMPT_LEN = 45            # r00: spans two prompt buckets (coverage
-                                # for multi-bucket prefill at bench scale)
-ARRIVAL_MEAN_S = 0.005          # Poisson: arrivals much faster than service
+# r00: spans two prompt buckets (coverage for multi-bucket prefill at
+# bench scale)
+LONG_PROMPT_LEN = 45
+ARRIVAL_MEAN_S = 0.005  # Poisson: arrivals much faster than service
 # The structural continuous-vs-static margin at this scale (~1.15-1.2x) is
 # real but thinner than 2-CPU wall-clock noise on a bad day: one scheduler
 # burst landing inside a single timed window can flip an unpaired sample.
@@ -95,8 +96,7 @@ def make_workload(seed: int = 0, n: int = N_REQUESTS) -> list[Request]:
     return [
         Request(
             rid=f"r{i:02d}",
-            prompt=rng.integers(3, CFG.vocab, size=int(lens[i]),
-                                dtype=np.int32),
+            prompt=rng.integers(3, CFG.vocab, size=int(lens[i]), dtype=np.int32),
             max_new_tokens=int(news[i]),
             arrival=float(arrivals[i]),
         )
@@ -169,15 +169,9 @@ def run() -> None:
     # Everything but wall time is deterministic across trials (same seeded
     # workload, same drive loop); pick the median-throughput continuous
     # trial for the reported absolutes and gate on median paired ratios.
-    speedups = sorted(
-        c["tokens_per_s"] / s["tokens_per_s"] for c, s, _ in trials
-    )
-    ttft_ratios = sorted(
-        s["ttft_p99_s"] / c["ttft_p99_s"] for c, s, _ in trials
-    )
-    cont, stat, _ = sorted(trials, key=lambda t: t[0]["tokens_per_s"])[
-        len(trials) // 2
-    ]
+    speedups = sorted(c["tokens_per_s"] / s["tokens_per_s"] for c, s, _ in trials)
+    ttft_ratios = sorted(s["ttft_p99_s"] / c["ttft_p99_s"] for c, s, _ in trials)
+    cont, stat, _ = sorted(trials, key=lambda t: t[0]["tokens_per_s"])[len(trials) // 2]
 
     # Hard acceptance gates — these are correctness/ordering claims, not
     # perf points, so they fail the bench outright rather than drifting
@@ -243,8 +237,7 @@ def run() -> None:
             "prefills_continuous": cont["prefills"],
             "kv_reclaims_continuous": cont["kv_reclaims"],
             "token_mismatches": sum(
-                c["token_mismatches"] + s["token_mismatches"]
-                for c, s, _ in trials
+                c["token_mismatches"] + s["token_mismatches"] for c, s, _ in trials
             ),
             "retraces_warm_serving": retraces,
             "requests_refused": sum(r for _, _, r in trials),

@@ -1,0 +1,228 @@
+"""Speculative vs plain greedy decoding on the offloaded serve path.
+
+The claim under test is the one that makes speculative decoding worth
+anything on an SSD-offloaded host: the per-step cost is dominated by
+streaming every block's weights through the pinned pool, and that cost is
+flat in the number of query positions — so verifying a K-token draft
+window in one pass prices K tokens at ~one token's weight traffic.  With
+the free self-drafting source (suffix n-gram lookup over the request's
+own context) the accepted tokens are pure savings.
+
+One seeded repetition-friendly workload (tiled prompt pattern + a long
+generation budget, where greedy decode settles into loops the n-gram
+draft predicts well) decoded two ways through identically-configured
+sessions.  The workload is a single request: single-stream latency is
+where speculation pays (the joint ``generate`` path advances all lanes
+in lockstep by the batch-minimum accepted run, so multi-lane acceptance
+is the min across lanes; per-slot independent acceptance is the serving
+engine's job and is covered by its tests).  Modes:
+
+* ``plain`` — the cached prefill-then-step loop (one streamed pass per
+  token), which is also the reference ledger for the identity gate;
+* ``spec``  — draft / verify-K / per-slot rollback rounds
+  (``generate(spec=SpecConfig(...))``).
+
+Acceptance gates (hard failures here, regression-gated in CI):
+
+* bit-identical output tokens — speculation must never change what is
+  emitted, only how fast;
+* tokens/s(spec) > tokens/s(plain) at equal output, judged on the median
+  of ``N_TRIALS`` back-to-back paired runs;
+* zero warm retraces: after one warmup pass per mode, the timed runs must
+  reuse the warmed trace set exactly (the verify window is padded to
+  power-of-two k-buckets precisely so this set stays bounded).
+
+Writes ``BENCH_spec_decode.json`` for ``benchmarks/check_regression.py``
+(committed baseline in ``benchmarks/baselines/spec_decode.json``).
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import DecodeSpec, OffloadPolicy
+from repro.core.model_adapter import make_offloadable_lm
+from repro.serve import OffloadedDecoder, SpecConfig
+
+from .common import emit
+
+CFG = ModelConfig(
+    name="bench-20m",
+    family="dense",
+    n_layers=4,
+    d_model=256,
+    n_heads=8,
+    n_kv_heads=4,
+    d_ff=1024,
+    vocab=8192,
+)
+BATCH, MAX_SEQ, BUCKET = 1, 160, 32
+PROMPT_PATTERN, PROMPT_REPEATS = 6, 4  # tiled prompt: 24 tokens
+NEW_TOKENS = 96
+SPEC_K = 6  # window: pending + up to 5 drafts
+# Paired back-to-back trials, verdict on the median ratio: a scheduler
+# burst on a small CI box must corrupt two of three pairs to flip it
+# (same stance as bench_serving).
+N_TRIALS = 3
+OUT_PATH = "BENCH_spec_decode.json"
+
+
+def make_prompts(seed: int = 0) -> np.ndarray:
+    """Seeded repetition-friendly prompts: each lane tiles its own short
+    random pattern, so the n-gram draft has structure to chew on from the
+    first round and greedy decode tends to settle into predictable loops."""
+    rng = np.random.default_rng(seed)
+    rows = [
+        np.tile(rng.integers(3, 64, PROMPT_PATTERN), PROMPT_REPEATS)
+        for _ in range(BATCH)
+    ]
+    return np.stack(rows).astype(np.int32)
+
+
+def timed_generate(dec, prompts, spec=None):
+    t0 = time.perf_counter()
+    out = dec.generate(prompts, NEW_TOKENS, spec=spec)
+    wall = time.perf_counter() - t0
+    return out, wall
+
+
+def run() -> None:
+    root = tempfile.mkdtemp(prefix="bench_spec_decode_")
+    dspec = DecodeSpec(batch=BATCH, max_seq=MAX_SEQ, bucket=BUCKET)
+    model = make_offloadable_lm(CFG, jax.random.PRNGKey(0))
+    policy = OffloadPolicy.preset("memascend").with_store(root).build()
+    prompts = make_prompts()
+    sc = SpecConfig(k=SPEC_K)
+    trials = []
+    try:
+        with OffloadedDecoder(model, policy, decode=dspec) as dec:
+            # warmup: one pass per mode traces every bucket/extent/k-bucket
+            # the timed runs can reach (the workload is deterministic, so
+            # the timed rounds replay exactly the warmed shapes)
+            ref, _ = timed_generate(dec, prompts)
+            warm_spec, _ = timed_generate(dec, prompts, spec=sc)
+            warm = dec.session.decode_compiles()
+            for _ in range(N_TRIALS):
+                plain_out, plain_wall = timed_generate(dec, prompts)
+                spec_out, spec_wall = timed_generate(dec, prompts, spec=sc)
+                trials.append(
+                    (
+                        plain_wall,
+                        spec_wall,
+                        int(np.array_equal(plain_out, ref)),
+                        int(np.array_equal(spec_out, ref)),
+                    )
+                )
+            retraces = dec.session.decode_compiles() - warm
+            stats = dec.spec_stats
+            rollback_pages = dec.kv_stats["rollback_pages"]
+            rollbacks = dec.kv_stats["rollbacks"]
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+    # Hard acceptance gates: identity and retrace-boundedness are
+    # correctness claims — they fail outright, never drift through the
+    # 20% regression window.
+    if not np.array_equal(warm_spec, ref):
+        raise AssertionError(
+            "speculative decoding changed greedy output in the warmup run"
+        )
+    mismatched = [
+        i for i, (_, _, p_ok, s_ok) in enumerate(trials) if not (p_ok and s_ok)
+    ]
+    if mismatched:
+        raise AssertionError(
+            f"output drifted across repeated runs (trials {mismatched}) — "
+            f"generation must be deterministic for the paired comparison"
+        )
+    if retraces:
+        raise AssertionError(
+            f"{retraces} warm retraces in the timed runs — the k-bucketed "
+            f"verify windows must stay inside the warmed trace set"
+        )
+
+    tokens = BATCH * NEW_TOKENS
+    ratios = sorted(p / s for p, s, _, _ in trials)
+    speedup = ratios[len(ratios) // 2]
+    plain_wall, spec_wall, _, _ = sorted(trials, key=lambda t: t[0] / t[1])[
+        len(trials) // 2
+    ]
+    if speedup <= 1.0:
+        raise AssertionError(
+            f"speculative decoding did not beat plain greedy at equal "
+            f"output: median paired speedup {speedup:.2f}x "
+            f"(samples {[f'{x:.2f}' for x in ratios]})"
+        )
+
+    report = {
+        "bench": "spec_decode",
+        "config": {
+            "model": CFG.name,
+            "n_layers": CFG.n_layers,
+            "batch": BATCH,
+            "max_seq": MAX_SEQ,
+            "bucket": BUCKET,
+            "new_tokens": NEW_TOKENS,
+            "spec_k": SPEC_K,
+            "workload_seed": 0,
+            "n_trials": N_TRIALS,
+        },
+        "metrics": {
+            "tokens_per_s_plain": tokens / plain_wall,
+            "tokens_per_s_spec": tokens / spec_wall,
+            "spec_speedup": speedup,
+            "accepted_per_step": stats.accepted_per_step,
+            "spec_rounds": stats.rounds,
+            "spec_overhead_s": stats.spec_overhead_s,
+            "rollbacks": rollbacks,
+            "rollback_pages": rollback_pages,
+            "token_mismatches": len(mismatched),
+            "retraces_warm_spec": retraces,
+        },
+        # absolute tokens/s is machine-dependent (>20% run-to-run swing
+        # observed on a loaded box, with the paired ratio steady), so it
+        # is reported but not gated; the speedup and the acceptance rate
+        # are measured within one run, so they hold across runner
+        # generations.  The zero-valued counters gate at exactly zero
+        # (check_regression tolerates no increase from a zero baseline).
+        "gates": {
+            "spec_speedup": "higher_is_better",
+            "accepted_per_step": "higher_is_better",
+            "token_mismatches": "lower_is_better",
+            "retraces_warm_spec": "lower_is_better",
+        },
+        "threshold": 0.2,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+    emit(
+        "spec_decode/throughput",
+        1e6 / (tokens / spec_wall),
+        f"spec={tokens / spec_wall:.1f}tok/s "
+        f"plain={tokens / plain_wall:.1f}tok/s "
+        f"speedup={speedup:.2f}x median of {N_TRIALS} paired trials "
+        f"(bit-identical output)",
+    )
+    emit(
+        "spec_decode/acceptance",
+        0.0,
+        f"accepted_per_step={stats.accepted_per_step:.2f} "
+        f"rounds={stats.rounds} drafted={stats.drafted} "
+        f"accepted={stats.accepted} "
+        f"overhead={stats.spec_overhead_s * 1e3:.1f}ms",
+    )
+    emit(
+        "spec_decode/rollback",
+        0.0,
+        f"rollbacks={rollbacks} rollback_pages={rollback_pages} "
+        f"retraces_warm={retraces} (k-bucketed verify windows)",
+    )

@@ -20,6 +20,14 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
   bench_serving          (ours) continuous vs static batching over the
                          paged KV cache (writes BENCH_serving.json for
                          the CI regression gate)
+  bench_spec_decode      (ours) speculative vs plain greedy decoding on
+                         the offloaded serve path (writes
+                         BENCH_spec_decode.json for the CI regression
+                         gate)
+
+Selection args name a bench exactly — either the module's short name
+(``bench_decode``) or that name without the ``bench_`` prefix
+(``decode``).  An arg that matches nothing is an error, not a no-op.
 """
 
 from __future__ import annotations
@@ -33,18 +41,34 @@ def main() -> None:
                    bench_context_scaling, bench_decode,
                    bench_e2e_throughput, bench_io_volume, bench_kernels,
                    bench_moe_pool, bench_nvme, bench_overflow,
-                   bench_peak_memory, bench_pinned_alloc, bench_serving)
+                   bench_peak_memory, bench_pinned_alloc, bench_serving,
+                   bench_spec_decode)
     modules = [
         bench_buffer_pool, bench_pinned_alloc, bench_overflow, bench_nvme,
         bench_peak_memory, bench_context_scaling, bench_moe_pool,
         bench_io_volume, bench_e2e_throughput, bench_kernels,
         bench_decode, bench_serving, bench_batch_scaling,
+        bench_spec_decode,
     ]
+
+    def matches(arg: str, mod) -> bool:
+        short = mod.__name__.rsplit(".", 1)[-1]
+        return arg == short or short == f"bench_{arg}"
+
     only = sys.argv[1:] or None
+    if only:
+        unknown = [a for a in only
+                   if not any(matches(a, m) for m in modules)]
+        if unknown:
+            known = ", ".join(m.__name__.rsplit(".", 1)[-1]
+                              for m in modules)
+            raise SystemExit(
+                f"unknown benchmark(s): {unknown}; available: {known}"
+            )
     print("name,us_per_call,derived")
     failed = []
     for mod in modules:
-        if only and not any(o in mod.__name__ for o in only):
+        if only and not any(matches(a, mod) for a in only):
             continue
         try:
             mod.run()

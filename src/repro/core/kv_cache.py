@@ -35,6 +35,7 @@ Thread contract (who may call what)
 -----------------------------------
 
 * **compute/executor thread** — :meth:`~SpillableKVCache.append`,
+  :meth:`~SpillableKVCache.append_window`,
   :meth:`~SpillableKVCache.write_prefill`,
   :meth:`~SpillableKVCache.set_length` / :meth:`~SpillableKVCache.advance`,
   :meth:`~SpillableKVCache.prefetch_window`, and (sync overlap mode only)
@@ -180,12 +181,15 @@ class KVStats:
     wait_seconds: float = 0.0  # time blocked on outstanding refills
     reclaims: int = 0          # pages dropped by slot retirement (no write)
     reclaim_bytes: int = 0     # bytes those reclaimed pages did NOT spill
+    rollbacks: int = 0         # spec-decode rollback/commit calls
+    rollback_pages: int = 0    # pages dropped past a rolled-back tail
 
     def snapshot(self) -> dict:
         return {k: getattr(self, k) for k in (
             "spills", "clean_drops", "refills", "prefetch_refills",
             "prefetch_hits", "sync_refills", "spill_bytes", "refill_bytes",
-            "wait_seconds", "reclaims", "reclaim_bytes")}
+            "wait_seconds", "reclaims", "reclaim_bytes", "rollbacks",
+            "rollback_pages")}
 
 
 class SpillableKVCache:
@@ -589,6 +593,48 @@ class SpillableKVCache:
                 self.unpin(unit, page, slot=s)
         self._maybe_spill_after_use()
 
+    def append_window(self, unit: str, k_new: np.ndarray,
+                      v_new: np.ndarray) -> None:
+        """Write a K-token draft window's K/V (``(B, K, KH, D)``) into
+        each **active** slot's pages starting at that slot's own length,
+        WITHOUT advancing it — the speculative-decode verify write.  The
+        window may span several pages; each touched page is dirtied.  The
+        host inspects the verify logits afterwards and calls
+        :meth:`rollback` with ``length + accepted`` per slot, which both
+        advances the slot over the accepted prefix and drops any page the
+        rejected tail had materialized.  ``K == 1`` is :meth:`append`
+        minus the advance."""
+        kq = int(k_new.shape[1])
+        targets = sorted(self.active)
+        if not targets:
+            raise RuntimeError("append_window with no active slots")
+        if kq < 1:
+            raise ValueError(f"window must be >= 1 token, got {kq}")
+        for s in targets:
+            if self.lengths[s] + kq > self.max_seq:
+                raise ValueError(
+                    f"KV cache full: slot {s} length "
+                    f"{int(self.lengths[s])} + window {kq} exceeds "
+                    f"capacity {self.max_seq}")
+        pt = self.page_tokens
+        for s in targets:
+            kr, vr = self._rows(k_new, s), self._rows(v_new, s)
+            start = int(self.lengths[s])
+            done = 0
+            while done < kq:
+                page, off = divmod(start + done, pt)
+                m = min(pt - off, kq - done)
+                view = self.ensure_page(unit, page, slot=s, pin=True)
+                try:
+                    view[0][:, off:off + m] = kr[:, done:done + m]
+                    view[1][:, off:off + m] = vr[:, done:done + m]
+                    with self._lock:
+                        self._dirty.add((unit, s, page))
+                finally:
+                    self.unpin(unit, page, slot=s)
+                done += m
+        self._maybe_spill_after_use()
+
     def write_prefill(self, unit: str, k: np.ndarray, v: np.ndarray, *,
                       slots: list[int] | None = None) -> None:
         """Write the prefill pass's K/V (``(B, S_bucket, KH, D)``; entries
@@ -743,6 +789,93 @@ class SpillableKVCache:
             self._in_transit -= len(fut_entries)
             self.stats.reclaims += len(fut_entries)
             self.stats.reclaim_bytes += len(fut_entries) * self.page_nbytes
+            self._lock.notify_all()   # freed capacity: wake slot waiters
+
+    def rollback(self, slot: int, length: int) -> None:
+        """Declare ``length`` as one slot's authoritative cached extent
+        and drop every page materialized past its tail.
+
+        Two callers:
+
+        * **spec-decode commit** — after :meth:`append_window` wrote a
+          K-token draft window past ``lengths[slot]``, the host accepts
+          ``c`` tokens and calls ``rollback(slot, old_length + c)``: the
+          accepted prefix is kept (the slot advances over it), the
+          rejected tail's pages are dropped;
+        * **plain truncation** — ``length`` below the current length
+          rewinds the slot (rejected slots in a mixed batch roll back
+          independently while accepted slots advance).
+
+        Pages covering ``[0, length)`` survive; the partial tail page is
+        kept as-is — its bytes past ``length`` are masked by the
+        attention kernel and overwritten by the next append, and for a
+        spilled tail page the SSD copy still holds the only valid prefix
+        bytes.  Fully-dropped pages release their pool slots without a
+        store write, their in-flight refills are settled and discarded,
+        and their SSD keys are **forgotten**: a dirty page that spilled
+        while it still held rejected draft tokens must never resurrect
+        those bytes on a later refill (``rollback_pages`` counts every
+        drop).  Unlike :meth:`retire`, a dropped page pinned by an
+        in-flight staged gather is *waited out*, not an error — the
+        gather unpins in bounded time and reads data that was valid when
+        it was staged (the accept decision only shrinks what later steps
+        may attend to)."""
+        if not 0 <= slot < self.slots:
+            raise ValueError(f"slot {slot} outside [0, {self.slots})")
+        if not 0 <= length <= self.max_seq:
+            raise ValueError(f"length {length} outside [0, {self.max_seq}]")
+        keep = self.pages_for(length)
+
+        def _dropped(keys):
+            return [k for k in keys if k[1] == slot and k[2] >= keep]
+
+        with self._lock:
+            if self.closed:
+                raise RuntimeError("KV cache is closed")
+            if slot in self._free:
+                raise RuntimeError(f"rollback of retired slot {slot}")
+            # wait out (a) dirty spill writes mid-flight on another
+            # thread — they land the key in _spilled, forgotten below —
+            # and (b) staged-gather pins on the dropped range
+            while True:
+                busy = [k for k in _dropped(self._evicting)]
+                busy += [k for k in _dropped(self._slots)
+                         if self._pinned.get(k)]
+                if not busy:
+                    break
+                if not self._lock.wait(timeout=30.0):
+                    raise RuntimeError(
+                        f"rollback({slot}, {length}) waited 30s for busy "
+                        f"pages {busy!r} (mid-eviction or pinned by a "
+                        f"staged gather)")
+            fut_entries = [(k, self._futures.pop(k))
+                           for k in _dropped(self._futures)]
+            # popped futures no longer count toward capacity via
+            # _futures; hold their slots via _in_transit until settled
+            self._in_transit += len(fut_entries)
+            dropped = []
+            for k in _dropped(self._slots):
+                dropped.append(self._slots.pop(k))
+                self._use_order.remove(k)
+                self._dirty.discard(k)
+                self.stats.rollback_pages += 1
+            for k in _dropped(self._spilled):
+                self._spilled.discard(k)   # SSD bytes orphaned, unreadable
+                self.stats.rollback_pages += 1
+            self.stats.rollbacks += 1
+            self.lengths[slot] = length
+        for buf in dropped:
+            buf.release()
+        for _k, (buf, future) in fut_entries:
+            try:
+                future.result()   # the async read targets buf: settle first
+            except BaseException:
+                pass              # data is being discarded
+            finally:
+                buf.release()
+        with self._lock:
+            self._in_transit -= len(fut_entries)
+            self.stats.rollback_pages += len(fut_entries)
             self._lock.notify_all()   # freed capacity: wake slot waiters
 
     @property

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models.attention import gqa_prefill, gqa_step
+from repro.models.attention import gqa_prefill, gqa_step, gqa_verify
 from repro.models.transformer import (apply_ffn, apply_layer, ffn_kind,
                                       init_layer_params, layer_period,
                                       mixer_kind)
@@ -79,7 +79,7 @@ def make_offloadable_lm(cfg: ModelConfig, key,
     # and stay on the uncached full-prefix path for now.  The FFN half is
     # the SAME apply_ffn the train/uncached paths run, so cached decode
     # cannot drift numerically.
-    block_prefill = block_step = kv_shape = None
+    block_prefill = block_step = block_verify = kv_shape = None
     if kinds[0] == "attn":
         def block_prefill(params, h):
             hn = rms_norm(h, params["norm_mixer"], cfg.rms_eps)
@@ -98,6 +98,17 @@ def make_offloadable_lm(cfg: ModelConfig, key,
             h, _aux = apply_ffn(cfg, kinds[1], params, h + mix)
             return h, k_new, v_new
 
+        def block_verify(params, h, k_cache, v_cache, cache_len, *,
+                         chunk=None):
+            # spec-decode verification: a (B, K) window of draft tokens
+            # stepped in one pass; gqa_verify replays the sequential
+            # step's reduction structure so the logits match bitwise
+            hn = rms_norm(h, params["norm_mixer"], cfg.rms_eps)
+            mix, k_new, v_new = gqa_verify(params, hn, cfg, k_cache,
+                                           v_cache, cache_len, chunk=chunk)
+            h, _aux = apply_ffn(cfg, kinds[1], params, h + mix)
+            return h, k_new, v_new
+
         def kv_shape(batch: int, time: int) -> tuple:
             return (2, batch, time, cfg.n_kv_heads, cfg.head_dim)
 
@@ -105,4 +116,5 @@ def make_offloadable_lm(cfg: ModelConfig, key,
                             block_apply=block_apply, head_loss=head_loss,
                             class_of=class_of, head_logits=head_logits,
                             block_prefill=block_prefill,
-                            block_step=block_step, kv_shape=kv_shape)
+                            block_step=block_step,
+                            block_verify=block_verify, kv_shape=kv_shape)

@@ -90,6 +90,10 @@ class OffloadableModel:
       block_step(params, h, k_cache, v_cache, cache_len)
                                                -> h, k_new, v_new (optional;
                                                   cached decode step)
+      block_verify(params, h, k_cache, v_cache, cache_len)
+                                               -> h, k_new, v_new (optional;
+                                                  (B, K) draft-window verify
+                                                  step for spec decode)
     ``class_of(param_key)`` maps a parameter to its pool shape class;
     ``kv_shape(batch, time)`` is one block's host KV-slot shape (leading
     axis 2 packs K and V) for sessions built with a DecodeSpec.
@@ -103,6 +107,7 @@ class OffloadableModel:
     head_logits: Callable | None = None
     block_prefill: Callable | None = None
     block_step: Callable | None = None
+    block_verify: Callable | None = None
     kv_shape: Callable[[int, int], tuple] | None = None
 
     def census(self, inflight_blocks: int = 2,

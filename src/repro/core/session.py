@@ -92,7 +92,8 @@ from .stream_plan import (ComputeOp, FetchOp, GradWriteOp, KVReadOp,
                           KVWriteOp, OptimStepOp, OverflowCheckOp,
                           ReleaseOp, StreamPlan,
                           compile_decode, compile_decode_cached,
-                          compile_eval, compile_prefill, compile_train)
+                          compile_decode_verify, compile_eval,
+                          compile_prefill, compile_train)
 from .swapper import ParameterSwapper
 
 COMPUTE_SUFFIX = OffloadedAdam.COMPUTE
@@ -114,6 +115,21 @@ def jit_cache_size(fn) -> int:
             "_cache_size method); update repro.core.session.jit_cache_size "
             "for its replacement")
     return int(probe())
+
+
+def verify_bucket(n: int) -> int:
+    """Speculative-verify window K bucketed to the next power of two.
+
+    The verify plan's jitted stages are shape-polymorphic over the window
+    width K, so K is time-bucketed like every other decode shape: padding
+    a draft of ``n`` real tokens to the covering power of two keeps the
+    warm trace set bounded by ``{1, 2, 4, ...} × extent buckets`` no
+    matter how ragged the drafts run.  Padding token K/V is appended and
+    then rolled back with the rejected tail (the accept prefix can never
+    reach into the padding — a draft's real length bounds it)."""
+    if n < 1:
+        raise ValueError(f"verify window must be >= 1 token, got {n}")
+    return 1 << (n - 1).bit_length()
 
 
 class _ExecState:
@@ -373,6 +389,10 @@ class OffloadSession:
                                         static_argnames=("chunk",))
                                 if getattr(model, "block_step", None)
                                 else None)
+        self._jit_block_verify = (jax.jit(model.block_verify,
+                                          static_argnames=("chunk",))
+                                  if getattr(model, "block_verify", None)
+                                  else None)
         self._jit_head_last = None
         if self._jit_head_logits is not None and \
                 self._jit_block_prefill is not None:
@@ -468,12 +488,13 @@ class OffloadSession:
 
     def plan(self, name: str) -> StreamPlan:
         """The session's compiled plan for ``name``
-        (train/eval/decode/prefill/decode_cached)."""
+        (train/eval/decode/prefill/decode_cached/decode_verify)."""
         if name not in self._plans:
             compiler = {"train": compile_train, "eval": compile_eval,
                         "decode": compile_decode,
                         "prefill": compile_prefill,
-                        "decode_cached": compile_decode_cached}[name]
+                        "decode_cached": compile_decode_cached,
+                        "decode_verify": compile_decode_verify}[name]
             self._plans[name] = compiler(self.model)
         return self._plans[name]
 
@@ -854,6 +875,12 @@ class OffloadSession:
                 params, state.h, k_dev, v_dev, state.cache_len,
                 chunk=self.decode_spec.bucket)
             state.kv_append[op.unit] = (k, v)
+        elif op.kind == "block_verify":
+            k_dev, v_dev = state.kv_live.pop(op.unit)
+            state.h, k, v = self._jit_block_verify(
+                params, state.h, k_dev, v_dev, state.cache_len,
+                chunk=self.decode_spec.bucket)
+            state.kv_append[op.unit] = (k, v)
         elif op.kind == "block_bwd":
             x = self._restore_checkpoint(state.checkpoints.pop(op.unit))
             state.grads[op.unit], state.dh = self._jit_block_bwd(
@@ -890,13 +917,18 @@ class OffloadSession:
 
     def _write_kv(self, op: KVWriteOp, state: _ExecState) -> None:
         """Land this unit's new K/V in its host pages (D2H): one token
-        appended to the tail page (``step``) or the whole padded prompt
-        window scattered across pages (``prefill``); the cache spills
-        dirty pages onward if the residency budget is exceeded."""
+        appended to the tail page (``step``), a K-token draft window
+        appended past each slot's length (``verify`` — lengths advance
+        only when the host commits the accepted prefix), or the whole
+        padded prompt window scattered across pages (``prefill``); the
+        cache spills dirty pages onward if the residency budget is
+        exceeded."""
         k, v = state.kv_append.pop(op.unit)
         if op.mode == "prefill":
             state.kv.write_prefill(op.unit, np.asarray(k), np.asarray(v),
                                    slots=state.kv_write_slots)
+        elif op.mode == "verify":
+            state.kv.append_window(op.unit, np.asarray(k), np.asarray(v))
         else:
             state.kv.append(op.unit, np.asarray(k), np.asarray(v))
 
@@ -1389,6 +1421,80 @@ class OffloadSession:
         kv.advance(1)
         return np.asarray(state.logits)[:, 0]
 
+    def verify_step(self, kv: SpillableKVCache,
+                    tokens: np.ndarray) -> np.ndarray:
+        """Speculative-decode verify: step a ``(batch, n)`` draft window in
+        ONE streamed pass over the weights and return all ``n`` positions'
+        next-token logits as ``(batch, n, vocab)``.  Position ``j``'s row
+        is bitwise what :meth:`decode_step` would have produced after the
+        first ``j`` draft tokens were appended — the host compares each
+        draft token against the previous position's argmax, commits the
+        accepted prefix and rolls the cache back over the rejected tail
+        (:meth:`~SpillableKVCache.rollback`).  The window is padded to
+        :func:`verify_bucket` so warm traces stay bounded; slot lengths do
+        NOT advance here (rollback's length-set is the commit).
+        """
+        spec = self._decode_state(kv)
+        tokens = np.asarray(tokens)
+        if tokens.ndim != 2 or tokens.shape[0] != spec.batch:
+            raise ValueError(f"verify window must be (batch={spec.batch}, "
+                             f"n), got {tokens.shape}")
+        n = tokens.shape[1]
+        k_pad = verify_bucket(n)
+        if kv.length < 1:
+            raise RuntimeError("verify_step before prefill")
+        if kv.length + k_pad > spec.max_seq:
+            raise ValueError(
+                f"KV cache full: length {kv.length} + padded window "
+                f"{k_pad} exceeds max_seq={spec.max_seq}")
+        padded = np.zeros((spec.batch, k_pad), np.int32)
+        padded[:, :n] = tokens
+        state = _ExecState(padded)
+        state.kv = kv
+        state.kv_time = spec.bucket_len(kv.length + k_pad)
+        state.cache_len = jnp.asarray(kv.length, jnp.int32)
+        state = self.execute(self.plan("decode_verify"), state)
+        return np.asarray(state.logits)[:, :n]
+
+    def verify_step_slots(self, kv: SpillableKVCache,
+                          tokens: np.ndarray) -> np.ndarray:
+        """:meth:`verify_step` over per-slot lengths (continuous
+        batching): each **active** slot's lane steps its own draft window
+        at that slot's position; inactive lanes carry token 0, masked to
+        self-attention only, logits discarded.  Slots accept and roll
+        back independently — one rejected lane costs the others nothing
+        but the shared pass.  Extent is the time bucket covering the
+        longest active slot plus the padded window."""
+        spec = self._decode_state(kv)
+        tokens = np.asarray(tokens)
+        if tokens.ndim != 2 or tokens.shape[0] != spec.batch:
+            raise ValueError(f"verify window must be (batch={spec.batch}, "
+                             f"n), got {tokens.shape}")
+        n = tokens.shape[1]
+        k_pad = verify_bucket(n)
+        active = sorted(kv.active)
+        if not active:
+            raise RuntimeError("verify_step_slots with no active slots")
+        for s in active:
+            if kv.slot_length(s) < 1:
+                raise RuntimeError(f"verify step before slot {s}'s prefill")
+            if kv.slot_length(s) + k_pad > spec.max_seq:
+                raise ValueError(
+                    f"KV cache full: slot {s} length {kv.slot_length(s)} + "
+                    f"padded window {k_pad} exceeds max_seq={spec.max_seq}")
+        padded = np.zeros((spec.batch, k_pad), np.int32)
+        padded[:, :n] = tokens
+        state = _ExecState(padded)
+        state.kv = kv
+        state.kv_time = spec.bucket_len(
+            max(kv.slot_length(s) for s in active) + k_pad)
+        lens = np.zeros(spec.batch, np.int32)
+        for s in active:
+            lens[s] = kv.slot_length(s)
+        state.cache_len = jnp.asarray(lens)
+        state = self.execute(self.plan("decode_verify"), state)
+        return np.asarray(state.logits)[:, :n]
+
     def overlap_snapshot(self) -> dict:
         """Point-in-time copy of the overlap-pipeline stall counters
         (:class:`~repro.core.overlap.OverlapStats`), including the staged-
@@ -1404,7 +1510,8 @@ class OffloadSession:
         :func:`jit_cache_size`, the repo's single guarded touch point for
         jax's private trace-count probe."""
         fns = (self._jit_embed, self._jit_head_logits, self._jit_head_last,
-               self._jit_block_prefill, self._jit_block_step)
+               self._jit_block_prefill, self._jit_block_step,
+               self._jit_block_verify)
         return sum(jit_cache_size(f) for f in fns if f is not None)
 
     # -- weights access ------------------------------------------------------

@@ -35,7 +35,13 @@ compiled once per workload from an ``OffloadableModel``:
                          — the cached-decode pair: prompt pass landing
                            every layer's K/V in the spill-able cache, then
                            O(1)-context steps (checkout → fetch → KV read →
-                           attend-with-cache → KV append → release/spill).
+                           attend-with-cache → KV append → release/spill),
+* :func:`compile_decode_verify`
+                         — the speculative-decode verify step: identical
+                           stream structure to ``decode_cached`` but each
+                           block runs ``block_verify`` over a (B, K) draft
+                           window and appends all K tokens' K/V at once
+                           (host accept/rollback happens between plans).
 
 Because the schedule is explicit, the executor (:class:`~repro.core.session.
 OffloadSession`) can *look ahead*: while block *i* computes, the SSD reads
@@ -62,10 +68,16 @@ COMPUTE_KINDS = frozenset({
     "embed_bwd",     # dembed = vjp(embed_apply)(tokens cotangent)
     "block_prefill",  # h, k, v = block_prefill(params, h)   -> kv append
     "block_step",    # h, k, v = block_step(params, h, kc, vc, len)
+    "block_verify",  # h, k, v = block_verify(params, h, kc, vc, len)
+                     #   (B, K) spec-decode draft window; K-token append
 })
 
 _GRAD_KINDS = frozenset({"head_loss_grad", "block_bwd", "embed_bwd"})
-_KV_PRODUCING_KINDS = frozenset({"block_prefill", "block_step"})
+_KV_PRODUCING_KINDS = frozenset({"block_prefill", "block_step",
+                                 "block_verify"})
+# KVWriteOp.mode required for each KV-producing compute kind
+_KV_WRITE_MODES = {"block_prefill": "prefill", "block_step": "step",
+                   "block_verify": "verify"}
 
 
 @dataclass(frozen=True)
@@ -120,7 +132,10 @@ class KVWriteOp:
     dirty pages onward past the residency budget.  ``mode`` is validated
     against the producing compute kind: ``"step"`` appends one token to
     the tail page (``block_step``), ``"prefill"`` scatters the whole
-    padded prompt window across pages (``block_prefill``)."""
+    padded prompt window across pages (``block_prefill``), ``"verify"``
+    appends a whole K-token draft window past each slot's length without
+    advancing it (``block_verify`` — the host commits or rolls the
+    window back after the accept decision)."""
 
     unit: str
     mode: str = "step"
@@ -197,11 +212,12 @@ class StreamPlan:
         * ``block_bwd`` consumes a checkpoint a prior ``save_input`` op
           saved for its unit, and every saved checkpoint is consumed
           (host checkpoint memory is returned),
-        * ``block_step`` consumes a prior KVReadOp for its unit, every
-          KVReadOp is consumed, and every KV-producing compute is landed by
-          a KVWriteOp whose ``mode`` matches the producing kind (one-token
-          append vs whole-window prefill scatter — device K/V is never
-          silently dropped, nor landed at the wrong page granularity),
+        * ``block_step`` / ``block_verify`` consume a prior KVReadOp for
+          their unit, every KVReadOp is consumed, and every KV-producing
+          compute is landed by a KVWriteOp whose ``mode`` matches the
+          producing kind (one-token append vs draft-window append vs
+          whole-window prefill scatter — device K/V is never silently
+          dropped, nor landed at the wrong page granularity),
         * at most one OverflowCheckOp, after every GradWriteOp (it is the
           barrier that makes the flat buffer whole); when it names
           ``regions`` they must cover every grad-written unit exactly
@@ -247,9 +263,9 @@ class StreamPlan:
                     saved_inputs.discard(op.unit)
                 if op.kind in _GRAD_KINDS:
                     pending_grads.add(op.unit)
-                if op.kind == "block_step":
+                if op.kind in ("block_step", "block_verify"):
                     if op.unit not in kv_loaded:
-                        raise PlanError(f"{where}: block_step for {op.unit!r}"
+                        raise PlanError(f"{where}: {op.kind} for {op.unit!r}"
                                         f" with no KV read")
                     kv_loaded.discard(op.unit)
                 if op.kind in _KV_PRODUCING_KINDS:
@@ -267,16 +283,17 @@ class StreamPlan:
                 if kind is None:
                     raise PlanError(f"{where}: KV write for {op.unit!r} "
                                     f"with no K/V produced")
-                if op.mode not in ("step", "prefill"):
+                if op.mode not in ("step", "prefill", "verify"):
                     raise PlanError(f"{where}: unknown KV write mode "
                                     f"{op.mode!r}")
-                expected = "prefill" if kind == "block_prefill" else "step"
+                expected = _KV_WRITE_MODES[kind]
                 if op.mode != expected:
                     raise PlanError(
                         f"{where}: KV write mode {op.mode!r} for "
                         f"{op.unit!r} does not match its producing kind "
                         f"{kind!r} (expected {expected!r}: a step appends "
-                        f"one token, a prefill scatters the whole window)")
+                        f"one token, a verify appends the draft window, "
+                        f"a prefill scatters the whole prompt window)")
             elif isinstance(op, GradWriteOp):
                 if op.unit not in pending_grads:
                     raise PlanError(f"{where}: grad write for {op.unit!r} "
@@ -457,10 +474,36 @@ def compile_decode_cached(model) -> StreamPlan:
     return StreamPlan("decode_cached", tuple(ops))
 
 
+def compile_decode_verify(model) -> StreamPlan:
+    """One speculative-decode verify step: same stream structure as
+    :func:`compile_decode_cached`, but each block runs ``block_verify``
+    over a (batch, K) window of draft tokens and its KVWriteOp appends
+    all K tokens' K/V past the slot lengths *without advancing them* —
+    the host inspects the verify logits afterwards, then commits the
+    accepted prefix (advance + drop the rejected tail's pages) via
+    ``SpillableKVCache.rollback``.  K is time-bucketed by the session, so
+    the per-(K, extent) trace set stays bounded."""
+    _require_cached_applies(model)
+    if getattr(model, "block_verify", None) is None:
+        raise PlanError(
+            "model has no block_verify apply; spec-decode verify plans "
+            "need one (see model_adapter.make_offloadable_lm — "
+            "attention-mixer families only)")
+    embed, blocks, head = _unit_names(model)
+    ops: list[Op] = [FetchOp(embed), ComputeOp(embed, "embed"),
+                     ReleaseOp(embed)]
+    for b in blocks:
+        ops += [FetchOp(b), KVReadOp(b), ComputeOp(b, "block_verify"),
+                KVWriteOp(b, "verify"), ReleaseOp(b)]
+    ops += [FetchOp(head), ComputeOp(head, "head_logits"), ReleaseOp(head)]
+    return StreamPlan("decode_verify", tuple(ops))
+
+
 PLAN_COMPILERS = {
     "train": compile_train,
     "eval": compile_eval,
     "decode": compile_decode,
     "prefill": compile_prefill,
     "decode_cached": compile_decode_cached,
+    "decode_verify": compile_decode_verify,
 }

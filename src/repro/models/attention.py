@@ -252,6 +252,102 @@ def gqa_step(params, x, cfg, k_cache, v_cache, cache_len, *, window=None,
     return out, k_new, v_new
 
 
+def gqa_verify(params, x, cfg, k_cache, v_cache, cache_len, *, window=None,
+               chunk=None):
+    """k-query attention for speculative-decode verification.
+
+    x: (B, K, D) — a window of K draft tokens per row, query j sitting at
+    absolute position ``cache_len + j``; k_cache/v_cache: (B, S_bucket,
+    KH, D) with positions < cache_len valid (same host-fed slice
+    ``gqa_step`` reads — the window's K/V have NOT been appended yet);
+    cache_len: traced int scalar or (B,) vector.  Returns (out, k_new,
+    v_new) with k_new/v_new shaped (B, K, KH, D) for the caller to append.
+
+    The contract is stronger than "mathematically causal": position j's
+    output must be **bitwise identical** to what K sequential ``gqa_step``
+    calls would produce (append token 0, step token 1, ...), because
+    greedy spec-decode only equals plain greedy decode if the verify
+    logits reproduce the step logits exactly — a one-ulp difference flips
+    near-tie argmaxes at bf16 (the same failure mode chunking already
+    guards against, see ``gqa_step``).  So the kernel replays the exact
+    reduction structure of the sequential step:
+
+    * the window's k_new/v_new are **merged into the chunk grid at their
+      absolute positions** [cache_len, cache_len+K) — exactly where the
+      sequential appends would have put them — instead of being treated
+      as a separate score block;
+    * query j masks the merged chunks with ``idx < cache_len + j`` (its
+      own prefix; later window positions and cache garbage score
+      NEG_INF and contribute exactly 0.0);
+    * query j's self-attention term anchors the running max first, then
+      chunks combine in the same fixed order as ``gqa_step``.
+
+    With chunk equal to the decode bucket this is extent-invariant like
+    ``gqa_step``, and K=1 degenerates to the sequential step bitwise.
+    """
+    b, kq, _ = x.shape
+    cl = jnp.asarray(cache_len, dtype=jnp.int32)
+    cl_col = cl.reshape((-1, 1))     # scalar -> (1,1); per-row -> (B,1)
+    positions = jnp.broadcast_to(cl_col + jnp.arange(kq)[None, :], (b, kq))
+    q, k_new, v_new = gqa_project_qkv(params, x, cfg, positions)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    s_bucket = k_cache.shape[1]
+    c = s_bucket if chunk is None else int(chunk)
+    w = cfg.sliding_window if window is None else window
+    scale = math.sqrt(cfg.head_dim)
+
+    # scatter the window K/V onto the absolute position grid: position
+    # cache_len + r takes window row r, everything else keeps the cache
+    idx_all = jnp.arange(s_bucket)
+    rel = idx_all[None, :] - cl_col                       # (1 or B, S)
+    in_win = ((rel >= 0) & (rel < kq))
+    gidx = jnp.broadcast_to(jnp.clip(rel, 0, kq - 1),
+                            (b, s_bucket))[:, :, None, None]
+    in_win = jnp.broadcast_to(in_win, (b, s_bucket))[:, :, None, None]
+    merged_k = jnp.where(in_win, jnp.take_along_axis(k_new, gidx, axis=1),
+                         k_cache)
+    merged_v = jnp.where(in_win, jnp.take_along_axis(v_new, gidx, axis=1),
+                         v_cache)
+
+    # per-query valid prefix: query j sees positions < cache_len + j
+    limit = cl_col[:, :, None] + jnp.arange(kq)[None, :, None]  # (1orB,K,1)
+
+    score_chunks, v_chunks = [], []
+    for lo in range(0, s_bucket, c):
+        hi = min(lo + c, s_bucket)
+        kk_c = _repeat_kv(merged_k[:, lo:hi], n_rep)
+        sc = jnp.einsum("bqhd,bkhd->bhqk", q, kk_c,
+                        preferred_element_type=jnp.float32) / scale
+        idx = jnp.arange(lo, hi)[None, None, :]
+        valid = idx < limit                          # (1 or B, K, hi-lo)
+        if w:
+            valid = valid & (idx > limit - w)
+        score_chunks.append(jnp.where(valid[:, None, :, :], sc, NEG_INF))
+        v_chunks.append(_repeat_kv(merged_v[:, lo:hi], n_rep))
+
+    # each query attends to itself at position cache_len + j (always in
+    # window): its score anchors the max, so every row's m is finite
+    s_self = (jnp.einsum("bqhd,bqhd->bhq", q, _repeat_kv(k_new, n_rep),
+                         preferred_element_type=jnp.float32)
+              / scale)[..., None]                    # (B, H, K, 1)
+
+    m = s_self
+    for sc in score_chunks:
+        m = jnp.maximum(m, jnp.max(sc, axis=-1, keepdims=True))
+    denom = jnp.exp(s_self - m)
+    for sc in score_chunks:
+        denom = denom + jnp.sum(jnp.exp(sc - m), axis=-1, keepdims=True)
+
+    out = (jnp.exp(s_self - m) / denom).astype(x.dtype) * \
+        _repeat_kv(v_new, n_rep).transpose(0, 2, 1, 3)   # (B,H,K,D)
+    for sc, vv_c in zip(score_chunks, v_chunks):
+        p_c = (jnp.exp(sc - m) / denom).astype(x.dtype)
+        out = out + jnp.einsum("bhqk,bkhd->bhqd", p_c, vv_c)
+    out = out.transpose(0, 2, 1, 3).astype(x.dtype)      # (B,K,H,D)
+    out = dense(out.reshape(b, kq, -1), params["attn.w_o"])
+    return out, k_new, v_new
+
+
 # ---------------------------------------------------------------------------
 # MLA: DeepSeek-V3 multi-head latent attention
 # ---------------------------------------------------------------------------

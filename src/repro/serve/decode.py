@@ -4,6 +4,16 @@
 one new token against a KV cache / recurrent state of ``seq_len`` context
 (the assigned ``decode_32k`` / ``long_500k`` shapes).  The cache is donated
 — decoding updates it in place, which is what keeps HBM flat at scale.
+
+``build_verify_step`` is the speculative-decoding counterpart: a K-wide
+token window folded through the same per-token decode step *inside one
+XLA program* (``lax.scan``), returning every position's logits so the
+host can accept the longest agreeing draft prefix.  On this
+device-resident path the win is dispatch/launch amortization — K steps,
+one program — unlike the SSD-offloaded verify
+(:meth:`repro.core.session.OffloadSession.verify_step`), where one pass
+prices K tokens at a single streamed weight read.  Scanning the exact
+single-step function keeps the logits chain identical to stepping.
 """
 
 from __future__ import annotations
@@ -19,16 +29,21 @@ from repro.models.registry import ModelImpl
 from repro.configs.base import InputShape
 
 
-def build_serve_step(impl: ModelImpl, mesh, shape: InputShape,
-                     *, cache_dtype=jnp.bfloat16, param_mode: str = "zero3"):
+def build_serve_step(
+    impl: ModelImpl,
+    mesh,
+    shape: InputShape,
+    *,
+    cache_dtype=jnp.bfloat16,
+    param_mode: str = "zero3",
+):
     """Returns (serve_fn, in_shardings, out_shardings, arg_specs).
 
     ``param_mode="tp"`` serves with model-axis-only weight sharding (no
     per-token ZeRO-3 all-gather) — see sharding.param_specs.
     """
     cfg = impl.cfg
-    cache_specs, tokens_spec, len_spec = impl.decode_args_specs(
-        shape, cache_dtype)
+    cache_specs, tokens_spec, len_spec = impl.decode_args_specs(shape, cache_dtype)
 
     def serve(params, cache, tokens, cache_len):
         return impl.decode_fn(params, cache, tokens, cache_len)
@@ -38,13 +53,69 @@ def build_serve_step(impl: ModelImpl, mesh, shape: InputShape,
     cshard = shd.cache_shardings(cfg, cache_specs, mesh)
     dp = shd.batch_axes(mesh)
     b = shape.global_batch
-    tok_spec = P(dp, None) if b % math.prod(
-        mesh.shape[a] for a in dp) == 0 else P(None, None)
+    tok_spec = (
+        P(dp, None)
+        if b % math.prod(mesh.shape[a] for a in dp) == 0
+        else P(None, None)
+    )
     tshard = NamedSharding(mesh, tok_spec)
     scalar = NamedSharding(mesh, P())
-    logits_shard = NamedSharding(mesh, shd.logits_spec(cfg, mesh,
-                                                       shape.global_batch))
+    logits_shard = NamedSharding(mesh, shd.logits_spec(cfg, mesh, shape.global_batch))
     in_shardings = (pshard, cshard, tshard, scalar)
     out_shardings = (logits_shard, cshard)
     arg_specs = (cache_specs, tokens_spec, len_spec)
     return serve, in_shardings, out_shardings, arg_specs
+
+
+def build_verify_step(
+    impl: ModelImpl,
+    mesh,
+    shape: InputShape,
+    *,
+    window: int,
+    cache_dtype=jnp.bfloat16,
+    param_mode: str = "zero3",
+):
+    """Returns (verify_fn, in_shardings, out_shardings, arg_specs).
+
+    ``verify_fn(params, cache, tokens, cache_len) -> (logits, new_cache)``
+    with ``tokens`` of shape ``(batch, window)`` and ``logits``
+    ``(batch, window, vocab)``: position ``j``'s row is exactly what the
+    single-token :func:`build_serve_step` chain would produce after
+    appending the window's first ``j`` tokens.  The host owns
+    accept/reject; on rejection it re-issues from the last accepted
+    position (``cache_len`` gates what later steps may attend to, so
+    stale window K/V past the commit point is overwritten, never read).
+    """
+    if window < 1:
+        raise ValueError(f"verify window must be >= 1, got {window}")
+    cfg = impl.cfg
+    cache_specs, tokens_spec, len_spec = impl.decode_args_specs(shape, cache_dtype)
+
+    def verify(params, cache, tokens, cache_len):
+        def body(carry, tok):
+            cache, pos = carry
+            logits, cache = impl.decode_fn(params, cache, tok[:, None], pos)
+            return (cache, pos + 1), logits[:, 0]
+
+        (cache, _), logits = jax.lax.scan(body, (cache, cache_len), tokens.T)
+        return jnp.moveaxis(logits, 0, 1), cache
+
+    params_shape = jax.eval_shape(impl.init_params, jax.random.PRNGKey(0))
+    pshard = shd.param_shardings(cfg, params_shape, mesh, mode=param_mode)
+    cshard = shd.cache_shardings(cfg, cache_specs, mesh)
+    dp = shd.batch_axes(mesh)
+    b = shape.global_batch
+    tok_spec = (
+        P(dp, None)
+        if b % math.prod(mesh.shape[a] for a in dp) == 0
+        else P(None, None)
+    )
+    tshard = NamedSharding(mesh, tok_spec)
+    scalar = NamedSharding(mesh, P())
+    logits_shard = NamedSharding(mesh, shd.logits_spec(cfg, mesh, shape.global_batch))
+    in_shardings = (pshard, cshard, tshard, scalar)
+    out_shardings = (logits_shard, cshard)
+    window_sds = jax.ShapeDtypeStruct((b, window), tokens_spec.dtype)
+    arg_specs = (cache_specs, window_sds, len_spec)
+    return verify, in_shardings, out_shardings, arg_specs

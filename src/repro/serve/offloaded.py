@@ -30,10 +30,13 @@ in :mod:`repro.serve.decode`; this module is its SSD-offloaded counterpart.
 
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
 from repro.core.kv_cache import DecodeSpec
-from repro.core.session import OffloadSession
+from repro.core.session import OffloadSession, verify_bucket
+from repro.serve.spec import SpecConfig, SpecStats
 
 
 class OffloadedDecoder:
@@ -51,17 +54,26 @@ class OffloadedDecoder:
     rejected rather than silently cast.
     """
 
-    def __init__(self, model, policy, *,
-                 session: OffloadSession | None = None,
-                 decode: DecodeSpec | None = None):
+    def __init__(
+        self,
+        model,
+        policy,
+        *,
+        session: OffloadSession | None = None,
+        decode: DecodeSpec | None = None,
+    ):
         if session is not None and decode is not None:
-            raise ValueError("pass decode= when the decoder owns the "
-                             "session; an existing session already fixed "
-                             "its pool census")
-        self.session = session or OffloadSession(model, policy, mode="serve",
-                                                 decode=decode)
+            raise ValueError(
+                "pass decode= when the decoder owns the "
+                "session; an existing session already fixed "
+                "its pool census"
+            )
+        self.session = session or OffloadSession(
+            model, policy, mode="serve", decode=decode
+        )
         self._owns_session = session is None
-        self.kv_stats: dict | None = None   # last cached run's KV stats
+        self.kv_stats: dict | None = None  # last cached run's KV stats
+        self.spec_stats: SpecStats | None = None  # last spec-decode run's
         self._closed = False
         self._last_fetch: dict | None = None
         self._last_overlap: dict | None = None
@@ -98,19 +110,21 @@ class OffloadedDecoder:
         """Enforce the token contract; returns a contiguous int32 copy."""
         arr = np.asarray(tokens)
         if arr.ndim != 2:
-            raise ValueError(f"{name} must be (batch, time), got shape "
-                             f"{arr.shape}")
+            raise ValueError(f"{name} must be (batch, time), got shape {arr.shape}")
         if not np.issubdtype(arr.dtype, np.integer):
-            raise TypeError(f"{name} must hold integer token ids, got "
-                            f"dtype {arr.dtype}")
+            raise TypeError(
+                f"{name} must hold integer token ids, got dtype {arr.dtype}"
+            )
         if arr.size and int(arr.min()) < 0:
             raise ValueError(f"{name} holds negative token ids")
         return np.ascontiguousarray(arr, dtype=np.int32)
 
     def _check_open(self) -> None:
         if self._closed:
-            raise RuntimeError("decoder is closed (stats properties still "
-                               "answer; compute paths do not)")
+            raise RuntimeError(
+                "decoder is closed (stats properties still "
+                "answer; compute paths do not)"
+            )
 
     def step_logits(self, tokens: np.ndarray) -> np.ndarray:
         """Next-token logits for a (batch, time) prompt — one full streamed
@@ -120,13 +134,23 @@ class OffloadedDecoder:
         logits = self.session.decode_logits(tokens)
         return logits[:, -1, :]
 
-    def generate(self, prompts: np.ndarray, new_tokens: int, *,
-                 use_cache: bool | None = None) -> np.ndarray:
+    def generate(
+        self,
+        prompts: np.ndarray,
+        new_tokens: int,
+        *,
+        use_cache: bool | None = None,
+        spec: SpecConfig | None = None,
+    ) -> np.ndarray:
         """Greedy-decode ``new_tokens`` per request; returns (batch, new).
 
         ``use_cache=None`` picks cached decode whenever the session has a
         DecodeSpec; ``use_cache=False`` forces the O(T²) full-prefix path
-        (the bench ablation).
+        (the bench ablation).  ``spec=SpecConfig(...)`` runs speculative
+        decoding over the cached path — draft windows verified K tokens
+        at a time with per-slot KV rollback; output matches the plain
+        greedy loop (see :mod:`repro.serve.spec`), stats land in
+        :attr:`spec_stats`.
         """
         self._check_open()
         tokens = self._validate_tokens(prompts, name="prompts")
@@ -134,24 +158,35 @@ class OffloadedDecoder:
             raise ValueError("prompts must hold at least one token")
         if new_tokens < 1:
             raise ValueError(f"new_tokens must be >= 1, got {new_tokens}")
-        spec = self.session.decode_spec
-        cached = (spec is not None) if use_cache is None else use_cache
+        dspec = self.session.decode_spec
+        cached = (dspec is not None) if use_cache is None else use_cache
+        if spec is not None and not cached:
+            raise ValueError(
+                "speculative decoding needs the cached path; "
+                "it cannot run with use_cache=False"
+            )
         if not cached:
             return self._generate_uncached(tokens, new_tokens)
-        if spec is None:
+        if dspec is None:
             raise RuntimeError(
                 "use_cache=True needs a session built with "
-                "decode=DecodeSpec(...) so the pool census has KV slots")
+                "decode=DecodeSpec(...) so the pool census has KV slots"
+            )
         batch, t0 = tokens.shape
-        if batch != spec.batch:
-            raise ValueError(f"prompts batch {batch} != DecodeSpec batch "
-                             f"{spec.batch} (jit shapes are fixed)")
-        if t0 + new_tokens > spec.max_seq:
+        if batch != dspec.batch:
+            raise ValueError(
+                f"prompts batch {batch} != DecodeSpec batch "
+                f"{dspec.batch} (jit shapes are fixed)"
+            )
+        if t0 + new_tokens > dspec.max_seq:
             raise ValueError(
                 f"prompt ({t0}) + new_tokens ({new_tokens}) exceeds "
-                f"DecodeSpec max_seq {spec.max_seq}")
+                f"DecodeSpec max_seq {dspec.max_seq}"
+            )
         kv = self.session.open_kv_cache()
         try:
+            if spec is not None:
+                return self._generate_spec(kv, tokens, new_tokens, spec)
             logits = self.session.prefill(kv, tokens)
             out = []
             for i in range(new_tokens):
@@ -164,8 +199,80 @@ class OffloadedDecoder:
             self.kv_stats = kv.stats.snapshot()
             kv.close()
 
-    def _generate_uncached(self, tokens: np.ndarray,
-                           new_tokens: int) -> np.ndarray:
+    def _generate_spec(
+        self, kv, tokens: np.ndarray, new_tokens: int, spec: SpecConfig
+    ) -> np.ndarray:
+        """Speculative greedy loop over the cached path (joint batch).
+
+        Round invariant: the cache holds every emitted token but the
+        last, which rides as the pending head of the next verify window
+        ``[pending, draft...]``.  The verify pass prices the whole window
+        at ~one streamed weight pass; the host commits the longest prefix
+        the sequential argmax chain agrees with (all lanes advance in
+        lockstep by the batch minimum — recomputed tokens are
+        deterministic, so per-lane output is unchanged) and rolls every
+        slot back over the rejected tail.
+        """
+        session = self.session
+        dspec = session.decode_spec
+        stats = SpecStats()
+        try:
+            logits = session.prefill(kv, tokens)
+            batch = tokens.shape[0]
+            t_next = np.argmax(logits, axis=-1).astype(np.int32)
+            out = [t_next.copy()]
+            emitted = 1
+            contexts = [
+                list(map(int, tokens[b])) + [int(t_next[b])] for b in range(batch)
+            ]
+            while emitted < new_tokens:
+                th0 = time.perf_counter()
+                remaining = new_tokens - emitted
+                n_cap = min(spec.k, remaining)
+                drafts = [
+                    spec.draft.propose(np.asarray(contexts[b], np.int32), n_cap - 1)
+                    for b in range(batch)
+                ]
+                n = 1 + max(d.shape[0] for d in drafts)
+                # padded window must still fit the cache capacity
+                while n > 1 and kv.length + verify_bucket(n) > dspec.max_seq:
+                    n -= 1
+                window = np.zeros((batch, n), np.int32)
+                window[:, 0] = t_next
+                for b, d in enumerate(drafts):
+                    m = min(d.shape[0], n - 1)
+                    window[b, 1 : 1 + m] = d[:m]
+                    stats.drafted += m
+                stats.spec_overhead_s += time.perf_counter() - th0
+                vlogits = session.verify_step(kv, window)
+                th1 = time.perf_counter()
+                greedy = np.argmax(vlogits, axis=-1).astype(np.int32)
+                accept = np.zeros(batch, np.int64)
+                for b in range(batch):
+                    j = 0
+                    while j + 1 < n and window[b, j + 1] == greedy[b, j]:
+                        j += 1
+                    accept[b] = j
+                commit = int(min(int(accept.min()) + 1, remaining))
+                for j in range(commit):
+                    out.append(greedy[:, j].copy())
+                base = kv.length
+                for s in sorted(kv.active):
+                    kv.rollback(s, base + commit)
+                t_next = greedy[:, commit - 1].copy()
+                for b in range(batch):
+                    contexts[b].extend(int(x) for x in greedy[b, :commit])
+                emitted += commit
+                stats.rounds += 1
+                stats.lane_rounds += batch
+                stats.committed_tokens += commit * batch
+                stats.accepted += (commit - 1) * batch
+                stats.spec_overhead_s += time.perf_counter() - th1
+            return np.stack(out, axis=1)
+        finally:
+            self.spec_stats = stats
+
+    def _generate_uncached(self, tokens: np.ndarray, new_tokens: int) -> np.ndarray:
         """Full-prefix re-run per token (the PR-1 path; O(T²) ablation)."""
         out = []
         for _ in range(new_tokens):
@@ -177,9 +284,11 @@ class OffloadedDecoder:
 
     def _overlap_live(self) -> dict:
         snap = self.session.overlap_snapshot()
-        return {"kv_stage_gets": snap["kv_stage_gets"],
-                "kv_stage_hits": snap["kv_stage_hits"],
-                "kv_stage_wait_s": snap["kv_stage_wait_seconds"]}
+        return {
+            "kv_stage_gets": snap["kv_stage_gets"],
+            "kv_stage_hits": snap["kv_stage_hits"],
+            "kv_stage_wait_s": snap["kv_stage_wait_seconds"],
+        }
 
     @property
     def fetch_stats(self) -> dict:

@@ -18,10 +18,10 @@ import numpy as np
 
 
 class RequestState(Enum):
-    QUEUED = "queued"      # arrived, waiting for a slot / admission
-    ACTIVE = "active"      # holds a batch slot, prefilled or decoding
-    DONE = "done"          # retired: EOS, length cap, or max_new reached
-    REFUSED = "refused"    # terminal: prompt pages cannot be streamed
+    QUEUED = "queued"  # arrived, waiting for a slot / admission
+    ACTIVE = "active"  # holds a batch slot, prefilled or decoding
+    DONE = "done"  # retired: EOS, length cap, or max_new reached
+    REFUSED = "refused"  # terminal: prompt pages cannot be streamed
 
 
 @dataclass
@@ -85,17 +85,23 @@ class Request:
     def __post_init__(self) -> None:
         arr = np.asarray(self.prompt)
         if arr.ndim != 1 or arr.size < 1:
-            raise ValueError(f"request {self.rid}: prompt must be a "
-                             f"non-empty 1-D token array, got {arr.shape}")
+            raise ValueError(
+                f"request {self.rid}: prompt must be a "
+                f"non-empty 1-D token array, got {arr.shape}"
+            )
         if not np.issubdtype(arr.dtype, np.integer):
-            raise TypeError(f"request {self.rid}: prompt must hold integer "
-                            f"token ids, got {arr.dtype}")
+            raise TypeError(
+                f"request {self.rid}: prompt must hold integer "
+                f"token ids, got {arr.dtype}"
+            )
         if int(arr.min()) < 0:
             raise ValueError(f"request {self.rid}: negative token ids")
         self.prompt = np.ascontiguousarray(arr, dtype=np.int32)
         if self.max_new_tokens < 1:
-            raise ValueError(f"request {self.rid}: max_new_tokens must be "
-                             f">= 1, got {self.max_new_tokens}")
+            raise ValueError(
+                f"request {self.rid}: max_new_tokens must be "
+                f">= 1, got {self.max_new_tokens}"
+            )
         self.metrics.arrival = float(self.arrival)
 
     @property

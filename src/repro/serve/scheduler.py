@@ -35,7 +35,9 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.core.session import verify_bucket
 from repro.serve.request import Request, RequestState
+from repro.serve.spec import SpecConfig, SpecStats
 
 
 class FifoScheduler:
@@ -106,6 +108,11 @@ class ServingReport:
     prefills: int = 0
     batch: int = 0
     kv_stats: dict = field(default_factory=dict)
+    # speculative decoding (all zero unless the engine ran with spec=...)
+    spec_rounds: int = 0
+    spec_committed: int = 0
+    spec_lane_rounds: int = 0
+    spec_overhead_s: float = 0.0
 
     @property
     def completed(self) -> list[Request]:
@@ -122,8 +129,7 @@ class ServingReport:
     @property
     def tokens_per_s(self) -> float:
         """Aggregate emitted tokens over the whole run's wall time."""
-        return self.total_tokens / self.duration_s if self.duration_s > 0 \
-            else 0.0
+        return self.total_tokens / self.duration_s if self.duration_s > 0 else 0.0
 
     @property
     def occupancy(self) -> float:
@@ -133,10 +139,19 @@ class ServingReport:
             return 0.0
         return self.active_lane_steps / (self.decode_steps * self.batch)
 
+    @property
+    def accepted_per_step(self) -> float:
+        """Mean tokens a lane commits per speculative verify pass — the
+        weight-traffic saving factor (0.0 when spec decode was off)."""
+        if self.spec_lane_rounds == 0:
+            return 0.0
+        return self.spec_committed / self.spec_lane_rounds
+
     def ttft_percentile(self, q: float) -> float:
         """q-th percentile (0-100) of arrival → first-token latency."""
-        ttfts = [r.metrics.ttft_s for r in self.completed
-                 if r.metrics.ttft_s is not None]
+        ttfts = [
+            r.metrics.ttft_s for r in self.completed if r.metrics.ttft_s is not None
+        ]
         if not ttfts:
             raise ValueError("no completed requests with a first token")
         return float(np.percentile(np.asarray(ttfts), q))
@@ -152,12 +167,23 @@ class ServingEngine:
     slots returned, in-flight request pages reclaimed) on every exit path.
     """
 
-    def __init__(self, decoder, *, clock=time.monotonic, sleep=time.sleep):
+    def __init__(
+        self,
+        decoder,
+        *,
+        spec: SpecConfig | None = None,
+        clock=time.monotonic,
+        sleep=time.sleep,
+    ):
         if decoder.decode_spec is None:
-            raise ValueError("ServingEngine needs a decoder built with "
-                             "decode=DecodeSpec(...) — the paged KV cache "
-                             "is the serving substrate")
+            raise ValueError(
+                "ServingEngine needs a decoder built with "
+                "decode=DecodeSpec(...) — the paged KV cache "
+                "is the serving substrate"
+            )
         self.decoder = decoder
+        self.spec = spec
+        self._spec_stats: SpecStats | None = None
         self._clock = clock
         self._sleep = sleep
         self._t0 = 0.0
@@ -174,8 +200,9 @@ class ServingEngine:
         it appends nothing)."""
         return min(r.max_new_tokens, max_seq - r.prompt_len + 1)
 
-    def _emit(self, r: Request, token: int, now: float,
-              next_tok: np.ndarray, max_seq: int) -> bool:
+    def _emit(
+        self, r: Request, token: int, now: float, next_tok: np.ndarray, max_seq: int
+    ) -> bool:
         """Record one greedy token; returns True when the request is done
         (EOS or cap) and should retire."""
         if r.metrics.first_token_at is None:
@@ -193,29 +220,39 @@ class ServingEngine:
         r.state = RequestState.DONE
         r.metrics.finished_at = now
 
-    def _prefill_group(self, kv, group: list[Request], next_tok: np.ndarray,
-                       by_slot: dict[int, Request]) -> None:
+    def _prefill_group(
+        self,
+        kv,
+        group: list[Request],
+        next_tok: np.ndarray,
+        by_slot: dict[int, Request],
+    ) -> None:
         """One prefill-scatter pass for a same-bucket group of joiners."""
         session = self.decoder.session
         spec = self.decoder.decode_spec
         t_pad = max(r.prompt_len for r in group)
         toks = np.zeros((spec.batch, t_pad), np.int32)
         for r in group:
-            toks[r.slot, :r.prompt_len] = r.prompt
-        logits = session.prefill(kv, toks,
-                                 slots=[r.slot for r in group],
-                                 lengths=[r.prompt_len for r in group])
+            toks[r.slot, : r.prompt_len] = r.prompt
+        logits = session.prefill(
+            kv,
+            toks,
+            slots=[r.slot for r in group],
+            lengths=[r.prompt_len for r in group],
+        )
         now = self._now()
         for r in group:
-            done = self._emit(r, int(np.argmax(logits[r.slot])), now,
-                              next_tok, spec.max_seq)
+            done = self._emit(
+                r, int(np.argmax(logits[r.slot])), now, next_tok, spec.max_seq
+            )
             if done:
                 self._retire(kv, r, now)
             else:
                 by_slot[r.slot] = r
 
-    def _step_active(self, kv, next_tok: np.ndarray,
-                     by_slot: dict[int, Request]) -> int:
+    def _step_active(
+        self, kv, next_tok: np.ndarray, by_slot: dict[int, Request]
+    ) -> int:
         """One batched decode step; retires finishing slots.  Returns the
         number of lanes that did useful work."""
         session = self.decoder.session
@@ -227,11 +264,83 @@ class ServingEngine:
         now = self._now()
         lanes = len(by_slot)
         for slot, r in sorted(by_slot.items()):
-            if self._emit(r, int(np.argmax(logits[slot])), now,
-                          next_tok, spec.max_seq):
+            if self._emit(r, int(np.argmax(logits[slot])), now, next_tok, spec.max_seq):
                 del by_slot[slot]
                 self._retire(kv, r, now)
         return lanes
+
+    def _step_active_spec(
+        self, kv, next_tok: np.ndarray, by_slot: dict[int, Request]
+    ) -> int:
+        """One speculative round over the active slots: a shared-width
+        draft window (each slot's pending token + its own n-gram drafts)
+        verified in one streamed pass, then **per-slot** accept/commit —
+        one lane's rejection rolls only that lane's pages back; the
+        others keep every token their own drafts earned.  Finishing
+        slots (EOS or cap mid-window) stop committing early and retire.
+        Returns the number of lanes that did useful work."""
+        session = self.decoder.session
+        dspec = self.decoder.decode_spec
+        sc = self.spec
+        stats = self._spec_stats
+        th0 = time.perf_counter()
+        # shared window width: the tightest lane's capacity bounds the
+        # padded window for everyone (per-query results are extent- and
+        # padding-invariant, so a wide lane loses nothing but the pad)
+        n_cap = sc.k
+        while n_cap > 1 and any(
+            kv.slot_length(s) + verify_bucket(n_cap) > dspec.max_seq for s in by_slot
+        ):
+            n_cap -= 1
+        drafts = {}
+        for slot, r in by_slot.items():
+            room = self._token_cap(r, dspec.max_seq) - r.metrics.tokens_out
+            want = min(n_cap, max(room, 1)) - 1
+            context = np.concatenate([r.prompt, np.asarray(r.output, np.int32)])
+            drafts[slot] = sc.draft.propose(context, want)[: max(want, 0)]
+        n = 1 + max((d.shape[0] for d in drafts.values()), default=0)
+        toks = np.zeros((dspec.batch, n), np.int32)
+        for slot in by_slot:
+            toks[slot, 0] = next_tok[slot]
+            d = drafts[slot]
+            toks[slot, 1 : 1 + d.shape[0]] = d
+            stats.drafted += int(d.shape[0])
+        stats.spec_overhead_s += time.perf_counter() - th0
+        logits = session.verify_step_slots(kv, toks)
+        now = self._now()
+        th1 = time.perf_counter()
+        greedy = np.argmax(logits, axis=-1).astype(np.int32)
+        lanes = len(by_slot)
+        for slot, r in sorted(by_slot.items()):
+            base = kv.slot_length(slot)
+            accept = 0
+            while accept + 1 < n and toks[slot, accept + 1] == greedy[slot, accept]:
+                accept += 1
+            committed = 0
+            done = False
+            for j in range(accept + 1):
+                done = self._emit(r, int(greedy[slot, j]), now, next_tok, dspec.max_seq)
+                committed += 1
+                if done:
+                    break
+            stats.lane_rounds += 1
+            stats.committed_tokens += committed
+            stats.accepted += committed - 1
+            if done:
+                del by_slot[slot]
+                self._retire(kv, r, now)  # drops ALL the slot's pages
+            else:
+                kv.rollback(slot, base + committed)
+        stats.rounds += 1
+        stats.spec_overhead_s += time.perf_counter() - th1
+        return lanes
+
+    def _step(self, kv, next_tok: np.ndarray, by_slot: dict[int, Request]) -> int:
+        """One batched advance of the active slots — speculative when the
+        engine was built with ``spec=``, plain greedy otherwise."""
+        if self.spec is not None:
+            return self._step_active_spec(kv, next_tok, by_slot)
+        return self._step_active(kv, next_tok, by_slot)
 
     @staticmethod
     def _bucket_groups(spec, joiners: list[Request]) -> list[list[Request]]:
@@ -245,8 +354,7 @@ class ServingEngine:
 
     # -- drive loops ---------------------------------------------------------
 
-    def run(self, requests: list[Request],
-            mode: str = "continuous") -> ServingReport:
+    def run(self, requests: list[Request], mode: str = "continuous") -> ServingReport:
         """Serve ``requests`` to completion; returns the stamped report.
 
         ``mode="continuous"``: per-slot join/decode/retire — a finishing
@@ -260,9 +368,11 @@ class ServingEngine:
             raise ValueError("no requests to serve")
         session = self.decoder.session
         spec = self.decoder.decode_spec
-        report = ServingReport(requests=list(requests), mode=mode,
-                               duration_s=0.0, batch=spec.batch)
+        report = ServingReport(
+            requests=list(requests), mode=mode, duration_s=0.0, batch=spec.batch
+        )
         sched = FifoScheduler(report.requests)
+        self._spec_stats = SpecStats()
         kv = session.open_kv_cache()
         self._t0 = self._clock()
         try:
@@ -280,10 +390,18 @@ class ServingEngine:
             # closes on error paths too: in-flight requests' pages are
             # reclaimed with the cache, never orphaned in the pool
             self.decoder.kv_stats = report.kv_stats = kv.stats.snapshot()
+            st = self._spec_stats
+            report.spec_rounds = st.rounds
+            report.spec_committed = st.committed_tokens
+            report.spec_lane_rounds = st.lane_rounds
+            report.spec_overhead_s = st.spec_overhead_s
+            if self.spec is not None:
+                self.decoder.spec_stats = st
             kv.close()
 
-    def _drive_continuous(self, kv, sched: FifoScheduler,
-                          report: ServingReport) -> None:
+    def _drive_continuous(
+        self, kv, sched: FifoScheduler, report: ServingReport
+    ) -> None:
         spec = self.decoder.decode_spec
         next_tok = np.zeros(spec.batch, np.int32)
         by_slot: dict[int, Request] = {}
@@ -294,10 +412,9 @@ class ServingEngine:
                 for group in self._bucket_groups(spec, joiners):
                     self._prefill_group(kv, group, next_tok, by_slot)
                     report.prefills += 1
-                continue     # re-poll: prefill took time, more may have come
+                continue  # re-poll: prefill took time, more may have come
             if by_slot:
-                report.active_lane_steps += self._step_active(
-                    kv, next_tok, by_slot)
+                report.active_lane_steps += self._step(kv, next_tok, by_slot)
                 report.decode_steps += 1
                 continue
             # idle: every arrived request served, more still to come.  An
@@ -310,8 +427,7 @@ class ServingEngine:
             if delay > 0:
                 self._sleep(delay)
 
-    def _drive_static(self, kv, sched: FifoScheduler,
-                      report: ServingReport) -> None:
+    def _drive_static(self, kv, sched: FifoScheduler, report: ServingReport) -> None:
         """Classic static batching: take the next ``batch`` requests in
         arrival order, wait for all of them, prefill them as one group,
         and drain the whole batch before admitting anyone else."""
@@ -339,6 +455,5 @@ class ServingEngine:
                     self._prefill_group(kv, group, next_tok, by_slot)
                     report.prefills += 1
             while by_slot:
-                report.active_lane_steps += self._step_active(
-                    kv, next_tok, by_slot)
+                report.active_lane_steps += self._step(kv, next_tok, by_slot)
                 report.decode_steps += 1
