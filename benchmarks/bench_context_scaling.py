@@ -16,8 +16,8 @@ def run() -> None:
     for name in ("llama3.1-8b", "qwen2.5-7b", "qwen2.5-14b", "qwen2.5-32b"):
         cfg = PAPER_MODELS[name]
         for ctx in CONTEXTS:
-            us = time_us(lambda: estimate_peak(cfg, memascend=True, ctx=ctx,
-                                               batch=1), repeats=2)
+            us = time_us(lambda cfg=cfg, ctx=ctx: estimate_peak(
+                cfg, memascend=True, ctx=ctx, batch=1), repeats=2)
             b = estimate_peak(cfg, memascend=False, ctx=ctx, batch=1).total
             m = estimate_peak(cfg, memascend=True, ctx=ctx, batch=1).total
             emit(f"ctx/{name}/{ctx}", us,

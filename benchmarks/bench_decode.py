@@ -222,7 +222,7 @@ def _per_token_profile(dec, prompts, spec) -> tuple[float, float]:
             kv.close()
     else:
         ctx = prompts
-        for i in range(NEW_TOKENS - 1):
+        for _i in range(NEW_TOKENS - 1):
             t0 = time.perf_counter()
             logits = dec.step_logits(ctx)
             times.append(time.perf_counter() - t0)

@@ -106,7 +106,8 @@ def run() -> None:
     # threads but run identical float ops in identical order — any loss
     # divergence is an executor ordering/visibility bug, not noise.
     mismatches = sum(
-        1 for ls, lh, lf in zip(sync["losses"], h2d["losses"], mem["losses"])
+        1 for ls, lh, lf in zip(sync["losses"], h2d["losses"], mem["losses"],
+                              strict=True)
         if not (ls == lh == lf))
     if mismatches:
         raise AssertionError(

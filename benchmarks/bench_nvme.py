@@ -34,8 +34,10 @@ def run() -> None:
             row = {}
             for name, eng in engines.items():
                 key = f"t{size}"
-                w_us = time_us(lambda: eng.write(key, data), repeats=3)
-                r_us = time_us(lambda: eng.read(key, out), repeats=3)
+                w_us = time_us(lambda eng=eng, key=key, data=data:
+                               eng.write(key, data), repeats=3)
+                r_us = time_us(lambda eng=eng, key=key, out=out:
+                               eng.read(key, out), repeats=3)
                 row[name] = (w_us, r_us)
                 eng.delete(key) if name == "fs" else None
             (fw, fr), (dw, dr) = row["fs"], row["direct"]

@@ -19,7 +19,8 @@ PAPER_FIG15 = {   # GiB (baseline, memascend)
 def run() -> None:
     reductions = []
     for name, cfg in ALL_MODELS.items():
-        us = time_us(lambda: estimate_peak(cfg, memascend=True), repeats=3)
+        us = time_us(lambda cfg=cfg: estimate_peak(cfg, memascend=True),
+                     repeats=3)
         base = estimate_peak(cfg, memascend=False).total
         mem = estimate_peak(cfg, memascend=True).total
         red = 1 - mem / base

@@ -108,7 +108,7 @@ def solo_outputs(decoder, seed: int = 0, n: int = N_REQUESTS) -> dict:
     """Decode every request alone through the engine (reference + warmup:
     covers each prompt bucket and every step extent the batched runs use)."""
     outputs = {}
-    for i, req in enumerate(make_workload(seed, n)):
+    for _i, req in enumerate(make_workload(seed, n)):
         req.arrival = 0.0
         report = ServingEngine(decoder).run([req])
         assert report.requests[0].state is RequestState.DONE

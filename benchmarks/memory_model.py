@@ -115,10 +115,7 @@ def estimate_peak(cfg: ModelConfig, *, memascend: bool, n_gpus: int = 2,
     swap_buffer = max_tensor * n_gpus
 
     # overflow temporaries
-    if memascend:
-        overflow_peak = 4 << 20
-    else:
-        overflow_peak = int(1.25 * flat_payload)
+    overflow_peak = (4 << 20) if memascend else int(1.25 * flat_payload)
 
     pinned_overhead = (pool_reserved - pool_payload) + \
         (flat_reserved - flat_payload) + (ckpt_reserved - ckpt_payload)

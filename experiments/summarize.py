@@ -59,7 +59,8 @@ def splice(marker: str, content: str, text: str) -> str:
 
 
 def main() -> None:
-    text = open(EXP).read()
+    with open(EXP) as fh:
+        text = fh.read()
     # remove previously spliced content: keep everything up to each marker
     for marker in ("DRYRUN-TABLE", "ROOFLINE-TABLE"):
         tag = f"<!-- {marker} -->"
@@ -78,7 +79,8 @@ def main() -> None:
                 rf.append(report(OUT, mesh))
     text = splice("DRYRUN-TABLE", "\n\n".join(dr), text)
     text = splice("ROOFLINE-TABLE", "\n\n".join(rf), text)
-    open(EXP, "w").write(text)
+    with open(EXP, "w") as fh:
+        fh.write(text)
     print("EXPERIMENTS.md updated")
 
 

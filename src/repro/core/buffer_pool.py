@@ -27,6 +27,7 @@ concurrently live" comes from the model config
 
 from __future__ import annotations
 
+import contextlib
 import threading
 from dataclasses import dataclass
 
@@ -144,29 +145,30 @@ class BufferPoolBase:
         self.allocator = allocator
         self.name = name
         self._lock = threading.Condition()
-        # subclass fills these:
+        # subclass fills these (slot sizes/counts are immutable once
+        # _layout returns; only the free lists mutate afterwards):
         self._slot_size: dict[str, int] = {}       # class -> slot bytes
-        self._free_slots: dict[str, list[tuple[int, int]]] = {}  # class -> [(idx, offset)]
+        self._free_slots: dict[str, list[tuple[int, int]]] = {}  # guarded-by: _lock
         self._total_slots: dict[str, int] = {}
         self._layout()  # -> sets the above + self.pool_bytes
         self._arena_buf: PinnedBuffer = self.allocator.alloc(
             self.pool_bytes, tag=name)
         # fragmentation accounting
-        self.in_use_payload = 0
-        self.peak_in_use_payload = 0
-        self.in_use_reserved = 0
-        self.peak_in_use_reserved = 0
+        self.in_use_payload = 0        # guarded-by: _lock
+        self.peak_in_use_payload = 0   # guarded-by: _lock
+        self.in_use_reserved = 0       # guarded-by: _lock
+        self.peak_in_use_reserved = 0  # guarded-by: _lock
         # hashtable metadata, as in the paper: tag -> live PoolBuffers.
         # A tag can be checked out more than once concurrently (a unit's
         # forward ticket still staging while its backward re-fetch is
         # issued inside a deep lookahead window), so each entry is a list —
         # a plain {tag: buf} map silently overwrote the first buffer's
         # record and the first release then dropped the wrong one.
-        self._live: dict[str, list[PoolBuffer]] = {}
+        self._live: dict[str, list[PoolBuffer]] = {}  # guarded-by: _lock
 
     # -- subclass interface --------------------------------------------------
 
-    def _layout(self) -> None:
+    def _layout(self) -> None:  # analyze: pre-share
         raise NotImplementedError
 
     def _class_for(self, class_name: str) -> str:
@@ -180,7 +182,7 @@ class BufferPoolBase:
         return self._arena_buf.array  # None in accounting mode
 
     def acquire(self, class_name: str, nbytes: int, *, tag: str = "",
-                timeout: float | None = 30.0) -> PoolBuffer:
+                timeout: float | None = 30.0) -> PoolBuffer:  # thread: any
         """Check out a slot able to hold ``nbytes`` of class ``class_name``.
 
         Blocks until a slot frees up (the prefetch pipeline naturally
@@ -211,7 +213,7 @@ class BufferPoolBase:
                 self._live.setdefault(tag, []).append(buf)
             return buf
 
-    def release(self, buf: PoolBuffer) -> None:
+    def release(self, buf: PoolBuffer) -> None:  # thread: any
         with self._lock:
             if buf.released:
                 raise ValueError(f"double release of pool slot {buf.tag!r}")
@@ -221,10 +223,8 @@ class BufferPoolBase:
             self.in_use_reserved -= buf.capacity
             live = self._live.get(buf.tag)
             if live is not None:
-                try:
+                with contextlib.suppress(ValueError):
                     live.remove(buf)    # this buffer's record, not the tag's
-                except ValueError:
-                    pass
                 if not live:
                     del self._live[buf.tag]
             self._lock.notify_all()
@@ -234,26 +234,34 @@ class BufferPoolBase:
 
     # -- reporting -------------------------------------------------------------
 
-    def fragmentation(self) -> float:
+    def fragmentation(self) -> float:  # thread: any
         """Internal fragmentation: 1 − (peak payload / pool size).
 
         This is the paper's metric: the pool reserves ``pool_bytes`` but the
         maximum payload ever resident is ``peak_in_use_payload``.
         """
+        with self._lock:
+            return self._fragmentation_locked()
+
+    def _fragmentation_locked(self) -> float:  # analyze: holds(_lock)
         if self.pool_bytes == 0:
             return 0.0
         return 1.0 - self.peak_in_use_payload / self.pool_bytes
 
-    def stats(self) -> dict:
-        return {
-            "pool_bytes": self.pool_bytes,
-            "arena_reserved_bytes": self._arena_buf.capacity,
-            "peak_in_use_payload": self.peak_in_use_payload,
-            "peak_in_use_reserved": self.peak_in_use_reserved,
-            "fragmentation": self.fragmentation(),
-            "slots": dict(self._total_slots),
-            "slot_size": dict(self._slot_size),
-        }
+    def stats(self) -> dict:  # thread: any
+        # Snapshot under the lock: a mid-acquire read tore peak counters
+        # against the free-list (observed as transient >100% utilisation
+        # in metrics sampled from the serve scheduler thread).
+        with self._lock:
+            return {
+                "pool_bytes": self.pool_bytes,
+                "arena_reserved_bytes": self._arena_buf.capacity,
+                "peak_in_use_payload": self.peak_in_use_payload,
+                "peak_in_use_reserved": self.peak_in_use_reserved,
+                "fragmentation": self._fragmentation_locked(),
+                "slots": dict(self._total_slots),
+                "slot_size": dict(self._slot_size),
+            }
 
 
 class FixedBufferPool(BufferPoolBase):
@@ -261,7 +269,7 @@ class FixedBufferPool(BufferPoolBase):
 
     SLOT_CLASS = "__monolithic__"
 
-    def _layout(self) -> None:
+    def _layout(self) -> None:  # analyze: pre-share
         slab = self.census.max_tensor_bytes
         n = self.census.total_slots
         self._slot_size = {self.SLOT_CLASS: slab}
@@ -277,7 +285,7 @@ class FixedBufferPool(BufferPoolBase):
 class AdaptiveBufferPool(BufferPoolBase):
     """MemAscend: per-shape-class subpools inside one arena (paper §IV-B)."""
 
-    def _layout(self) -> None:
+    def _layout(self) -> None:  # analyze: pre-share
         self._slot_size = {}
         self._total_slots = {}
         self._free_slots = {}

@@ -264,11 +264,13 @@ class SpillableKVCache:
         # generate() path drives them in lockstep); a serving engine
         # retires them into the free list first, then join/retire churns
         # them per request.
+        # lengths/active are drive-thread state (executor-only between
+        # worker quiesce points), not lock-guarded — see thread contract
         self.lengths = np.zeros(self.slots, dtype=np.int64)
         self.active: set[int] = set(range(self.slots))
-        self._free: deque[int] = deque()
-        self.stats = KVStats()
-        self.closed = False
+        self._free: deque[int] = deque()   # guarded-by: _lock
+        self.stats = KVStats()             # guarded-by: _lock
+        self.closed = False                # guarded-by: _lock
         # A Condition, not a bare Lock: with two ensuring threads (compute
         # + staging worker) capacity can be transiently held entirely by
         # in-flight refills and mid-read ensures — a thread needing a slot
@@ -278,19 +280,20 @@ class SpillableKVCache:
         # path ever acquires it twice (an accidental nested acquire should
         # deadlock loudly, not silently unlock early).
         self._lock = threading.Condition(threading.Lock())
-        # page key = (unit, batch_slot, page_index)
-        self._slots: dict[tuple, PoolBuffer] = {}     # resident pages
-        self._futures: dict[tuple, tuple[PoolBuffer, Future]] = {}  # refills
-        self._spilled: set[tuple] = set()   # page bytes live on SSD only
-        self._dirty: set[tuple] = set()     # resident page ahead of its SSD copy
-        self._evicting: set[tuple] = set()  # dirty spill write in progress
-        self._pinned: dict[tuple, int] = {}  # page -> pin refcount
-        self._use_order: list[tuple] = []    # LRU ... MRU
+        # page key = (unit, batch_slot, page_index); every map below is
+        # page/slot bookkeeping and lives under the one lock
+        self._slots: dict[tuple, PoolBuffer] = {}     # guarded-by: _lock
+        self._futures: dict[tuple, tuple[PoolBuffer, Future]] = {}  # guarded-by: _lock
+        self._spilled: set[tuple] = set()    # guarded-by: _lock
+        self._dirty: set[tuple] = set()      # guarded-by: _lock
+        self._evicting: set[tuple] = set()   # guarded-by: _lock
+        self._pinned: dict[tuple, int] = {}  # guarded-by: _lock
+        self._use_order: list[tuple] = []    # guarded-by: _lock
         # Pages whose buffer is held by an ensure_page mid-read (popped out
         # of _futures / freshly acquired, not yet landed in _slots).  Two
         # threads ensure concurrently now (compute + staging worker), so
         # capacity math must count these or the pool oversubscribes.
-        self._in_transit = 0
+        self._in_transit = 0               # guarded-by: _lock
 
     # -- internals -----------------------------------------------------------
 
@@ -301,26 +304,28 @@ class SpillableKVCache:
             return f"kv/{unit}/p{page:04d}"
         return f"kv/{unit}/s{slot:02d}/p{page:04d}"
 
-    def _touch(self, key: tuple) -> None:
+    def _touch(self, key: tuple) -> None:  # analyze: holds(_lock)
         if key in self._use_order:
             self._use_order.remove(key)
         self._use_order.append(key)
 
-    def _acquire(self, key: tuple) -> PoolBuffer:
+    def _acquire(self, key: tuple) -> PoolBuffer:  # analyze: holds(_lock)
         # Budget is self-managed: resident + in-flight never exceeds
-        # resident_limit (the census slot count), so this never blocks.
-        return self.pool.acquire(KV_CLASS, self.page_nbytes,
+        # resident_limit (the census slot count), so this never blocks —
+        # a pool wait here would mean the capacity ledger is wrong, and
+        # the 30s acquire timeout turns that bug into a loud failure.
+        return self.pool.acquire(KV_CLASS, self.page_nbytes,  # analyze: ignore[lock-blocking]
                                  tag=self._store_key(*key))
 
-    def _free_capacity(self) -> int:
+    def _free_capacity(self) -> int:  # analyze: holds(_lock)
         return (self.resident_limit - len(self._slots) - len(self._futures)
                 - self._in_transit)
 
-    def _materialized(self, key: tuple) -> bool:
+    def _materialized(self, key: tuple) -> bool:  # analyze: holds(_lock)
         return (key in self._slots or key in self._futures
                 or key in self._spilled or key in self._evicting)
 
-    def _try_spill_one(self, exclude: set) -> bool:
+    def _try_spill_one(self, exclude: set) -> bool:  # analyze: holds(_lock)
         """Evict the most-recently-used resident page (Belady under cyclic
         access) that is neither excluded nor pinned; False when every
         resident page is pinned/excluded (the caller waits for capacity)."""
@@ -331,7 +336,7 @@ class SpillableKVCache:
                 return True
         return False
 
-    def _spill(self, key: tuple) -> None:
+    def _spill(self, key: tuple) -> None:  # analyze: holds(_lock)
         """Evict one resident page.  Called with the lock held; a dirty
         page's store write runs with the lock RELEASED so the other
         thread can keep gathering/appending meanwhile — the page sits in
@@ -388,7 +393,8 @@ class SpillableKVCache:
         page count)."""
         return min(-(-extent // self.page_tokens), self.pages_per_unit)
 
-    def prefetch_window(self, unit: str, extent: int) -> None:
+    def prefetch_window(self, unit: str,
+                        extent: int) -> None:  # thread: executor
         """Hint that ``unit``'s window of ``extent`` positions is needed
         soon: issue async SSD refills for its spilled pages into free
         slots.  No-op for unknown units, non-spilled pages, or when fewer
@@ -408,15 +414,21 @@ class SpillableKVCache:
                     if self._free_capacity() < 2:
                         return
                     buf = self._acquire(key)
-                    view = buf.view(self.dtype, self.page_shape)
-                    future = self.store.read_async(self._store_key(*key),
-                                                   view)
+                    try:
+                        view = buf.view(self.dtype, self.page_shape)
+                        future = self.store.read_async(
+                            self._store_key(*key), view)
+                    except BaseException:
+                        # failed issue: the key is still in _spilled (the
+                        # SSD copy is intact) — only the slot must go back
+                        buf.release()
+                        raise
                     self._futures[key] = (buf, future)
                     self._spilled.discard(key)
                     self.stats.prefetch_refills += 1
 
     def ensure_page(self, unit: str, page: int, *, slot: int = 0,
-                    pin: bool = False) -> np.ndarray:
+                    pin: bool = False) -> np.ndarray:  # thread: executor, h2d-worker
         """Host view of one page, resident.  Waits out an in-flight refill;
         synchronously refills a spilled page; acquires (and zero-fills) a
         fresh slot for a never-written page.  With ``pin=True`` the page is
@@ -457,9 +469,9 @@ class SpillableKVCache:
                 # sits in other pages' in-flight refills / mid-read
                 # ensures), wait: the other thread's land/unpin frees it.
                 while self._free_capacity() < 1:
-                    if not self._try_spill_one(exclude={key}):
-                        if not self._lock.wait(timeout=30.0):
-                            raise RuntimeError(
+                    if (not self._try_spill_one(exclude={key})
+                            and not self._lock.wait(timeout=30.0)):
+                        raise RuntimeError(
                                 f"KV cache slot wait timed out for page "
                                 f"{key!r}: every slot pinned or in flight "
                                 f"for 30s (budget {self.resident_limit})")
@@ -467,9 +479,9 @@ class SpillableKVCache:
                 future = None
                 hit = False
             self._in_transit += 1   # buf held outside _slots/_futures
-        view = buf.view(self.dtype, self.page_shape)
         t0 = time.perf_counter()
         try:
+            view = buf.view(self.dtype, self.page_shape)
             if future is not None:
                 future.result()
             elif spilled:
@@ -512,7 +524,8 @@ class SpillableKVCache:
             self._lock.notify_all()   # landed page is evictable again
         return view
 
-    def unpin(self, unit: str, page: int, *, slot: int = 0) -> None:
+    def unpin(self, unit: str, page: int, *,
+              slot: int = 0) -> None:  # thread: executor, h2d-worker
         """Release one pin on a page (see :meth:`ensure_page`)."""
         key = (unit, slot, page)
         with self._lock:
@@ -523,8 +536,8 @@ class SpillableKVCache:
             else:
                 self._pinned[key] = n
 
-    def gather_window(self, unit: str, extent: int) -> tuple[np.ndarray,
-                                                             np.ndarray]:
+    def gather_window(self, unit: str, extent: int  # thread: executor, h2d-worker
+                      ) -> tuple[np.ndarray, np.ndarray]:
         """Contiguous host (K, V) arrays of shape
         ``(batch, extent, kv_heads, head_dim)`` covering positions
         ``[0, extent)`` — the attended window one ``block_step`` H2Ds.
@@ -567,7 +580,8 @@ class SpillableKVCache:
         row (kept 2-D-leading) per batch slot otherwise."""
         return arr if self.slots == 1 else arr[slot:slot + 1]
 
-    def append(self, unit: str, k_new: np.ndarray, v_new: np.ndarray) -> None:
+    def append(self, unit: str, k_new: np.ndarray,
+               v_new: np.ndarray) -> None:  # thread: executor
         """Write one decoded token's K/V (``(B, 1, KH, D)``) into each
         **active** slot's tail page at that slot's own length (advance once
         per step via :meth:`advance`) — the only pages a decode step
@@ -594,7 +608,7 @@ class SpillableKVCache:
         self._maybe_spill_after_use()
 
     def append_window(self, unit: str, k_new: np.ndarray,
-                      v_new: np.ndarray) -> None:
+                      v_new: np.ndarray) -> None:  # thread: executor
         """Write a K-token draft window's K/V (``(B, K, KH, D)``) into
         each **active** slot's pages starting at that slot's own length,
         WITHOUT advancing it — the speculative-decode verify write.  The
@@ -636,7 +650,7 @@ class SpillableKVCache:
         self._maybe_spill_after_use()
 
     def write_prefill(self, unit: str, k: np.ndarray, v: np.ndarray, *,
-                      slots: list[int] | None = None) -> None:
+                      slots: list[int] | None = None) -> None:  # thread: executor
         """Write the prefill pass's K/V (``(B, S_bucket, KH, D)``; entries
         past the true prompt length are masked garbage, overwritten by
         later appends), scattered page by page.  ``slots`` restricts the
@@ -690,7 +704,7 @@ class SpillableKVCache:
             raise RuntimeError(f"slot {slot} is not active")
         self.lengths[slot] = length
 
-    def advance(self, n: int = 1) -> None:
+    def advance(self, n: int = 1) -> None:  # thread: executor
         """Advance every **active** slot by ``n`` (one decode step)."""
         for s in self.active:
             new = int(self.lengths[s]) + n
@@ -717,7 +731,7 @@ class SpillableKVCache:
             return False
         return self.pages_for(prompt_len) + 1 <= self.resident_limit
 
-    def join(self) -> int | None:
+    def join(self) -> int | None:  # thread: executor
         """Claim a retired batch slot for a new request (FIFO over the
         free list); ``None`` when every slot is mid-request.  The slot
         comes back empty: length 0, no pages materialized (its previous
@@ -733,7 +747,7 @@ class SpillableKVCache:
             self.lengths[slot] = 0
             return slot
 
-    def retire(self, slot: int) -> None:
+    def retire(self, slot: int) -> None:  # thread: executor
         """Retire one batch slot: reclaim its pages and return it to the
         free list.  Reclaim is the cheap half of the spill machinery —
         resident pages (dirty or not) release their pool slots *without*
@@ -791,7 +805,7 @@ class SpillableKVCache:
             self.stats.reclaim_bytes += len(fut_entries) * self.page_nbytes
             self._lock.notify_all()   # freed capacity: wake slot waiters
 
-    def rollback(self, slot: int, length: int) -> None:
+    def rollback(self, slot: int, length: int) -> None:  # thread: executor
         """Declare ``length`` as one slot's authoritative cached extent
         and drop every page materialized past its tail.
 
@@ -888,7 +902,7 @@ class SpillableKVCache:
             return [(u, p) for (u, _s, p) in keys]
         return keys
 
-    def close(self) -> None:
+    def close(self) -> None:  # thread: executor
         """Wait out in-flight refills and return every slot.  Idempotent;
         runs on generate()'s error path, so nothing may leak.  Callers must
         drain any worker still gathering first (the session's abort path

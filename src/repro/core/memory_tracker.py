@@ -69,21 +69,21 @@ class MemoryTracker:
 
     def __init__(self, *, keep_timeline: bool = False) -> None:
         self._lock = threading.Lock()
-        self._components: dict[str, ComponentStats] = {}
-        self._live_requested = 0
-        self._live_allocated = 0
-        self._peak_requested = 0
-        self._peak_allocated = 0
+        self._components: dict[str, ComponentStats] = {}  # guarded-by: _lock
+        self._live_requested = 0   # guarded-by: _lock
+        self._live_allocated = 0   # guarded-by: _lock
+        self._peak_requested = 0   # guarded-by: _lock
+        self._peak_allocated = 0   # guarded-by: _lock
         self._keep_timeline = keep_timeline
-        self.timeline: list[AllocEvent] = []
+        self.timeline: list[AllocEvent] = []  # guarded-by: _lock
         # Monotonic id for handles so double-free is detectable.
-        self._next_handle = 1
-        self._live_handles: dict[int, tuple[str, int, int]] = {}
+        self._next_handle = 1      # guarded-by: _lock
+        self._live_handles: dict[int, tuple[str, int, int]] = {}  # guarded-by: _lock
 
     # ------------------------------------------------------------------ API
 
     def alloc(self, component: str, requested: int, allocated: int | None = None,
-              *, tag: str = "") -> int:
+              *, tag: str = "") -> int:  # thread: any
         """Record an allocation; returns an opaque handle for :meth:`free`."""
         if requested < 0:
             raise ValueError(f"negative allocation: {requested}")
@@ -111,7 +111,7 @@ class MemoryTracker:
                     self._live_allocated, tag))
             return handle
 
-    def free(self, handle: int) -> None:
+    def free(self, handle: int) -> None:  # thread: any
         with self._lock:
             try:
                 component, requested, allocated = self._live_handles.pop(handle)
@@ -129,41 +129,53 @@ class MemoryTracker:
 
     # ------------------------------------------------------------- queries
 
-    @property
-    def live_requested(self) -> int:
-        return self._live_requested
+    # The query properties lock: worker threads (store aio pools, the
+    # H2D stager, the Adam stage) allocate concurrently with a benchmark
+    # thread sampling peaks, and an unlocked read could pair one side of
+    # an in-progress alloc's requested/allocated update.
 
     @property
-    def live_allocated(self) -> int:
-        return self._live_allocated
+    def live_requested(self) -> int:  # thread: any
+        with self._lock:
+            return self._live_requested
 
     @property
-    def peak_requested(self) -> int:
-        return self._peak_requested
+    def live_allocated(self) -> int:  # thread: any
+        with self._lock:
+            return self._live_allocated
 
     @property
-    def peak_allocated(self) -> int:
-        return self._peak_allocated
+    def peak_requested(self) -> int:  # thread: any
+        with self._lock:
+            return self._peak_requested
 
     @property
-    def peak_waste(self) -> int:
+    def peak_allocated(self) -> int:  # thread: any
+        with self._lock:
+            return self._peak_allocated
+
+    @property
+    def peak_waste(self) -> int:  # thread: any
         """Policy overhead at peak: allocated − requested (both at peak)."""
-        return self._peak_allocated - self._peak_requested
+        with self._lock:
+            return self._peak_allocated - self._peak_requested
 
-    def component(self, name: str) -> ComponentStats:
+    def component(self, name: str) -> ComponentStats:  # thread: any
         with self._lock:
             return self._components.setdefault(name, ComponentStats())
 
-    def breakdown(self) -> dict[str, dict]:
+    def breakdown(self) -> dict[str, dict]:  # thread: any
         """Per-component snapshot (for the paper's Fig. 8-style breakdowns)."""
         with self._lock:
             return {k: v.snapshot() for k, v in self._components.items()}
 
-    def assert_quiescent(self) -> None:
+    def assert_quiescent(self) -> None:  # thread: any
         """Raise if anything is still live (leak detector for tests)."""
-        if self._live_handles:
-            live = {}
-            for comp, req, _ in self._live_handles.values():
+        with self._lock:
+            handles = list(self._live_handles.values())
+        if handles:
+            live: dict[str, int] = {}
+            for comp, req, _ in handles:
                 live[comp] = live.get(comp, 0) + req
             raise AssertionError(f"leaked allocations: {live}")
 

@@ -47,12 +47,10 @@ def make_offloadable_lm(cfg: ModelConfig, key,
             f"block_{i:03d}", "block",
             {k: np.asarray(v) for k, v in lp.items()}))
     head_params = {"final_norm": np.zeros((cfg.d_model,), np.float32)}
-    if not cfg.tie_embeddings:
-        head_params["head"] = np.asarray(
-            fan_in_init(keys[-1], (cfg.d_model, cfg.vocab)))
-    else:
-        # tied embeddings: the head unit still needs the table to project
-        head_params["head"] = units[0].params["embed"].T.copy()
+    # tied embeddings share the table; an untied head projects its own
+    head_params["head"] = (
+        units[0].params["embed"].T.copy() if cfg.tie_embeddings
+        else np.asarray(fan_in_init(keys[-1], (cfg.d_model, cfg.vocab))))
     units.append(OffloadUnit("head", "standalone", head_params))
 
     def embed_apply(params, tokens):

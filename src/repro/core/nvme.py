@@ -28,7 +28,7 @@ import os
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor, Future
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 
@@ -42,29 +42,40 @@ def _as_bytes(arr: np.ndarray) -> np.ndarray:
 
 @dataclass
 class IOStats:
-    bytes_written: int = 0
-    bytes_read: int = 0
-    n_writes: int = 0
-    n_reads: int = 0
-    write_seconds: float = 0.0
-    read_seconds: float = 0.0
+    """I/O volume/latency ledger.  ``record`` is reached concurrently —
+    the ``-aio`` pool runs several reads/writes at once and the direct
+    engine's striped ops land from its worker pool — so the
+    read-modify-write counters are lock-guarded."""
 
-    def record(self, kind: str, nbytes: int, seconds: float) -> None:
-        if kind == "w":
-            self.bytes_written += nbytes
-            self.n_writes += 1
-            self.write_seconds += seconds
-        else:
-            self.bytes_read += nbytes
-            self.n_reads += 1
-            self.read_seconds += seconds
+    bytes_written: int = 0    # guarded-by: _lock
+    bytes_read: int = 0       # guarded-by: _lock
+    n_writes: int = 0         # guarded-by: _lock
+    n_reads: int = 0          # guarded-by: _lock
+    write_seconds: float = 0.0  # guarded-by: _lock
+    read_seconds: float = 0.0   # guarded-by: _lock
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False, compare=False)
 
-    def snapshot(self) -> dict:
-        return {
-            "bytes_written": self.bytes_written, "bytes_read": self.bytes_read,
-            "n_writes": self.n_writes, "n_reads": self.n_reads,
-            "write_seconds": self.write_seconds, "read_seconds": self.read_seconds,
-        }
+    def record(self, kind: str, nbytes: int, seconds: float) -> None:  # thread: any
+        with self._lock:
+            if kind == "w":
+                self.bytes_written += nbytes
+                self.n_writes += 1
+                self.write_seconds += seconds
+            else:
+                self.bytes_read += nbytes
+                self.n_reads += 1
+                self.read_seconds += seconds
+
+    def snapshot(self) -> dict:  # thread: any
+        with self._lock:
+            return {
+                "bytes_written": self.bytes_written,
+                "bytes_read": self.bytes_read,
+                "n_writes": self.n_writes, "n_reads": self.n_reads,
+                "write_seconds": self.write_seconds,
+                "read_seconds": self.read_seconds,
+            }
 
 
 class TensorStore:
@@ -76,7 +87,7 @@ class TensorStore:
         # a class attribute is shared by every engine until the first
         # lazy assignment shadows it, so one store's close() could tear
         # down (or miss) another's I/O threads.
-        self._async_pool: ThreadPoolExecutor | None = None
+        self._async_pool: ThreadPoolExecutor | None = None  # guarded-by: _async_pool_lock
         self._async_pool_lock = threading.Lock()
 
     # -- blocking API ---------------------------------------------------------
@@ -146,7 +157,8 @@ class FilesystemEngine(TensorStore):
         self.root = root
         self.fsync = fsync
         os.makedirs(root, exist_ok=True)
-        self._meta: dict[str, tuple[str, tuple, int]] = {}  # key -> dtype,shape,nbytes
+        # key -> dtype, shape, nbytes
+        self._meta: dict[str, tuple[str, tuple, int]] = {}  # guarded-by: _lock
         self._lock = threading.Lock()
 
     def _path(self, key: str) -> str:
@@ -186,7 +198,11 @@ class FilesystemEngine(TensorStore):
             self._meta.pop(key, None)
 
     def keys(self):
-        return list(self._meta)
+        # Snapshot under the lock: concurrent write_async completions
+        # mutate _meta while a checkpoint enumerates it, and dict
+        # iteration raises on concurrent insert.
+        with self._lock:
+            return list(self._meta)
 
 
 # ---------------------------------------------------------------------------
@@ -210,7 +226,7 @@ class _LocationAllocator:
     """
 
     def __init__(self, n_devices: int, capacity: int) -> None:
-        self._next = [0] * n_devices
+        self._next = [0] * n_devices   # guarded-by: _lock
         self._capacity = capacity
         self._lock = threading.Lock()
 
@@ -255,11 +271,11 @@ class DirectNVMeEngine(TensorStore):
             self._fds.append(fd)
         self._alloc = _LocationAllocator(n_devices, device_capacity)
         # tensor-location dictionary: key -> (dtype, shape, [extents])
-        self._locations: dict[str, tuple[str, tuple, list[Extent]]] = {}
+        self._locations: dict[str, tuple[str, tuple, list[Extent]]] = {}  # guarded-by: _loc_lock
         self._loc_lock = threading.Lock()
         self._workers = ThreadPoolExecutor(
             max_workers=n_workers, thread_name_prefix="direct-nvme")
-        self._rr = 0  # round-robin start device for small tensors
+        self._rr = 0  # round-robin start device  # guarded-by: _rr_lock
         self._rr_lock = threading.Lock()
 
     # -- placement --------------------------------------------------------------

@@ -138,9 +138,9 @@ class _StagingArena:
         self._handle = tracker.alloc(
             component, 2 * (3 * max_elems * 4 + scratch_bytes),
             tag="adam_staging_arena")
-        self._free = [0, 1]
+        self._free = [0, 1]     # guarded-by: _cv
         self._cv = threading.Condition()
-        self._closed = False
+        self._closed = False    # guarded-by: _cv
 
     def acquire(self) -> int:
         with self._cv:
@@ -226,7 +226,7 @@ class OffloadedAdam:
         self.write_guard = None
         self._io_lock = threading.Lock()
         self._arena_lock = threading.Lock()
-        self._arena: _StagingArena | None = None
+        self._arena: _StagingArena | None = None   # guarded-by: _arena_lock
         # Dedicated single-thread write-back executor.  Two deliberate
         # choices, both measured at bench scale: (a) NOT the store's
         # shared "-aio" pool — the next step's small, latency-critical
@@ -237,13 +237,14 @@ class OffloadedAdam:
         # write-backs without starving the concurrent forward window's
         # weight reads of disk bandwidth (wider Adam I/O made the whole
         # pipeline slower).
-        self._io_pool: ThreadPoolExecutor | None = None
-        self._closed = False
-        self.last_io_bytes = 0   # I/O volume of the most recent step
+        self._io_pool: ThreadPoolExecutor | None = None  # guarded-by: _arena_lock
+        self._closed = False     # guarded-by: _arena_lock
+        # I/O volume of the most recent step
+        self.last_io_bytes = 0   # guarded-by: _io_lock
 
     # -- registration ------------------------------------------------------------
 
-    def register(self, key: str, init_value: np.ndarray) -> None:
+    def register(self, key: str, init_value: np.ndarray) -> None:  # thread: executor
         """Seed master weights + zero moments on the store; emit compute copy."""
         sd = self.cfg.state_np_dtype
         meta = SubgroupMeta(key, init_value.shape, init_value.size)
@@ -282,7 +283,7 @@ class OffloadedAdam:
                     self.tracker, self.component)
             return self._arena
 
-    def staging_idle(self) -> bool:
+    def staging_idle(self) -> bool:  # thread: any
         """True when no staging buffer is checked out — the leak probe."""
         with self._arena_lock:
             arena = self._arena
@@ -290,12 +291,17 @@ class OffloadedAdam:
 
     def _pool(self) -> ThreadPoolExecutor:
         with self._arena_lock:
+            if self._closed:
+                # a commit racing close() must fail loudly: recreating the
+                # executor here would resurrect a write stream nobody joins
+                # (close() already shut the old one down and returned)
+                raise RuntimeError("optimizer is closed")
             if self._io_pool is None:
                 self._io_pool = ThreadPoolExecutor(
                     max_workers=1, thread_name_prefix="offload-optim-io")
             return self._io_pool
 
-    def close(self) -> None:
+    def close(self) -> None:  # thread: executor
         """Free the staging arena's tracker charge and stop the I/O pool
         (waiting out in-flight write-backs).  Idempotent; later streaming
         calls raise instead of resurrecting the arena."""
@@ -318,7 +324,7 @@ class OffloadedAdam:
         w = n * sd.itemsize
         return [scratch[i * w:(i + 1) * w].view(sd) for i in range(3)]
 
-    def issue_subgroup(self, key: str) -> StagedSubgroup:
+    def issue_subgroup(self, key: str) -> StagedSubgroup:  # thread: executor, optim-prefetch
         """Acquire a staging buffer and read (master, m, v) into its fp32
         views.  Runs on the state-prefetch thread — reads stay a single
         stream there, overlapping the write-back stream and the optimizer
@@ -339,7 +345,7 @@ class OffloadedAdam:
             else:
                 # read at state precision into the scratch, upcast in place
                 halves = self._state_scratch(scratch, n)
-                for (skey, out), half in zip(targets, halves):
+                for (skey, out), half in zip(targets, halves, strict=True):
                     self.store.read(key + skey, half)
                     out[:] = half
             return StagedSubgroup(key, buf, master, m, v,
@@ -349,14 +355,15 @@ class OffloadedAdam:
             raise
 
     def compute_subgroup(self, staged: StagedSubgroup,
-                         grad_f32: np.ndarray) -> None:
+                         grad_f32: np.ndarray) -> None:  # thread: executor, optim-worker
         """In-place :func:`adam_update` on the staged fp32 state.  Runs on
         the optimizer thread; ``grad_f32`` is already unscaled."""
         adam_update(staged.master, np.reshape(grad_f32, -1), staged.m,
                     staged.v, self.step_count, self.cfg)
 
     def commit_subgroup_async(self, staged: StagedSubgroup, *,
-                              return_compute: bool = False) -> "Future":
+                              return_compute: bool = False
+                              ) -> "Future":  # thread: executor, optim-worker
         """Submit the write-back batch — master/m/v (truncated in the
         accounted scratch when half-precision) plus the fresh compute
         weights — on the dedicated single-thread write-back executor
@@ -386,10 +393,11 @@ class OffloadedAdam:
             state_off = 0
             if sd != F32:
                 halves = self._state_scratch(scratch, n)
-                for (skey, src), half in zip(list(sources), halves):
+                for (_skey, src), half in zip(list(sources), halves,
+                                              strict=True):
                     half[:] = src       # truncate into the accounted scratch
                 sources = [(skey, half) for (skey, _src), half
-                           in zip(sources, halves)]
+                           in zip(sources, halves, strict=True)]
                 state_off = 3 * n * sd.itemsize
             if cd == F32:
                 compute_src = staged.master
@@ -449,16 +457,17 @@ class OffloadedAdam:
         return done
 
     def commit_subgroup(self, staged: StagedSubgroup, *,
-                        return_compute: bool = False) -> np.ndarray | None:
+                        return_compute: bool = False
+                        ) -> np.ndarray | None:  # thread: executor, optim-worker
         """Blocking commit: the async batch, waited out."""
         return self.commit_subgroup_async(
             staged, return_compute=return_compute).result()
 
-    def discard_staged(self, staged: StagedSubgroup) -> None:
+    def discard_staged(self, staged: StagedSubgroup) -> None:  # thread: any
         """Error-path release of an issued-but-never-committed buffer."""
         self._ensure_arena().release(staged.buf)
 
-    def step_subgroup(self, key: str, grad_f32: np.ndarray) -> np.ndarray:
+    def step_subgroup(self, key: str, grad_f32: np.ndarray) -> np.ndarray:  # thread: executor
         """Stream one subgroup synchronously: issue, compute, commit.
 
         Returns the refreshed compute-precision weights (also written to the
@@ -472,7 +481,7 @@ class OffloadedAdam:
             raise
         return self.commit_subgroup(staged, return_compute=True)
 
-    def begin_step(self) -> None:
+    def begin_step(self) -> None:  # thread: executor, optim-worker
         self.step_count += 1
         with self._io_lock:
             self.last_io_bytes = 0

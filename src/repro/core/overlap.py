@@ -93,12 +93,12 @@ class SerialWorker:
         self.name = name
         self._q: queue.Queue = queue.Queue(maxsize)
         self._latch = latch
-        self._error: BaseException | None = None
+        self._error: BaseException | None = None   # guarded-by: _error_lock
         # Consumed error INSTANCES (strong refs, identity semantics): a
         # poisoned pipeline re-raises the same object from later tasks,
         # which must not re-latch; holding the object (not its id) keeps
         # a recycled address from masking an unrelated future failure.
-        self._delivered: list[BaseException] = []
+        self._delivered: list[BaseException] = []  # guarded-by: _error_lock
         self._error_lock = threading.Lock()
         self._closed = False
         self._thread = threading.Thread(target=self._run, name=name,
@@ -126,7 +126,7 @@ class SerialWorker:
             finally:
                 self._q.task_done()
 
-    def submit(self, fn) -> Future:
+    def submit(self, fn) -> Future:  # thread: any
         """Queue ``fn``; blocks when the queue is full (backpressure)."""
         if self._closed:
             raise RuntimeError(f"worker {self.name!r} is closed")
@@ -193,17 +193,17 @@ class DeviceSlots:
             if d < 2:
                 raise ValueError(f"device slot class {cls!r} needs depth >= "
                                  f"2 (compute + staging), got {d}")
-        self._depths = dict(depths)
-        self._free = dict(depths)
+        self._depths = dict(depths)          # immutable after init
+        self._free = dict(depths)            # guarded-by: _cv
         self._cv = threading.Condition()
 
-    def acquire(self, class_name: str) -> None:
+    def acquire(self, class_name: str) -> None:  # thread: h2d-worker
         with self._cv:
             while self._free[class_name] < 1:
                 self._cv.wait()
             self._free[class_name] -= 1
 
-    def release_all(self, class_names) -> None:
+    def release_all(self, class_names) -> None:  # thread: executor, h2d-worker
         """Return one slot per entry of ``class_names`` (a unit's tokens)."""
         with self._cv:
             for cls in class_names:

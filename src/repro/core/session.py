@@ -70,6 +70,7 @@ weights stream.
 
 from __future__ import annotations
 
+import contextlib
 import functools
 import threading
 import time
@@ -201,7 +202,8 @@ class OffloadSession:
             self.close()
             raise
 
-    def _construct(self, model, policy, mode: str,
+    # pre-share: runs inside __init__, before any worker thread exists
+    def _construct(self, model, policy, mode: str,  # analyze: pre-share
                    decode: DecodeSpec | None) -> None:
         self.allocator = policy.allocator_cls(
             tracker=self.tracker, component="pinned", backing="numpy")
@@ -258,8 +260,8 @@ class OffloadSession:
         self.overlap = policy.overlap
         self._ostats = OverlapStats()
         self._optim_lock = threading.Lock()
-        self._optim_futures: dict[str, Future] = {}
-        self._optim_io_completed = 0
+        self._optim_futures: dict[str, Future] = {}  # guarded-by: _optim_lock
+        self._optim_io_completed = 0                 # guarded-by: _optim_lock
         self._device_slots: DeviceSlots | None = None
         self._h2d: SerialWorker | None = None
         self._grad_writer: SerialWorker | None = None
@@ -271,14 +273,15 @@ class OffloadSession:
         # deque are touched by the optimizer worker only (tasks are FIFO
         # on its single thread).
         self._adam_lock = threading.Lock()
-        self._adam_work: list[tuple[str, str]] = []   # (unit, param key)
+        # (unit, param key) pairs:
+        self._adam_work: list[tuple[str, str]] = []   # guarded-by: _adam_lock
         self._adam_issued = 0
         self._adam_inflight: deque = deque()          # (index, staged fut)
         self._adam_poison: BaseException | None = None
         # per-subgroup overflow screen: verdicts land per unit (writer
         # thread under full overlap) and are OR-ed at the barrier.
         self._screen_lock = threading.Lock()
-        self._region_verdicts: dict[str, bool] = {}
+        self._region_verdicts: dict[str, bool] = {}  # guarded-by: _screen_lock
         self._screen_regions = policy.fused_overflow and mode == "train"
         if policy.overlap in ("h2d", "full"):
             per_unit: dict[str, int] = {}
@@ -402,11 +405,10 @@ class OffloadSession:
                 # A scalar pos selects one position for the whole batch
                 # (joint prefill); a (B,) pos selects per row (serving
                 # prefill, where joiners' prompt lengths differ).
-                if pos.ndim == 0:
-                    h_last = jax.lax.dynamic_slice_in_dim(h, pos, 1, axis=1)
-                else:
-                    h_last = jnp.take_along_axis(h, pos[:, None, None],
-                                                 axis=1)
+                h_last = (
+                    jax.lax.dynamic_slice_in_dim(h, pos, 1, axis=1)
+                    if pos.ndim == 0
+                    else jnp.take_along_axis(h, pos[:, None, None], axis=1))
                 return model.head_logits(params, h_last)
             self._jit_head_last = jax.jit(_head_last)
 
@@ -421,7 +423,7 @@ class OffloadSession:
     def __exit__(self, exc_type, exc, tb) -> None:
         self.close()
 
-    def close(self) -> None:
+    def close(self) -> None:  # thread: executor
         """Drain in-flight reads and pipeline workers, return the arena +
         flat buffer, close the store.  Idempotent; runs on the error path
         via ``__exit__`` and on partially-constructed sessions (attributes
@@ -468,7 +470,7 @@ class OffloadSession:
         if failure is not None:
             raise failure
 
-    def synchronize(self) -> None:
+    def synchronize(self) -> None:  # thread: executor
         """Drain the cross-step pipeline: wait out queued gradient
         write-backs and the in-flight optimizer stage, re-raising their
         failures.  The executor's per-unit readiness gates make this
@@ -559,7 +561,7 @@ class OffloadSession:
         state.kv_stage[unit_name] = fut
         state.stage_seq.append(("kv", unit_name))
 
-    def _stage_kv_unit(self, kv: SpillableKVCache, unit_name: str,
+    def _stage_kv_unit(self, kv: SpillableKVCache, unit_name: str,  # thread: h2d-worker
                        extent: int) -> tuple:
         """H2D-worker body for one unit's KV window: gather the attended
         window's pages (waiting out / refilling spilled ones) and stage
@@ -575,7 +577,7 @@ class OffloadSession:
             self._device_slots.release_all([KV_CLASS])
             raise
 
-    def _h2d_stage_unit(self, unit_name: str) -> tuple[dict, list]:
+    def _h2d_stage_unit(self, unit_name: str) -> tuple[dict, list]:  # thread: h2d-worker
         """H2D-worker body: claim the unit's tickets, wait each read,
         stage into device slots, release the pool slots.  Returns
         ``(device_params, slot_tokens)``; on any failure every claimed
@@ -647,13 +649,13 @@ class OffloadSession:
 
     # -- cross-step optimizer readiness --------------------------------------
 
-    def _guard_compute_write(self, key: str) -> None:
+    def _guard_compute_write(self, key: str) -> None:  # thread: executor, optim-worker
         """Adam-commit hook: refreshing ``key``'s compute weights on the
         store while a prefetched read of them is in flight would race the
         pread (the readiness gates forbid it; this asserts it)."""
         self.swapper.assert_not_in_flight(key + COMPUTE_SUFFIX)
 
-    def _optim_ready(self, unit_name: str) -> bool:
+    def _optim_ready(self, unit_name: str) -> bool:  # thread: executor
         """True when the unit's previous-step Adam landed *successfully* —
         a done-with-exception future is NOT ready (the store still holds
         pre-update weights), so the window stalls on it until the head
@@ -662,7 +664,7 @@ class OffloadSession:
             fut = self._optim_futures.get(unit_name)
         return fut is None or (fut.done() and fut.exception() is None)
 
-    def _optim_wait(self, unit_name: str) -> None:
+    def _optim_wait(self, unit_name: str) -> None:  # thread: executor
         """Block until the unit's previous-step Adam write-back landed
         (re-raising an optimizer-worker failure here, at the point the
         stale weights would otherwise have been read)."""
@@ -704,7 +706,7 @@ class OffloadSession:
 
     # -- the executor --------------------------------------------------------
 
-    def execute(self, plan: StreamPlan, state: _ExecState) -> _ExecState:
+    def execute(self, plan: StreamPlan, state: _ExecState) -> _ExecState:  # thread: executor
         """Walk the plan with lookahead-N prefetch; drain on any error."""
         if self._closed:
             raise RuntimeError("session is closed")
@@ -841,10 +843,9 @@ class OffloadSession:
         state.kv_live.clear()
         state.kv_append.clear()
         if self._grad_writer is not None:
-            try:
+            # the original executor error propagates
+            with contextlib.suppress(BaseException):
                 self._grad_writer.drain()
-            except BaseException:
-                pass              # the original executor error propagates
         self.swapper.drain()
 
     def _compute(self, op: ComputeOp, state: _ExecState) -> None:
@@ -947,7 +948,7 @@ class OffloadSession:
         self._grad_writer.submit(
             functools.partial(self._write_grads, unit_name, grads, gate))
 
-    def _write_grads(self, unit_name: str, grads: dict,
+    def _write_grads(self, unit_name: str, grads: dict,  # thread: executor, writer
                      gate: Future | None = None) -> None:
         """Accumulate device grads into the fp32 host flat buffer, then
         screen the unit's region for Inf/NaN (fused policies only): the
@@ -966,7 +967,7 @@ class OffloadSession:
         if self._screen_regions:
             self._screen_unit_region(unit_name)
 
-    def _screen_unit_region(self, unit_name: str) -> None:
+    def _screen_unit_region(self, unit_name: str) -> None:  # thread: executor, writer
         lo, hi = self._unit_flat_region[unit_name]
         t0 = time.perf_counter()
         verdict = bool(check_region(self.flat, lo, hi, fused=True,
@@ -1067,7 +1068,7 @@ class OffloadSession:
         with self._optim_lock:
             self._optim_futures[unit_name] = fut
 
-    def _optim_unit(self, unit_name: str, inv_scale: np.float32) -> None:
+    def _optim_unit(self, unit_name: str, inv_scale: np.float32) -> None:  # thread: executor
         """Inline (sync/h2d) Adam stage: stream subgroups synchronously
         (the same three halves, composed back to back; no compute-weight
         return copy is materialized — the store holds it)."""
@@ -1083,7 +1084,7 @@ class OffloadSession:
                 raise
             self.optimizer.commit_subgroup(staged)
 
-    def _unit_grad(self, skey: str, inv_scale: np.float32) -> np.ndarray:
+    def _unit_grad(self, skey: str, inv_scale: np.float32) -> np.ndarray:  # thread: executor, optim-worker
         """Unscale one subgroup's gradient out of the flat buffer.
 
         Unscale with the scale the grads were produced under, not the
@@ -1096,7 +1097,7 @@ class OffloadSession:
 
     # -- the pipelined Adam stage (full overlap) -----------------------------
 
-    def _adam_ensure_issued(self, upto: int) -> None:
+    def _adam_ensure_issued(self, upto: int) -> None:  # thread: optim-worker
         """Submit state-prefetch issues for work indices < ``upto``.
 
         Runs on the optimizer worker only.  Deadlock-freedom of the
@@ -1117,7 +1118,7 @@ class OffloadSession:
             self._adam_inflight.append((self._adam_issued, fut))
             self._adam_issued += 1
 
-    def _optim_unit_pipelined(self, unit_name: str, lo: int, hi: int,
+    def _optim_unit_pipelined(self, unit_name: str, lo: int, hi: int,  # thread: optim-worker
                               inv_scale: np.float32) -> None:
         """Optimizer-worker task for one unit's subgroups [lo, hi):
         subgroup *k+1*'s (master, m, v) streams into the staging arena
@@ -1167,7 +1168,7 @@ class OffloadSession:
             self._adam_abort(commits, resume_at=hi)
             raise
 
-    def _adam_abort(self, commits: list[Future], *, resume_at: int) -> None:
+    def _adam_abort(self, commits: list[Future], *, resume_at: int) -> None:  # thread: optim-worker
         """Failure path of a unit task: wait out this unit's commits
         (each releases its own buffer), release every issued-but-never-
         computed staging buffer, and reset the issue counter to
@@ -1176,10 +1177,9 @@ class OffloadSession:
         fail fast without ever issuing again — nothing is re-issued until
         the next step resets the pipeline wholesale."""
         for commit in commits:
-            try:
+            # the buffer was released in commit's finally
+            with contextlib.suppress(BaseException):
                 commit.result()
-            except BaseException:
-                pass    # the buffer was released in commit's finally
         while self._adam_inflight:
             _idx, staged_fut = self._adam_inflight.popleft()
             try:
@@ -1189,13 +1189,17 @@ class OffloadSession:
             self.optimizer.discard_staged(staged)
         self._adam_issued = resume_at
 
-    def _snapshot_optim_io(self) -> None:
-        # queued after a step's last OptimStepOp: the completed-step ledger
-        self._optim_io_completed = self.optimizer.last_io_bytes
+    def _snapshot_optim_io(self) -> None:  # thread: optim-worker
+        # queued after a step's last OptimStepOp: the completed-step ledger.
+        # Locked: train_step reads it from the executor thread while this
+        # worker task may still be landing the previous step's snapshot.
+        io = self.optimizer.last_io_bytes
+        with self._optim_lock:
+            self._optim_io_completed = io
 
     # -- workloads -----------------------------------------------------------
 
-    def train_step(self, tokens: np.ndarray, labels: np.ndarray) -> dict:
+    def train_step(self, tokens: np.ndarray, labels: np.ndarray) -> dict:  # thread: executor
         """One streamed training step; the whole pipeline — forward,
         backward, overflow screen, host Adam — executes as the train plan.
 
@@ -1218,14 +1222,17 @@ class OffloadSession:
 
         ssd_wait = self.swapper.stats.wait_seconds - wait0
         h2d_wait = self._ostats.h2d_wait_seconds - o0["h2d_wait_seconds"]
+        if self._optim_worker is not None:
+            with self._optim_lock:
+                optim_io = self._optim_io_completed
+        else:
+            optim_io = self.optimizer.last_io_bytes
         self.metrics = {
             "loss": float(state.loss),
             "overflowed": state.overflowed,
             "applied": state.apply,
             "loss_scale": self.scaler.scale,
-            "optimizer_io_bytes": (self._optim_io_completed
-                                   if self._optim_worker is not None
-                                   else self.optimizer.last_io_bytes),
+            "optimizer_io_bytes": optim_io,
             "peak_host_bytes": self.tracker.peak_allocated,
             # compute-thread stall obtaining device weights at FetchOps —
             # read wait + H2D inline (sync) or staged-future wait (overlap
@@ -1331,7 +1338,7 @@ class OffloadSession:
         else:
             if lengths is None or len(lengths) != len(slots):
                 raise ValueError("joiner prefill needs lengths, one per slot")
-            for s, n in zip(slots, lengths):
+            for s, n in zip(slots, lengths, strict=True):
                 if s not in kv.active or kv.slot_length(s) != 0:
                     raise RuntimeError(
                         f"slot {s} is not a freshly joined empty slot")
@@ -1340,7 +1347,7 @@ class OffloadSession:
             # per-row last valid position; non-joiner rows read position 0
             # (their logits rows are discarded by the caller)
             pos = np.zeros(spec.batch, np.int32)
-            for s, n in zip(slots, lengths):
+            for s, n in zip(slots, lengths, strict=True):
                 pos[s] = n - 1
             last = jnp.asarray(pos)
         s_bucket = spec.bucket_len(t0)
@@ -1354,7 +1361,7 @@ class OffloadSession:
         if slots is None:
             kv.set_length(t0)
         else:
-            for s, n in zip(slots, lengths):
+            for s, n in zip(slots, lengths, strict=True):
                 kv.set_slot_length(s, n)
         return np.asarray(state.logits)[:, 0]
 

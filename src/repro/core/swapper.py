@@ -80,17 +80,18 @@ class ParameterSwapper:
         self.store = store
         self.pool = pool
         self.class_of = class_of or {}
-        self.stats = SwapStats()
-        self._inflight: dict[str, FetchTicket] = {}
+        self.stats = SwapStats()                    # guarded-by: _lock
+        self._inflight: dict[str, FetchTicket] = {}  # guarded-by: _lock
         # keys whose SSD pread has not completed yet (count per key):
         # unlike _inflight — which claim() pops while the read may still
         # be copying — this follows the read future itself, so the
         # stale-read write guard covers the claimed-but-still-reading
         # window too
-        self._reading: dict[str, int] = {}
+        self._reading: dict[str, int] = {}          # guarded-by: _lock
         self._lock = threading.Lock()
 
-    def _read_done(self, key: str) -> None:
+    def _read_done(self, key: str) -> None:  # thread: any
+        # (store-worker completion callback, or the failed-issue unwind)
         with self._lock:
             n = self._reading.get(key, 0) - 1
             if n > 0:
@@ -108,31 +109,46 @@ class ParameterSwapper:
                 f"no shape class registered for {key!r}; pass class_name=") from None
 
     def prefetch(self, key: str, dtype, shape, *,
-                 class_name: str | None = None) -> FetchTicket:
-        """Queue an async read of ``key`` into a pool slot; idempotent."""
+                 class_name: str | None = None
+                 ) -> FetchTicket:  # thread: executor, h2d-worker
+        """Queue an async read of ``key`` into a pool slot; idempotent.
+
+        The h2d-worker role covers :meth:`claim`'s fallback issue on the
+        staging thread; every structure touched here is lock-guarded, so
+        the two roles may issue concurrently for different keys."""
         with self._lock:
             if key in self._inflight:
                 return self._inflight[key]
         cls = self._shape_class(key, class_name)
         nbytes = int(np.dtype(dtype).itemsize * np.prod(shape, dtype=np.int64))
         buf = self.pool.acquire(cls, nbytes, tag=key)  # may block = backpressure
-        out = buf.view(dtype, shape)
-        with self._lock:
-            self._reading[key] = self._reading.get(key, 0) + 1
-        future = self.store.read_async(key, out)
-        future.add_done_callback(lambda _f: self._read_done(key))
+        try:
+            out = buf.view(dtype, shape)
+            with self._lock:
+                self._reading[key] = self._reading.get(key, 0) + 1
+            try:
+                future = self.store.read_async(key, out)
+            except BaseException:
+                self._read_done(key)   # no read issued: undo the guard count
+                raise
+            future.add_done_callback(lambda _f: self._read_done(key))
+        except BaseException:
+            # Failed issue: nothing owns the slot yet — release it here or
+            # it is checked out of the pool for the rest of the session.
+            buf.release()
+            raise
         ticket = FetchTicket(key, buf, future, dtype, shape)
         with self._lock:
             self._inflight[key] = ticket
             self.stats.n_prefetches += 1
         return ticket
 
-    def in_flight(self, key: str) -> bool:
+    def in_flight(self, key: str) -> bool:  # thread: any
         """True if an issued read for ``key`` has not been consumed yet."""
         with self._lock:
             return key in self._inflight
 
-    def assert_not_in_flight(self, key: str) -> None:
+    def assert_not_in_flight(self, key: str) -> None:  # thread: any
         """Stale-read guard for store writers (the Adam commit's
         compute-weight write path): a write to ``key`` while a prefetched
         read of it is still copying would race the in-flight ``pread``
@@ -152,7 +168,7 @@ class ParameterSwapper:
 
     def claim(self, key: str, dtype, shape, *,
               class_name: str | None = None
-              ) -> tuple[FetchTicket, bool, bool]:
+              ) -> tuple[FetchTicket, bool, bool]:  # thread: executor, h2d-worker
         """Issue half of a split :meth:`get`: take ownership of the
         in-flight ticket (issuing a fallback read if none) WITHOUT waiting.
 
@@ -172,7 +188,7 @@ class ParameterSwapper:
         return ticket, hit, fallback
 
     def record_get(self, *, hit: bool, fallback: bool,
-                   wait_seconds: float) -> None:
+                   wait_seconds: float) -> None:  # thread: any
         """Account one completed (claim, wait) pair — from any thread."""
         with self._lock:
             self.stats.n_gets += 1
@@ -181,7 +197,7 @@ class ParameterSwapper:
             self.stats.wait_seconds += wait_seconds
 
     def get(self, key: str, dtype, shape, *,
-            class_name: str | None = None) -> FetchTicket:
+            class_name: str | None = None) -> FetchTicket:  # thread: executor
         """Fetch (prefetched or not) and wait for the data to be resident."""
         t0 = time.perf_counter()
         ticket, hit, fallback = self.claim(key, dtype, shape,
@@ -197,7 +213,7 @@ class ParameterSwapper:
                         wait_seconds=time.perf_counter() - t0)
         return ticket
 
-    def drain(self) -> None:
+    def drain(self) -> None:  # thread: executor
         """Wait out and release everything in flight (error paths/tests)."""
         with self._lock:
             tickets = list(self._inflight.values())

@@ -142,7 +142,8 @@ def load_records(out_dir: str, mesh: str) -> list[dict]:
     mdir = os.path.join(out_dir, mesh)
     for f in sorted(os.listdir(mdir)):
         if f.endswith(".json"):
-            recs.append(json.load(open(os.path.join(mdir, f))))
+            with open(os.path.join(mdir, f)) as fh:
+                recs.append(json.load(fh))
     return recs
 
 

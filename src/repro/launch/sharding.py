@@ -36,7 +36,7 @@ def greedy_spec(mesh, shape, dim_prefs) -> P:
     reusing any mesh axis across dims."""
     used: set[str] = set()
     parts = []
-    for dim, prefs in zip(shape, dim_prefs):
+    for dim, prefs in zip(shape, dim_prefs, strict=False):
         chosen = None
         for cand in prefs or ():
             names = cand if isinstance(cand, tuple) else (cand,)

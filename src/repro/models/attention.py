@@ -244,7 +244,7 @@ def gqa_step(params, x, cfg, k_cache, v_cache, cache_len, *, window=None,
 
     out = (jnp.exp(s_new - m) / denom).astype(x.dtype) * \
         _repeat_kv(v_new, n_rep).transpose(0, 2, 1, 3)    # (B,H,1,D)
-    for sc, vv_c in zip(score_chunks, v_chunks):
+    for sc, vv_c in zip(score_chunks, v_chunks, strict=True):
         p_c = (jnp.exp(sc - m) / denom).astype(x.dtype)
         out = out + jnp.einsum("bhqk,bkhd->bhqd", p_c, vv_c)
     out = out.transpose(0, 2, 1, 3).astype(x.dtype)       # (B,1,H,D)
@@ -340,7 +340,7 @@ def gqa_verify(params, x, cfg, k_cache, v_cache, cache_len, *, window=None,
 
     out = (jnp.exp(s_self - m) / denom).astype(x.dtype) * \
         _repeat_kv(v_new, n_rep).transpose(0, 2, 1, 3)   # (B,H,K,D)
-    for sc, vv_c in zip(score_chunks, v_chunks):
+    for sc, vv_c in zip(score_chunks, v_chunks, strict=True):
         p_c = (jnp.exp(sc - m) / denom).astype(x.dtype)
         out = out + jnp.einsum("bhqk,bkhd->bhqd", p_c, vv_c)
     out = out.transpose(0, 2, 1, 3).astype(x.dtype)      # (B,K,H,D)

@@ -49,10 +49,8 @@ def causal_conv1d(x, w, *, state=None):
     (y, new_state).
     """
     k = w.shape[0]
-    if state is None:
-        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
-    else:
-        pad = state.astype(x.dtype)
+    pad = (jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+           if state is None else state.astype(x.dtype))
     xp = jnp.concatenate([pad, x], axis=1)               # (B, L+K-1, C)
     wc = w.astype(x.dtype)
     y = sum(xp[:, i:i + x.shape[1], :] * wc[i] for i in range(k))

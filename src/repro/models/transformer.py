@@ -157,7 +157,7 @@ def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
     for j in range(p):
         gkeys = jax.random.split(keys[2 + j], n_groups)
         stacked = jax.vmap(
-            lambda k: init_layer_params(k, cfg, j, dtype))(gkeys)
+            lambda k, j=j: init_layer_params(k, cfg, j, dtype))(gkeys)
         groups.append(stacked)
     params["groups"] = groups
     if cfg.mtp:
@@ -248,7 +248,8 @@ def forward(cfg: ModelConfig, params, h, *, prefix_len: int = 0,
         # the fwd unroll setting.
         n_groups = jax.tree.leaves(params["groups"])[0].shape[0]
         for g in range(n_groups):
-            gparams = jax.tree.map(lambda a: a[g], tuple(params["groups"]))
+            gparams = jax.tree.map(lambda a, g=g: a[g],
+                                   tuple(params["groups"]))
             carry, _ = body(carry, gparams)
         h, aux = carry
     else:
@@ -405,14 +406,14 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, cache_len,
         n_groups = jax.tree.leaves(params["groups"])[0].shape[0]
         new_cache = cache
         for g in range(n_groups):
-            xs = jax.tree.map(lambda a: a[g],
+            xs = jax.tree.map(lambda a, g=g: a[g],
                               (tuple(params["groups"]), cache))
             h, newc = group_body(h, xs)
             # write back along the (unsharded) leading layer axis — a
             # jnp.stack here would gather the seq-sharded caches and
             # contaminate the calibration measurement
             new_cache = jax.tree.map(
-                lambda full, one: full.at[g].set(one), new_cache, newc)
+                lambda full, one, g=g: full.at[g].set(one), new_cache, newc)
     else:
         h, new_cache = jax.lax.scan(group_body, h,
                                     (tuple(params["groups"]), cache))

@@ -82,7 +82,8 @@ def encode(cfg: ModelConfig, params, frames, *, unroll: bool = False):
     ckpt = jax.checkpoint(body)
     if unroll:
         for g in range(cfg.encoder_layers):
-            h, _ = ckpt(h, jax.tree.map(lambda a: a[g], params["enc_layers"]))
+            h, _ = ckpt(h, jax.tree.map(lambda a, g=g: a[g],
+                                        params["enc_layers"]))
     else:
         h, _ = jax.lax.scan(ckpt, h, params["enc_layers"])
     return rms_norm(h, params["enc_final_norm"], cfg.rms_eps)
@@ -109,7 +110,8 @@ def decoder_forward(cfg: ModelConfig, params, tokens, memory,
     ckpt = jax.checkpoint(body)
     if unroll:
         for g in range(cfg.n_layers):
-            h, _ = ckpt(h, jax.tree.map(lambda a: a[g], params["dec_layers"]))
+            h, _ = ckpt(h, jax.tree.map(lambda a, g=g: a[g],
+                                        params["dec_layers"]))
     else:
         h, _ = jax.lax.scan(ckpt, h, params["dec_layers"])
     return rms_norm(h, params["final_norm"], cfg.rms_eps)
@@ -185,7 +187,7 @@ def whisper_decode_step(cfg: ModelConfig, params, cache, tokens, cache_len,
     if unroll:
         new_k, new_v = cache["k"], cache["v"]
         for g in range(cfg.n_layers):
-            h, (nk, nv) = body(h, jax.tree.map(lambda a: a[g], xs_all))
+            h, (nk, nv) = body(h, jax.tree.map(lambda a, g=g: a[g], xs_all))
             # layer-axis write-back (a stack would gather sharded caches)
             new_k = new_k.at[g].set(nk)
             new_v = new_v.at[g].set(nv)

@@ -154,7 +154,7 @@ def given(*arg_strategies: _Strategy, **kw_strategies: _Strategy):
         sig = inspect.signature(fn)
         names = list(sig.parameters)
         bound = dict(zip(names[len(names) - len(arg_strategies):],
-                         arg_strategies))
+                         arg_strategies, strict=True))
         bound.update(kw_strategies)
         unknown = set(bound) - set(names)
         if unknown:

@@ -54,6 +54,45 @@ def worker_thread_leak_guard():
         f"every OffloadSession, TensorStore, and SerialWorker it opened")
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--lock-witness", action="store_true", default=False,
+        help="wrap threading.Lock/Condition in the dynamic lock-order "
+             "witness (repro.core.lock_witness): record the acquisition "
+             "graph across the whole run and fail the first test whose "
+             "execution completes a lock-order cycle")
+
+
+def pytest_configure(config):
+    if config.getoption("--lock-witness"):
+        # Install before any test module imports the offload stack so
+        # every lock the pipeline creates is witnessed.  (Locks created
+        # during this import itself — e.g. the module-level
+        # GLOBAL_TRACKER — predate the swap and are invisible.)
+        from repro.core import lock_witness
+        lock_witness.install()
+
+
+def pytest_unconfigure(config):
+    if config.getoption("--lock-witness"):
+        from repro.core import lock_witness
+        lock_witness.uninstall()
+
+
+@pytest.fixture(autouse=True)
+def lock_order_witness(request):
+    """With ``--lock-witness``: check the accumulated acquisition graph
+    after every test.  Edges accumulate across tests on purpose — an
+    inversion whose two halves run in *different* tests is still a real
+    deadlock in any process that exercises both paths."""
+    if not request.config.getoption("--lock-witness"):
+        yield
+        return
+    from repro.core import lock_witness
+    yield
+    lock_witness.check()
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

@@ -1,0 +1,135 @@
+"""The concurrency-contract static analyzer (:mod:`tools.analyze`):
+fixture corpus (must-flag / must-pass), suppression scoping, baseline
+round-trip, and the src/repro clean gate."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))  # `tools` lives at the repo root
+
+from tools.analyze import Finding, Project, run_checkers  # noqa: E402
+
+FIXTURES = REPO / "tools" / "analyze" / "fixtures"
+
+# filename -> exact multiset of checker ids the corpus file must produce
+MUST_FLAG = {
+    "evict_during_copy.py": ["lock-blocking", "lock-blocking"],
+    "pool_oversubscription.py": ["lock-discipline", "lock-discipline",
+                                 "resource-lifecycle"],
+    "affinity_cross_call.py": ["thread-affinity", "thread-affinity"],
+    "holds_contract.py": ["lock-blocking"],
+    "annotations.py": ["annotation", "annotation"],
+}
+
+
+def _findings(path: Path) -> list[Finding]:
+    return run_checkers(Project.load([path], root=REPO))
+
+
+def test_corpus_is_complete():
+    present = {p.name for p in (FIXTURES / "must_flag").glob("*.py")}
+    assert present == set(MUST_FLAG), (
+        "every must_flag fixture needs an expectation here (and vice versa)")
+
+
+@pytest.mark.parametrize("name", sorted(MUST_FLAG))
+def test_must_flag(name):
+    found = _findings(FIXTURES / "must_flag" / name)
+    assert sorted(f.checker for f in found) == sorted(MUST_FLAG[name]), (
+        "\n".join(f.format() for f in found) or "(no findings)")
+
+
+@pytest.mark.parametrize("path", sorted(
+    (FIXTURES / "must_pass").glob("*.py")), ids=lambda p: p.name)
+def test_must_pass(path):
+    found = _findings(path)
+    assert not found, "\n".join(f.format() for f in found)
+
+
+# -- the two historical PR 5 races, pinned by message ------------------------
+
+def test_evict_during_copy_race_is_store_io_under_lock():
+    found = _findings(FIXTURES / "must_flag" / "evict_during_copy.py")
+    spill = [f for f in found if f.symbol == "EvictingCache.spill"]
+    assert len(spill) == 1
+    assert "store I/O" in spill[0].message
+    assert "self._lock" in spill[0].message
+
+
+def test_pool_oversubscription_race_is_leak_plus_unguarded_counter():
+    found = _findings(FIXTURES / "must_flag" / "pool_oversubscription.py")
+    by = {f.checker: f for f in found}
+    assert "can leak" in by["resource-lifecycle"].message
+    assert "self.pool.acquire" in by["resource-lifecycle"].message
+    assert "without holding self._lock" in by["lock-discipline"].message
+    # both declaration syntaxes produced a finding: trailing comment
+    # (in_flight) and the GUARDED_BY registry (pending)
+    fields = {f.message.split()[2] for f in found
+              if f.checker == "lock-discipline"}
+    assert fields == {"self.in_flight", "self.pending"}
+
+
+# -- suppression scoping ------------------------------------------------------
+
+def test_suppression_is_checker_scoped(tmp_path):
+    """An ignore[] for one checker must not silence another on the same
+    line: strip the lifecycle suppression's checker id to lock-blocking
+    and the lifecycle finding reappears."""
+    src = (FIXTURES / "must_pass" / "suppressed.py").read_text()
+    broken = src.replace("ignore[resource-lifecycle]", "ignore[lock-blocking]")
+    p = tmp_path / "mis_suppressed.py"
+    p.write_text(broken)
+    found = _findings(p)
+    assert [f.checker for f in found] == ["resource-lifecycle"]
+
+
+# -- finding identity ---------------------------------------------------------
+
+def test_fingerprint_ignores_line_numbers():
+    a = Finding("m.py", 10, "lock-blocking", "C.f", "blocking call X")
+    b = Finding("m.py", 99, "lock-blocking", "C.f", "blocking call X")
+    c = Finding("m.py", 10, "lock-blocking", "C.f", "blocking call Y")
+    assert a.fingerprint == b.fingerprint
+    assert a.fingerprint != c.fingerprint
+
+
+# -- CLI: baseline round-trip and the clean-tree gate -------------------------
+
+def _run_cli(*argv, cwd=REPO):
+    return subprocess.run(
+        [sys.executable, "-m", "tools.analyze", *argv],
+        cwd=cwd, capture_output=True, text=True)
+
+
+def test_cli_flags_corpus_and_baseline_accepts_it(tmp_path):
+    target = str(FIXTURES / "must_flag" / "evict_during_copy.py")
+    baseline = tmp_path / "baseline.json"
+
+    raw = _run_cli(target, "--no-baseline")
+    assert raw.returncode == 1, raw.stdout + raw.stderr
+    assert "lock-blocking" in raw.stdout
+
+    wrote = _run_cli(target, "--baseline", str(baseline), "--write-baseline")
+    assert wrote.returncode == 0, wrote.stdout + wrote.stderr
+    assert len(json.loads(baseline.read_text())["findings"]) == 2
+
+    accepted = _run_cli(target, "--baseline", str(baseline))
+    assert accepted.returncode == 0, accepted.stdout + accepted.stderr
+    assert "2 baselined" in accepted.stderr
+
+
+def test_src_repro_is_clean():
+    """The acceptance gate: zero unsuppressed findings in the shipped
+    pipeline, without leaning on the committed baseline (which is empty
+    and must stay that way)."""
+    res = _run_cli("src/repro", "--no-baseline")
+    assert res.returncode == 0, res.stdout + res.stderr
+    committed = json.loads(
+        (REPO / "tools" / "analyze" / "baseline.json").read_text())
+    assert committed["findings"] == []

@@ -24,7 +24,8 @@ def test_pytree_roundtrip_direct(tmp_path):
     save_pytree(store, "ckpt0", tree)
     like = jax.eval_shape(lambda: tree)
     restored = load_pytree(store, "ckpt0", like)
-    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored),
+                    strict=True):
         np.testing.assert_array_equal(np.asarray(a).view(np.uint8),
                                       np.asarray(b).view(np.uint8))
     store.close()

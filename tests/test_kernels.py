@@ -63,7 +63,7 @@ def test_adam_shape_step_sweep(shape, step, rng):
     kw = dict(lr=3e-3, weight_decay=0.05)
     out_k = ops.fused_adam(p, g, m, v, step, **kw)
     out_r = ref.ref_fused_adam(p, g, m, v, step, **kw)
-    for a, b in zip(out_k[:3], out_r[:3]):
+    for a, b in zip(out_k[:3], out_r[:3], strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=2e-5, atol=1e-6)
     np.testing.assert_array_equal(

@@ -173,7 +173,7 @@ def test_concurrent_small_writes_round_robin_no_lost_updates(
         by_dev.setdefault(extents[0].device, []).append(extents[0])
     for extents in by_dev.values():
         extents.sort(key=lambda e: e.offset)
-        for a, b in zip(extents, extents[1:]):
+        for a, b in zip(extents, extents[1:], strict=False):
             assert a.offset + a.length <= b.offset
     for k, v in data.items():
         np.testing.assert_array_equal(eng.read_new(k, np.float32, v.shape), v)

@@ -296,7 +296,7 @@ def test_kv_eviction_at_page_boundary_appends(tmp_store_root):
     toks = [(rng.standard_normal((1, 1, 1, 2), dtype=np.float32),
              rng.standard_normal((1, 1, 1, 2), dtype=np.float32))
             for _ in range(3)]
-    for t, (k1, v1) in enumerate(toks):        # positions 0, 1, then 2:
+    for _t, (k1, v1) in enumerate(toks):       # positions 0, 1, then 2:
         for u in ("a", "b"):                   # 2 -> second page of each
             kv.append(u, k1, v1)
         kv.advance()
@@ -466,10 +466,10 @@ def test_use_cache_requires_decode_spec(tmp_store_root):
 
 def test_decoder_rejects_session_plus_decode(tmp_store_root):
     with OffloadSession(_model(), memascend_policy(tmp_store_root, lr=1e-3),
-                        mode="serve") as s:
-        with pytest.raises(ValueError, match="decode="):
-            OffloadedDecoder(None, None, session=s,
-                             decode=DecodeSpec(batch=1, max_seq=8, bucket=8))
+                        mode="serve") as s, \
+            pytest.raises(ValueError, match="decode="):
+        OffloadedDecoder(None, None, session=s,
+                         decode=DecodeSpec(batch=1, max_seq=8, bucket=8))
 
 
 def test_decode_spec_validation():

@@ -31,6 +31,7 @@ def test_streamed_matches_reference(tmp_store_root, rng):
     ref = reference_adam(w0, grads, cfg)
     got = eng.read_new("w.master", np.float32, w0.shape)
     np.testing.assert_allclose(got, ref, rtol=1e-6, atol=1e-7)
+    opt.close()   # shuts the write-back executor down (leak guard)
     eng.close()
 
 
@@ -53,6 +54,8 @@ def test_bf16_state_mode_tracks_fp32(tmp_store_root, rng):
     assert err < 0.05
     # and cut the I/O volume roughly in half (paper Fig. 20)
     assert o16.last_io_bytes < 0.6 * o32.last_io_bytes
+    o32.close()
+    o16.close()
     eng.close()
 
 
@@ -69,6 +72,7 @@ def test_io_accounting_matches_formula(tmp_store_root, rng):
         s = cfg.state_np_dtype.itemsize
         c = cfg.compute_np_dtype.itemsize
         assert opt.last_io_bytes == n * (6 * s + c)
+        opt.close()
     eng.close()
 
 
@@ -84,6 +88,7 @@ def test_skipped_step_changes_nothing(tmp_store_root, rng):
     opt.begin_step()   # begun but no subgroup streamed = skipped
     np.testing.assert_array_equal(
         eng.read_new("w.master", np.float32, w0.shape), before)
+    opt.close()
     eng.close()
 
 

@@ -83,7 +83,7 @@ def test_partition_or_equals_whole_buffer(n, dtype, kind, where, fracs,
     whole = flat_overflow_check(g, fused=True, tracker=t)
     cuts = sorted({0, n, *(int(f * n) for f in fracs)})
     or_of_regions = False
-    for lo, hi in zip(cuts, cuts[1:]):
+    for lo, hi in zip(cuts, cuts[1:], strict=False):
         or_of_regions = or_of_regions or check_region(
             g, lo, hi, fused=True, tracker=t)
     assert or_of_regions == whole == _numpy_verdict(g)

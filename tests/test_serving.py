@@ -83,7 +83,7 @@ def test_join_retire_refcount_balance(tmp_store_root):
     assert kv.free_slots == 3 and not kv.active
     assert pool.in_use_payload == 0
     rng = np.random.default_rng(0)
-    for cycle in range(6):
+    for _cycle in range(6):
         s = kv.join()
         assert s is not None
         k = rng.standard_normal((3, 4, 1, 2), dtype=np.float32)
@@ -192,7 +192,7 @@ def test_continuous_matches_solo_greedy_with_ragged_arrivals(tmp_store_root):
         ref = _solo_reference(tmp_store_root + f"s{i}", r)
         assert r.output == ref, f"request {r.rid} diverged from solo decode"
         assert r.metrics.tokens_out == len(ref)
-    for r1, r2 in zip(report.requests, report2.requests):
+    for r1, r2 in zip(report.requests, report2.requests, strict=True):
         assert r1.output == r2.output                  # runs are deterministic
 
 
@@ -247,7 +247,7 @@ def test_static_mode_matches_continuous_tokens(tmp_store_root):
         cont = _engine(dec, tick=0.005).run(_requests(specs))
         stat = _engine(dec, tick=0.005).run(_requests(specs), mode="static")
     assert all(r.state is RequestState.DONE for r in stat.requests)
-    for rc, rs in zip(cont.requests, stat.requests):
+    for rc, rs in zip(cont.requests, stat.requests, strict=True):
         assert rc.output == rs.output
 
 

@@ -23,7 +23,8 @@ MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
 
 def _check_spec(spec, shape, mesh):
     used = []
-    for dim, part in zip(shape, tuple(spec) + (None,) * len(shape)):
+    for dim, part in zip(shape, tuple(spec) + (None,) * len(shape),
+                         strict=False):
         if part is None:
             continue
         names = part if isinstance(part, tuple) else (part,)
@@ -46,7 +47,7 @@ def test_param_specs_valid(arch, mesh):
     leaves_shape = jax.tree.leaves(params_shape)
     leaves_spec = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
     assert len(leaves_shape) == len(leaves_spec)
-    for sds, spec in zip(leaves_shape, leaves_spec):
+    for sds, spec in zip(leaves_shape, leaves_spec, strict=True):
         _check_spec(spec, sds.shape, mesh)
 
 
@@ -76,7 +77,8 @@ def test_cache_specs_valid(arch):
     specs = shd.cache_specs(cfg, cache_sds, MESH)
     for sds, spec in zip(jax.tree.leaves(cache_sds),
                          jax.tree.leaves(specs,
-                                         is_leaf=lambda x: isinstance(x, P))):
+                                         is_leaf=lambda x: isinstance(x, P)),
+                         strict=True):
         _check_spec(spec, sds.shape, MESH)
 
 

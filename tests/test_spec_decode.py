@@ -393,10 +393,10 @@ def test_generate_spec_rejects_uncached(tmp_store_root):
     with OffloadedDecoder(_model(), memascend_policy(tmp_store_root,
                                                      lr=1e-3),
                           decode=DecodeSpec(batch=1, max_seq=32,
-                                            bucket=8)) as dec:
-        with pytest.raises(ValueError, match="cached"):
-            dec.generate(np.ones((1, 4), np.int32), 4, use_cache=False,
-                         spec=SpecConfig())
+                                            bucket=8)) as dec, \
+            pytest.raises(ValueError, match="cached"):
+        dec.generate(np.ones((1, 4), np.int32), 4, use_cache=False,
+                     spec=SpecConfig())
 
 
 class _FakeClock:
@@ -437,7 +437,7 @@ def test_serving_engine_spec_matches_plain(tmp_store_root):
                              sleep=clk.sleep).run(reqs())
         assert dec.spec_stats is not None
     assert len(fast.completed) == len(plain.completed) == 4
-    for rp, rs in zip(plain.completed, fast.completed):
+    for rp, rs in zip(plain.completed, fast.completed, strict=True):
         assert rp.rid == rs.rid
         assert rp.output == rs.output
     assert fast.spec_rounds > 0

@@ -1,0 +1,2 @@
+"""Repo tooling: doc checks (`check_docs.py`) and the concurrency-contract
+static analyzer (`python -m tools.analyze`)."""

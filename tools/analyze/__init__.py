@@ -1,0 +1,30 @@
+"""Concurrency-contract static analyzer for the offload pipeline.
+
+The pipeline's safety rules — which fields a lock guards, which thread a
+function may run on, what must never block while a lock is held, and which
+resources must reach ``release()`` on every path — used to live only in
+docstrings.  This package turns them into machine-checked annotations:
+
+``# guarded-by: _lock``
+    trailing a ``self.field = ...`` assignment: the field may only be
+    touched while ``self._lock`` is held.
+``# thread: executor, h2d-worker``
+    on a ``def`` line: the function only runs on those pipeline threads.
+``# analyze: holds(_lock)``
+    on a ``def`` line: the function is always entered with the lock held.
+``# analyze: blocking``
+    on a ``def`` line: calling this function can block (checker 2 treats
+    a call to it like store I/O).
+``# analyze: pre-share``
+    on a ``def`` line: runs before the object is visible to other
+    threads (construction helpers) — exempt from lock discipline.
+``# analyze: ignore[checker-id]``
+    trailing any line: suppress findings from that checker on that line.
+
+See docs/ANALYSIS.md for the full vocabulary and checker semantics.
+Run with ``python -m tools.analyze src/repro``.
+"""
+
+from .core import Finding, Project, SourceModule, run_checkers
+
+__all__ = ["Finding", "Project", "SourceModule", "run_checkers"]

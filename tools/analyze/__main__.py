@@ -1,0 +1,76 @@
+"""CLI: ``python -m tools.analyze [paths...]``.
+
+Exit status is 0 when every finding is either inline-suppressed
+(``# analyze: ignore[checker]``) or listed in the committed baseline
+(``tools/analyze/baseline.json``), 1 otherwise.  ``--write-baseline``
+refreshes the baseline from the current findings; ``--no-baseline``
+ignores it (shows the analyzer's raw view)."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from .core import Project, run_checkers
+
+_HERE = Path(__file__).resolve().parent
+DEFAULT_BASELINE = _HERE / "baseline.json"
+
+
+def load_baseline(path: Path) -> set[str]:
+    if not path.exists():
+        return set()
+    data = json.loads(path.read_text())
+    return set(data.get("findings", []))
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.analyze",
+        description="Concurrency-contract static analyzer "
+                    "(lock discipline, blocking-under-lock, thread "
+                    "affinity, resource lifecycle).")
+    parser.add_argument("paths", nargs="*", default=["src/repro"],
+                        help="files or directories to analyze "
+                             "(default: src/repro)")
+    parser.add_argument("--root", default=".",
+                        help="repo root for relative paths in output")
+    parser.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE,
+                        help="baseline file of accepted finding "
+                             "fingerprints")
+    parser.add_argument("--no-baseline", action="store_true",
+                        help="report findings even if baselined")
+    parser.add_argument("--write-baseline", action="store_true",
+                        help="accept all current findings into the "
+                             "baseline file")
+    args = parser.parse_args(argv)
+
+    root = Path(args.root)
+    project = Project.load([Path(p) for p in args.paths], root)
+    findings = run_checkers(project)
+
+    if args.write_baseline:
+        args.baseline.write_text(json.dumps(
+            {"version": 1,
+             "findings": sorted(f.fingerprint for f in findings)},
+            indent=2) + "\n")
+        print(f"wrote {len(findings)} fingerprint(s) to {args.baseline}")
+        return 0
+
+    baseline = set() if args.no_baseline else load_baseline(args.baseline)
+    fresh = [f for f in findings if f.fingerprint not in baseline]
+    baselined = len(findings) - len(fresh)
+
+    for f in fresh:
+        print(f.format())
+    n_files = len(project.modules)
+    tail = f" ({baselined} baselined)" if baselined else ""
+    print(f"tools.analyze: {len(fresh)} finding(s) in {n_files} "
+          f"file(s){tail}", file=sys.stderr)
+    return 1 if fresh else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

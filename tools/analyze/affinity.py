@@ -1,0 +1,155 @@
+"""Checker 3 — thread affinity: a function annotated ``# thread: r1, r2``
+may only be called (directly, or transitively through unannotated
+project functions) from functions whose roles are a subset of
+``{r1, r2}``.  ``# thread: any`` marks a function callable from every
+role (fully locked / thread-safe).
+
+Receivers are resolved through ``self``, annotated parameters, annotated
+or constructor-assigned instance attributes, and simple local
+assignments — enough for the pipeline's call shapes
+(``state.kv.gather_window(...)``, ``self.swapper.claim(...)``).
+
+References that are *submitted* rather than called
+(``worker.submit(self._fn)``, ``functools.partial(fn, ...)``) are not
+call edges: the submission target's own annotation covers the body that
+eventually runs."""
+
+from __future__ import annotations
+
+import ast
+
+from .core import ClassInfo, Finding, FunctionInfo, Project
+
+
+def check(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    for mod in project.modules:
+        infos = list(mod.functions.values())
+        for ci in mod.classes.values():
+            infos.extend(ci.methods.values())
+        for fi in infos:
+            if fi.roles and "any" not in fi.roles:
+                findings.extend(_check_root(project, fi))
+    return findings
+
+
+def _check_root(project: Project, root: FunctionInfo) -> list[Finding]:
+    out: list[Finding] = []
+    visited: set[str] = {root.qualname}
+    stack = [root]
+    while stack:
+        fi = stack.pop()
+        for node, callee in _calls_in(project, fi):
+            if callee is None or callee.qualname in visited:
+                continue
+            if callee.roles is None:
+                # unannotated project function: the root's roles flow
+                # through it — keep walking its body
+                visited.add(callee.qualname)
+                stack.append(callee)
+                continue
+            if "any" in callee.roles or root.roles <= callee.roles:
+                continue
+            if fi.module.suppressed(node.lineno, "thread-affinity"):
+                continue
+            via = ("" if fi is root
+                   else f" (reached via {fi.qualname})")
+            out.append(Finding(
+                fi.module.rel, node.lineno, "thread-affinity",
+                root.qualname,
+                f"calls {callee.qualname} (thread: "
+                f"{', '.join(sorted(callee.roles))}) from a context that "
+                f"may run on {', '.join(sorted(root.roles))}{via}"))
+    return out
+
+
+def _calls_in(project: Project, fi: FunctionInfo):
+    """(call-node, resolved FunctionInfo|None) for every direct call in
+    the body, not descending into nested defs/lambdas (those run on
+    whatever thread eventually invokes them)."""
+    env = _build_env(project, fi)
+    for call in _toplevel_calls(fi.node):
+        yield call, _resolve(project, fi, env, call.func)
+
+
+def _toplevel_calls(fn: ast.AST):
+    todo = list(ast.iter_child_nodes(fn))
+    while todo:
+        node = todo.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        if isinstance(node, ast.Call):
+            yield node
+        todo.extend(ast.iter_child_nodes(node))
+
+
+def _build_env(project: Project,
+               fi: FunctionInfo) -> dict[str, ClassInfo]:
+    env: dict[str, ClassInfo] = {}
+    if fi.cls is not None:
+        env["self"] = fi.cls
+    args = fi.node.args
+    for a in (args.posonlyargs + args.args + args.kwonlyargs):
+        ci = _ann_class(project, a.annotation)
+        if ci is not None:
+            env[a.arg] = ci
+    # simple local inference: x = ClassName(...)  /  x = self.attr
+    for stmt in ast.walk(fi.node):
+        if not (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                and isinstance(stmt.targets[0], ast.Name)):
+            continue
+        name, value = stmt.targets[0].id, stmt.value
+        if (isinstance(value, ast.Call)
+                and isinstance(value.func, ast.Name)):
+            ci = project.resolve_class(value.func.id)
+            if ci is not None:
+                env.setdefault(name, ci)
+        elif isinstance(value, ast.Attribute):
+            ci = _expr_class(project, env, value)
+            if ci is not None:
+                env.setdefault(name, ci)
+    return env
+
+
+def _ann_class(project: Project, ann: ast.AST | None) -> ClassInfo | None:
+    from .core import _first_class_name
+    return project.resolve_class(_first_class_name(ann))
+
+
+def _attr_class(project: Project, ci: ClassInfo,
+                attr: str) -> ClassInfo | None:
+    seen: set[str] = set()
+    cur: ClassInfo | None = ci
+    while cur is not None and cur.name not in seen:
+        seen.add(cur.name)
+        if attr in cur.attr_types:
+            return project.resolve_class(cur.attr_types[attr])
+        cur = next((project.class_index[b] for b in cur.bases
+                    if b in project.class_index), None)
+    return None
+
+
+def _expr_class(project: Project, env: dict[str, ClassInfo],
+                node: ast.AST) -> ClassInfo | None:
+    if isinstance(node, ast.Name):
+        return env.get(node.id)
+    if isinstance(node, ast.Attribute):
+        base = _expr_class(project, env, node.value)
+        if base is not None:
+            return _attr_class(project, base, node.attr)
+    return None
+
+
+def _resolve(project: Project, fi: FunctionInfo,
+             env: dict[str, ClassInfo],
+             func: ast.AST) -> FunctionInfo | None:
+    if isinstance(func, ast.Name):
+        if project.resolve_class(func.id) is not None:
+            return None                       # constructor
+        return fi.module.functions.get(func.id)
+    if isinstance(func, ast.Attribute):
+        recv = _expr_class(project, env, func.value)
+        if recv is not None:
+            return project.lookup_method(recv, func.attr)
+    return None

@@ -1,0 +1,20 @@
+"""MUST-FLAG — thread affinity: the gradient writer calling an
+executor-only method, both directly and through an unannotated helper
+(the call-graph walk flows the root's roles through helpers it reaches).
+
+Expected findings: 2 × thread-affinity.
+"""
+
+
+class GradWriter:
+    def writer_loop(self):  # thread: writer
+        self.apply_update()              # must-flag: executor-only callee
+
+    def writer_entry(self):  # thread: writer
+        self._flush_helper()
+
+    def _flush_helper(self):
+        self.apply_update()              # must-flag: reached from writer_entry
+
+    def apply_update(self):  # thread: executor
+        pass

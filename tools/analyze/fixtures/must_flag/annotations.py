@@ -1,0 +1,13 @@
+"""MUST-FLAG — annotation validation: a thread role outside the
+documented pipeline vocabulary, and a ``GUARDED_BY`` registry entry
+naming a class the analyzer cannot find (typo'd registrations must not
+silently guard nothing).
+
+Expected findings: 2 × annotation.
+"""
+
+GUARDED_BY = {"NoSuchClass.count": "_lock"}
+
+
+def poll_device():  # thread: gpu-poller
+    pass

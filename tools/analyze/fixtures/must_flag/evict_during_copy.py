@@ -1,0 +1,34 @@
+"""MUST-FLAG — historical race #1 (PR 5): evict-during-copy.
+
+The paged KV cache's first spill path wrote the dirty page to the store
+while still holding the cache lock.  Every thread touching the cache
+meanwhile — the H2D stager refilling a neighbouring page, the executor
+appending a decode step — blocked behind a multi-millisecond SSD write,
+and with the store's backpressure in the loop the executor could wait on
+a writer that was waiting on the executor's own pinned slot.  The fix
+parks the page in ``_evicting`` and drops the lock around the write:
+see ``must_pass/evict_during_copy_fixed.py``.
+
+Expected findings: 2 × lock-blocking.
+"""
+
+import threading
+
+
+class EvictingCache:
+    """Distilled buggy shape: synchronous store I/O under the cache lock."""
+
+    def __init__(self, store, pool):
+        self._lock = threading.Lock()
+        self.store = store
+        self._pages = {}
+
+    def spill(self, key):
+        with self._lock:
+            page = self._pages.pop(key)
+            self.store.write(key, page)      # must-flag: store I/O under lock
+        return page
+
+    def wait_flush(self, fut):
+        with self._lock:
+            return fut.result()              # must-flag: future wait under lock

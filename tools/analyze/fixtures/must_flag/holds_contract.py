@@ -1,0 +1,21 @@
+"""MUST-FLAG — the ``# analyze: holds(_lock)`` companion rule: a
+holds-annotated method called without its lock.  The annotation is a
+precondition, not a suggestion — inside the callee the discipline walk
+starts with the lock held, so the call sites carry the obligation.
+
+Expected findings: 1 × lock-blocking.
+"""
+
+import threading
+
+
+class Ledger:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._total = 0      # guarded-by: _lock
+
+    def _add_locked(self, n):  # analyze: holds(_lock)
+        self._total += n
+
+    def record(self, n):
+        self._add_locked(n)              # must-flag: holds precondition unmet

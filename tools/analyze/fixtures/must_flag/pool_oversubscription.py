@@ -1,0 +1,37 @@
+"""MUST-FLAG — historical race #2 (PR 5): mid-read pool oversubscription.
+
+Prefetch checked a slot out of the pinned pool, then issued the store
+read; when the issue raised (missing key, saturated aio queue) the slot
+was never returned — repeated failures drained the pool and every later
+``acquire`` wedged in the capacity wait.  The in-flight counter was also
+bumped outside the lock, so the stale-read write guard could miss a
+concurrent read entirely.  Fix shape:
+``must_pass/pool_oversubscription_fixed.py``.
+
+One counter is declared with a trailing ``# guarded-by:`` comment, the
+other through the module-level ``GUARDED_BY`` registry, so this file
+also pins both declaration syntaxes.
+
+Expected findings: 1 × resource-lifecycle, 2 × lock-discipline.
+"""
+
+import threading
+
+GUARDED_BY = {"Prefetcher.pending": "_lock"}
+
+
+class Prefetcher:
+    def __init__(self, pool, store):
+        self.pool = pool
+        self.store = store
+        self._lock = threading.Lock()
+        self.in_flight = 0       # guarded-by: _lock
+        self.pending = 0         # registry-declared: see GUARDED_BY above
+
+    def prefetch(self, key, nbytes):
+        buf = self.pool.acquire("w", nbytes)     # must-flag: leaks if the
+        data = self.store.read(key)              # read raises at issue time
+        buf.write(data)
+        self.in_flight += 1                      # must-flag: unguarded write
+        self.pending += 1                        # must-flag: unguarded write
+        return buf

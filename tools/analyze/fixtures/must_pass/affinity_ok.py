@@ -1,0 +1,28 @@
+"""MUST-PASS — affinity shapes that must stay silent: role subsets,
+``any``-annotated (thread-safe) callees, references that are *submitted*
+rather than called, and nested completion callbacks (those run on
+whichever thread lands them; their bodies are not call edges of the
+enclosing function)."""
+
+
+class GradWriterOk:
+    def writer_loop(self):  # thread: writer
+        self.append_chunk()              # {writer} subset of its roles
+        self.locked_counter()            # any: callable from every role
+
+    def append_chunk(self):  # thread: executor, writer
+        pass
+
+    def locked_counter(self):  # thread: any
+        pass
+
+    def hand_off(self, worker):  # thread: writer
+        worker.submit(self.apply_update)     # a reference, not a call edge
+
+    def commit_async(self, fut):  # thread: writer
+        def _on_landed(_):
+            self.apply_update()              # runs on the landing thread
+        fut.add_done_callback(_on_landed)
+
+    def apply_update(self):  # thread: executor
+        pass

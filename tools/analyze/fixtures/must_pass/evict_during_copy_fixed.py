@@ -1,0 +1,27 @@
+"""MUST-PASS — the shipped fix for historical race #1: park the page in
+``_evicting`` (readers can still find it), drop the lock around the
+store write, reacquire to clear the parking entry — exactly the shape
+``SpillableKVCache._spill`` uses.  The lock-state walk tracks the
+explicit ``release()``/``acquire()`` toggles, so the write happens with
+no lock held and nothing flags."""
+
+import threading
+
+
+class EvictingCacheFixed:
+    def __init__(self, store, pool):
+        self._lock = threading.Lock()
+        self.store = store
+        self._pages = {}
+        self._evicting = {}
+
+    def spill(self, key):
+        self._lock.acquire()
+        page = self._pages.pop(key)
+        self._evicting[key] = page       # readers still see the page
+        self._lock.release()
+        self.store.write(key, page)      # no lock held: fine
+        self._lock.acquire()
+        del self._evicting[key]
+        self._lock.release()
+        return page

@@ -1,0 +1,18 @@
+"""MUST-PASS — the holds contract satisfied: the caller wraps the
+holds-annotated callee in ``with self._lock``, and the callee's own
+guarded access is covered by its starting lock set."""
+
+import threading
+
+
+class LedgerOk:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._total = 0      # guarded-by: _lock
+
+    def _add_locked(self, n):  # analyze: holds(_lock)
+        self._total += n
+
+    def record(self, n):
+        with self._lock:
+            self._add_locked(n)

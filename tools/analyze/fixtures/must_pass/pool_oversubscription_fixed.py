@@ -1,0 +1,32 @@
+"""MUST-PASS — the shipped fix for historical race #2: the read is
+issued inside a ``try`` whose handler returns the slot before
+re-raising, and the counters move under the lock.  The lifecycle checker
+accepts the checkout because the very next statement is a try whose
+handler contains a release-family call; the discipline checker sees both
+counter writes inside ``with self._lock``."""
+
+import threading
+
+GUARDED_BY = {"PrefetcherFixed.pending": "_lock"}
+
+
+class PrefetcherFixed:
+    def __init__(self, pool, store):
+        self.pool = pool
+        self.store = store
+        self._lock = threading.Lock()
+        self.in_flight = 0       # guarded-by: _lock
+        self.pending = 0         # registry-declared: see GUARDED_BY above
+
+    def prefetch(self, key, nbytes):
+        buf = self.pool.acquire("w", nbytes)
+        try:
+            data = self.store.read(key)
+            buf.write(data)
+        except Exception:
+            buf.release()
+            raise
+        with self._lock:
+            self.in_flight += 1
+            self.pending += 1
+        return buf

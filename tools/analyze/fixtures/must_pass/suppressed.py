@@ -1,0 +1,26 @@
+"""MUST-PASS — the suppression syntax: every line here would flag its
+checker and is deliberately silenced with a line-scoped, checker-scoped
+``# analyze: ignore[checker-id]``.  A suppression for checker X must not
+leak to checker Y: the lifecycle suppression below still leaves the
+unguarded counter visible to lock-discipline, which has its own."""
+
+import threading
+
+
+class Suppressed:
+    def __init__(self, pool, store):
+        self.pool = pool
+        self.store = store
+        self._lock = threading.Lock()
+        self.in_flight = 0       # guarded-by: _lock
+
+    def spill(self, key, page):
+        with self._lock:
+            self.store.write(key, page)  # analyze: ignore[lock-blocking]
+
+    def prefetch(self, key, nbytes):
+        buf = self.pool.acquire("w", nbytes)  # analyze: ignore[resource-lifecycle]
+        data = self.store.read(key)
+        buf.write(data)
+        self.in_flight += 1                   # analyze: ignore[lock-discipline]
+        return buf

@@ -1,0 +1,228 @@
+"""Checker 4 — resource lifecycle: a pool/slot checkout
+(``x = <obj>.acquire(...)``, ``<obj>.claim(...)``, ``<obj>.alloc(...)``,
+or ``ensure_page(..., pin=True)``) must reach its release on every
+exception path before the next statement that can raise.
+
+A checkout is considered safe when, scanning forward in execution order
+(through the enclosing blocks), one of these happens before any
+may-raise statement:
+
+* a release call on the checkout (``x.release()``, ``x.unpin(...)``, …)
+* a ``try`` whose handler or ``finally`` contains a release-family call
+  (presence-based: the handler may release through a different alias,
+  e.g. a claims list)
+* the value escapes — returned, yielded, stored into an attribute or
+  container, aliased, or passed to another call (ownership moved; the
+  receiver's lifecycle is its own checker case)
+
+Checkouts already inside a ``try`` whose handler/finally releases are
+covered from the start.  ``with`` context managers are inherently safe.
+Lock ``acquire()`` calls are the lock-discipline checkers' business and
+are excluded here."""
+
+from __future__ import annotations
+
+import ast
+
+from .core import Finding, Project, attr_chain
+
+_PRODUCER_ATTRS = {"acquire", "claim", "alloc"}
+_RELEASE_ATTRS = {"release", "release_all", "unpin", "free", "close",
+                  "shutdown", "drain"}
+_NO_RAISE_CALLS = {
+    "time.perf_counter", "time.monotonic", "time.time",
+    "len", "int", "float", "bool", "str", "repr", "min", "max",
+    "isinstance", "sorted", "list", "dict", "set", "tuple", "range",
+    "enumerate", "zip", "id", "getattr",
+}
+
+
+def check(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    for mod in project.modules:
+        infos = list(mod.functions.values())
+        for ci in mod.classes.values():
+            infos.extend(ci.methods.values())
+        for fi in infos:
+            locks = (project.class_locks(fi.cls)
+                     if fi.cls is not None else set())
+            findings.extend(_check_fn(mod, fi, locks))
+    return findings
+
+
+def _is_lockish(recv: str, locks: set[str]) -> bool:
+    last = recv.split(".")[-1]
+    return (last in locks or "lock" in last.lower()
+            or last.endswith("_cv") or last == "_cv"
+            or last.endswith("cond"))
+
+
+def _producer_call(node: ast.AST, locks: set[str]) -> str | None:
+    """Returns a short description if ``node`` is a tracked checkout."""
+    if not (isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)):
+        return None
+    attr = node.func.attr
+    chain = attr_chain(node.func)
+    recv = chain.rsplit(".", 1)[0] if chain else ""
+    if attr.lstrip("_") in _PRODUCER_ATTRS:
+        if recv and _is_lockish(recv, locks):
+            return None
+        return f"{chain or attr}()"
+    if attr == "ensure_page" and any(
+            kw.arg == "pin" and isinstance(kw.value, ast.Constant)
+            and kw.value.value is True for kw in node.keywords):
+        return f"{chain or attr}(pin=True)"
+    return None
+
+
+def _try_releases(stmt: ast.Try) -> bool:
+    blocks = [b for h in stmt.handlers for b in h.body] + stmt.finalbody
+    for s in blocks:
+        for node in ast.walk(s):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _RELEASE_ATTRS):
+                return True
+    return False
+
+
+def _releases_name(stmt: ast.stmt, name: str | None) -> bool:
+    for node in ast.walk(stmt):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in _RELEASE_ATTRS):
+            if name is None:
+                return True
+            recv = attr_chain(node.func.value)
+            if recv == name:
+                return True
+    return False
+
+
+def _escapes(stmt: ast.stmt, name: str | None) -> bool:
+    if name is None:
+        return False
+
+    def mentions(node: ast.AST | None) -> bool:
+        # A mention in receiver position (``buf.view(...)``) is use, not
+        # escape — only args, targets-of-store, returns etc. move
+        # ownership.
+        if node is None:
+            return False
+        receiver_pos: set[int] = set()
+        for c in ast.walk(node):
+            if isinstance(c, ast.Call):
+                for n in ast.walk(c.func):
+                    receiver_pos.add(id(n))
+        return any(isinstance(n, ast.Name) and n.id == name
+                   and id(n) not in receiver_pos
+                   for n in ast.walk(node))
+
+    for node in ast.walk(stmt):
+        if isinstance(node, (ast.Return, ast.Yield, ast.YieldFrom,
+                             ast.Raise)):
+            if mentions(node):
+                return True
+        elif isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            if mentions(node.value):
+                return True
+        elif isinstance(node, ast.Call) and (
+                any(mentions(a) for a in node.args)
+                or any(mentions(kw.value) for kw in node.keywords)):
+            return True
+    return False
+
+
+def _may_raise(stmt: ast.stmt) -> bool:
+    if isinstance(stmt, (ast.Raise, ast.Assert)):
+        return True
+    for node in ast.walk(stmt):
+        if isinstance(node, ast.Call):
+            chain = attr_chain(node.func)
+            if chain in _NO_RAISE_CALLS:
+                continue
+            return True
+        if isinstance(node, (ast.Raise, ast.Assert)):
+            return True
+    return False
+
+
+def _check_fn(mod, fi, locks) -> list[Finding]:
+    out: list[Finding] = []
+
+    def scan_block(stmts: list[ast.stmt], protected: bool,
+                   continuation: list[list[ast.stmt]]) -> None:
+        for i, stmt in enumerate(stmts):
+            rest = stmts[i + 1:]
+            producer, name = _stmt_producer(stmt)
+            if producer is not None and not protected:
+                _analyze(stmt, producer, name, rest, continuation)
+            for body, prot in _child_blocks(stmt, protected):
+                scan_block(body, prot, [rest] + continuation)
+
+    def _stmt_producer(stmt: ast.stmt):
+        value: ast.expr | None = None
+        name: str | None = None
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+            t = stmt.targets[0]
+            value = stmt.value
+            if isinstance(t, ast.Name):
+                name = t.id
+            elif (isinstance(t, ast.Tuple) and t.elts
+                    and isinstance(t.elts[0], ast.Name)):
+                name = t.elts[0].id
+            else:
+                return None, None    # self.x = acquire(): stored, owned
+        elif (isinstance(stmt, ast.AnnAssign)
+                and isinstance(stmt.target, ast.Name)):
+            value, name = stmt.value, stmt.target.id
+        elif isinstance(stmt, ast.Expr):
+            value = stmt.value
+        else:
+            return None, None
+        desc = _producer_call(value, locks) if value is not None else None
+        return desc, (name if desc else None)
+
+    def _analyze(stmt, desc, name, rest, continuation) -> None:
+        if mod.suppressed(stmt.lineno, "resource-lifecycle"):
+            return
+        following = list(rest)
+        for block in continuation:
+            following.extend(block)
+        for nxt in following:
+            if isinstance(nxt, ast.Try) and _try_releases(nxt):
+                return
+            if _releases_name(nxt, name):
+                return
+            if _escapes(nxt, name):
+                return
+            if _may_raise(nxt):
+                out.append(Finding(
+                    mod.rel, stmt.lineno, "resource-lifecycle",
+                    fi.qualname,
+                    f"checkout {desc} can leak: "
+                    f"'{ast.unparse(nxt)[:60]}' (line {nxt.lineno}) may "
+                    f"raise before any release/try-protection"))
+                return
+        out.append(Finding(
+            mod.rel, stmt.lineno, "resource-lifecycle", fi.qualname,
+            f"checkout {desc} is never released, escaped, or "
+            f"try-protected on this path"))
+
+    def _child_blocks(stmt: ast.stmt, protected: bool):
+        if isinstance(stmt, ast.Try):
+            prot = protected or _try_releases(stmt)
+            yield stmt.body, prot
+            for h in stmt.handlers:
+                yield h.body, protected
+            yield stmt.orelse, prot
+            yield stmt.finalbody, protected
+        elif isinstance(stmt, (ast.If, ast.For, ast.While)):
+            yield stmt.body, protected
+            yield stmt.orelse, protected
+        elif isinstance(stmt, ast.With):
+            yield stmt.body, protected
+
+    scan_block(fi.node.body, False, [])
+    return out

@@ -1,0 +1,136 @@
+"""Checker 2 — no blocking under lock: while a ``threading.Lock`` /
+``Condition`` attribute of the class is held, the walk forbids
+
+* store I/O — ``*.store.read/write/read_new``, ``os.pread/pwrite/fsync``
+* waiting on futures/threads — ``.result()``, ``.join()``
+* pool checkouts — ``.acquire()`` on a buffer pool (backpressure blocks)
+* bounded-queue puts — ``.put()`` — and ``time.sleep``
+* calls to functions annotated ``# analyze: blocking``
+* ``.wait()/.wait_for()`` on a *different* condition than the held one
+
+This is exactly the bug class the paged KV cache fixed by parking pages
+in ``_evicting`` and dropping the lock around the dirty store write; the
+walk understands that pattern through explicit ``self._lock.release()`` /
+``.acquire()`` toggles.
+
+Companion rule: calling a method annotated ``# analyze: holds(_lock)``
+without holding ``self._lock`` is flagged here too — the annotation is a
+precondition, not a suggestion."""
+
+from __future__ import annotations
+
+import ast
+
+from .core import Finding, LockWalk, Project, attr_chain
+
+_WAIT_ATTRS = {"result", "join"}
+_STORE_ATTRS = {"read", "write", "read_new"}
+_OS_BLOCKING = {"pread", "pwrite", "fsync", "fdatasync", "sendfile"}
+_STORE_BASES = {"TensorStore"}
+_POOL_BASES = {"BufferPoolBase"}
+
+
+def _is_subclass_of(project: Project, name: str | None,
+                    bases: set[str]) -> bool:
+    seen: set[str] = set()
+    while name and name not in seen:
+        if name in bases:
+            return True
+        seen.add(name)
+        ci = project.resolve_class(name)
+        name = ci.bases[0] if ci and ci.bases else None
+    return False
+
+
+def check(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    for mod in project.modules:
+        for ci in mod.classes.values():
+            locks = project.class_locks(ci)
+            if not locks:
+                continue
+            for fi in ci.methods.values():
+                findings.extend(_check_fn(project, mod, ci, fi, locks))
+    return findings
+
+
+def _check_fn(project, mod, ci, fi, locks) -> list[Finding]:
+    out: list[Finding] = []
+
+    def attr_type(recv: str) -> str | None:
+        # "self.store" -> class name of the attribute, when known
+        if recv.startswith("self.") and recv.count(".") == 1:
+            return ci.attr_types.get(recv.split(".", 1)[1])
+        return None
+
+    def blocking_reason(node: ast.Call, held: set[str]) -> str | None:
+        chain = attr_chain(node.func)
+        if chain is None:
+            return None
+        parts = chain.split(".")
+        recv, attr = ".".join(parts[:-1]), parts[-1]
+        if recv == "self" and attr in locks:
+            return None                      # bare lock name, not a call
+        if recv.startswith("self.") and recv.split(".", 1)[1] in locks:
+            lock = recv.split(".", 1)[1]
+            if attr in ("wait", "wait_for"):
+                others = held - {lock}
+                if lock in held and others:
+                    return (f"condition wait on self.{lock} while also "
+                            f"holding {sorted(others)}")
+                return None                  # waiting its own condition
+            return None                      # acquire/release/notify: toggles
+        if chain == "time.sleep":
+            return "time.sleep"
+        if attr in _WAIT_ATTRS:
+            return f"{chain}() waits on a future/thread"
+        if recv == "os" and attr in _OS_BLOCKING:
+            return f"{chain} is synchronous file I/O"
+        recv_cls = attr_type(recv)
+        last = parts[-2] if len(parts) >= 2 else ""
+        if attr in _STORE_ATTRS and (
+                _is_subclass_of(project, recv_cls, _STORE_BASES)
+                or last in ("store", "_store")):
+            return f"{chain}() is synchronous store I/O"
+        if attr == "acquire" and (
+                _is_subclass_of(project, recv_cls, _POOL_BASES)
+                or last in ("pool", "_pool")):
+            return f"{chain}() may block on pool backpressure"
+        if attr == "put":
+            return f"{chain}() may block on a bounded queue"
+        callee = _resolve_self_call(project, ci, chain)
+        if callee is not None and callee.blocking:
+            return f"{callee.qualname} is annotated '# analyze: blocking'"
+        return None
+
+    def visit(node: ast.AST, held: set[str]) -> None:
+        if not isinstance(node, ast.Call):
+            return
+        chain = attr_chain(node.func)
+        callee = (_resolve_self_call(project, ci, chain)
+                  if chain else None)
+        if callee is not None and callee.holds:
+            missing = callee.holds - held
+            if missing and not mod.suppressed(node.lineno, "lock-blocking"):
+                out.append(Finding(
+                    mod.rel, node.lineno, "lock-blocking", fi.qualname,
+                    f"call to {callee.qualname} requires holding "
+                    f"{sorted('self.' + h for h in missing)} "
+                    f"(annotated holds)"))
+        if not held:
+            return
+        reason = blocking_reason(node, held)
+        if reason and not mod.suppressed(node.lineno, "lock-blocking"):
+            out.append(Finding(
+                mod.rel, node.lineno, "lock-blocking", fi.qualname,
+                f"blocking call while holding "
+                f"{sorted('self.' + h for h in held)}: {reason}"))
+
+    LockWalk(locks, visit).run(fi.node, initially=set(fi.holds))
+    return out
+
+
+def _resolve_self_call(project: Project, ci, chain: str | None):
+    if chain and chain.startswith("self.") and chain.count(".") == 1:
+        return project.lookup_method(ci, chain.split(".", 1)[1])
+    return None

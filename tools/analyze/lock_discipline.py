@@ -1,0 +1,60 @@
+"""Checker 1 — lock discipline: a field annotated ``# guarded-by: _lock``
+(or listed in a module-level ``GUARDED_BY`` registry) may only be read or
+written while ``self._lock`` is held.
+
+Exemptions: ``__init__``/``__del__`` (the object is not shared yet /
+no longer shared), methods annotated ``# analyze: pre-share``, and
+methods annotated ``# analyze: holds(_lock)`` — those start the walk
+with the lock already held (their call sites are checked by the
+no-blocking checker's companion rule instead)."""
+
+from __future__ import annotations
+
+import ast
+
+from .core import Finding, LockWalk, Project
+
+_EXEMPT = {"__init__", "__del__"}
+
+
+def check(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    for mod in project.modules:
+        for ci in mod.classes.values():
+            guarded = project.class_guarded(ci)
+            if not guarded:
+                continue
+            locks = project.class_locks(ci)
+            for fi in ci.methods.values():
+                if fi.name in _EXEMPT or fi.pre_share:
+                    continue
+                findings.extend(_check_fn(mod, ci, fi, guarded, locks))
+    return findings
+
+
+def _check_fn(mod, ci, fi, guarded, locks) -> list[Finding]:
+    out: list[Finding] = []
+    flagged: set[tuple[int, str]] = set()
+
+    def visit(node: ast.AST, held: set[str]) -> None:
+        if not (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "self"
+                and node.attr in guarded):
+            return
+        lock = guarded[node.attr]
+        if lock in held:
+            return
+        if mod.suppressed(node.lineno, "lock-discipline"):
+            return
+        key = (node.lineno, node.attr)
+        if key in flagged:
+            return
+        flagged.add(key)
+        out.append(Finding(
+            mod.rel, node.lineno, "lock-discipline", fi.qualname,
+            f"access to self.{node.attr} (guarded-by {lock}) without "
+            f"holding self.{lock}"))
+
+    LockWalk(locks, visit).run(fi.node, initially=set(fi.holds))
+    return out
