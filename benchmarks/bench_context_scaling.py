@@ -1,18 +1,212 @@
-"""Paper Figs. 9/16: peak memory vs context length; max context under a
-128 GiB cap.  Paper: 16,384 (baseline) -> 131,072 (MemAscend) on Qwen2.5-7B."""
+"""Paper Figs. 9/16 + (ours, PR 9) the measured long-context gate.
+
+Two halves:
+
+* **Measured** — REAL train steps of a small deep model in this
+  container, walking a sequence-length ladder under each activation
+  tier (``host`` / ``ssd`` / ``recompute``) and recording the tracked
+  peak of the ``activation_checkpoints`` component.  A fixed host
+  activation budget is taken from the host-resident run at
+  ``BUDGET_SEQ``; the gate is the longest rung each tier can train
+  within that budget.  Host-resident stops at ``BUDGET_SEQ`` by
+  construction (every layer's checkpoint stays pinned), while the
+  streamed tiers hold only the in-flight save/fetch window, so they
+  climb further — the SSDTrain-style claim, measured.  The same runs
+  assert bit-identical losses across tiers and report the overlap
+  ablation (``act_fetch_wait_s`` / ``act_save_wait_s`` under ``sync``
+  vs ``full``) showing the backward prefetch hiding under block
+  compute.  Writes ``BENCH_context.json`` for
+  ``benchmarks/check_regression.py`` (committed baseline in
+  ``benchmarks/baselines/context.json``).
+
+* **Analytic** — the paper-scale memory model (Qwen2.5-7B at 128 GiB:
+  16,384 baseline -> 131,072 MemAscend), now including the ``ssd``
+  activation tier, with real timings on the max-context search itself.
+"""
 
 from __future__ import annotations
 
+import json
+import shutil
+import tempfile
+import time
+
+import jax
+
 from repro.configs import PAPER_MODELS
+from repro.configs.base import ModelConfig
+from repro.core import OffloadPolicy, OffloadSession
+from repro.core.model_adapter import make_offloadable_lm
+from repro.data import DataLoader, SyntheticTextDataset
 
 from .common import emit, gib, time_us
 from .memory_model import GIB, estimate_peak, max_context_under
+
+# deep-and-narrow on purpose: 8 checkpoints make the resident-host
+# activation footprint the dominant seq-scaled term.
+CFG = ModelConfig(name="bench-ctx", family="dense", n_layers=8, d_model=128,
+                  n_heads=4, n_kv_heads=2, d_ff=256, vocab=512)
+BATCH = 2
+LADDER = (256, 384, 512, 640, 768, 896, 1024)
+BUDGET_SEQ = 384          # host-resident tops out here by construction
+IDENT_SEQ, IDENT_STEPS = 256, 3
+OUT_PATH = "BENCH_context.json"
 
 CONTEXTS = (4096, 16384, 32768, 65536, 131072)
 LIMIT = 128 * GIB
 
 
-def run() -> None:
+def _run(root: str, tier: str, seq: int, steps: int,
+         overlap: str = "full") -> dict:
+    """Real train steps at one (tier, seq) point; returns losses, the
+    activation-component peak, and the act-stream wait breakdown."""
+    policy = (OffloadPolicy.preset("memascend").with_store(root)
+              .with_adam(lr=1e-3).with_overlap(overlap)
+              .with_activations(tier).build())
+    model = make_offloadable_lm(CFG, jax.random.PRNGKey(0))
+    dl = DataLoader(SyntheticTextDataset(vocab=CFG.vocab, seed=0),
+                    batch=BATCH, seq_len=seq)
+    with OffloadSession(model, policy) as s:
+        losses = []
+        fetch_wait = save_wait = 0.0
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            b = dl.next_batch()
+            m = s.train_step(b["tokens"], b["labels"])
+            losses.append(m["loss"])
+            fetch_wait += m["act_fetch_wait_s"]
+            save_wait += m["act_save_wait_s"]
+        s.synchronize()
+        dt = time.perf_counter() - t0
+        act_peak = s.tracker.component(
+            "activation_checkpoints").peak_allocated
+        total_peak = s.tracker.peak_allocated
+    return {"losses": losses, "act_peak": act_peak,
+            "total_peak": total_peak, "act_fetch_wait_s": fetch_wait,
+            "act_save_wait_s": save_wait, "time_s": dt}
+
+
+def _walk(root: str, tier: str, budget: int) -> tuple[int, dict]:
+    """Climb the ladder until the measured activation peak exceeds the
+    budget (peaks are monotone in seq within a tier, so the first
+    over-budget rung ends the walk).  Returns (max in-budget seq,
+    {seq: measured activation peak})."""
+    peaks: dict[int, int] = {}
+    best = 0
+    for seq in LADDER:
+        r = _run(f"{root}/{tier}{seq}", tier, seq, steps=1)
+        peaks[seq] = r["act_peak"]
+        if r["act_peak"] > budget:
+            break
+        best = seq
+    return best, peaks
+
+
+def _measured() -> None:
+    root = tempfile.mkdtemp(prefix="bench_ctx_")
+    try:
+        budget = _run(f"{root}/budget", "host", BUDGET_SEQ, 1)["act_peak"]
+        max_host, host_peaks = _walk(f"{root}/h", "host", budget)
+        max_ssd, ssd_peaks = _walk(f"{root}/s", "ssd", budget)
+        max_rec, rec_peaks = _walk(f"{root}/r", "recompute", budget)
+
+        # loss identity + overlap ablation at one fixed point
+        host_id = _run(f"{root}/ih", "host", IDENT_SEQ, IDENT_STEPS)
+        ssd_id = _run(f"{root}/is", "ssd", IDENT_SEQ, IDENT_STEPS)
+        rec_id = _run(f"{root}/ir", "recompute", IDENT_SEQ, IDENT_STEPS)
+        ssd_sync = _run(f"{root}/iy", "ssd", IDENT_SEQ, IDENT_STEPS,
+                        overlap="sync")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+    # hard acceptance gates, within this run: host-resident saturates the
+    # budget at BUDGET_SEQ; the streamed tier must train strictly longer.
+    if max_host != BUDGET_SEQ:
+        raise AssertionError(
+            f"host tier should top out at seq={BUDGET_SEQ} by "
+            f"construction, measured {max_host} (peaks {host_peaks})")
+    if max_ssd <= max_host:
+        raise AssertionError(
+            f"ssd tier must train longer sequences than host under the "
+            f"same budget: ssd={max_ssd} host={max_host} "
+            f"(budget={budget}B, ssd peaks {ssd_peaks})")
+
+    # every tier moves the same floats through the same block order —
+    # any divergence is an executor ordering/visibility bug, not noise.
+    mismatches = sum(
+        1 for lh, ls, lr, ly in zip(
+            host_id["losses"], ssd_id["losses"], rec_id["losses"],
+            ssd_sync["losses"], strict=True)
+        if not (lh == ls == lr == ly))
+    if mismatches:
+        raise AssertionError(
+            f"activation-tier losses diverged on {mismatches}/"
+            f"{IDENT_STEPS} steps: host={host_id['losses']} "
+            f"ssd={ssd_id['losses']} recompute={rec_id['losses']} "
+            f"ssd_sync={ssd_sync['losses']}")
+
+    per_step = 1.0 / IDENT_STEPS
+    report = {
+        "bench": "context",
+        "config": {"model": CFG.name, "n_layers": CFG.n_layers,
+                   "batch": BATCH, "ladder": list(LADDER),
+                   "budget_seq": BUDGET_SEQ, "ident_seq": IDENT_SEQ,
+                   "ident_steps": IDENT_STEPS},
+        "metrics": {
+            "budget_bytes": budget,
+            "max_seq_host": max_host,
+            "max_seq_ssd": max_ssd,
+            "max_seq_recompute": max_rec,
+            "seq_gain_ssd_vs_host": max_ssd / max_host,
+            "act_peak_ssd_at_max_bytes": ssd_peaks[max_ssd],
+            "act_peak_recompute_at_max_bytes": rec_peaks[max_rec],
+            "loss_mismatch_modes": mismatches,
+            "act_fetch_wait_ms_sync": (
+                ssd_sync["act_fetch_wait_s"] * 1e3 * per_step),
+            "act_fetch_wait_ms_full": (
+                ssd_id["act_fetch_wait_s"] * 1e3 * per_step),
+            "act_save_wait_ms_sync": (
+                ssd_sync["act_save_wait_s"] * 1e3 * per_step),
+            "act_save_wait_ms_full": (
+                ssd_id["act_save_wait_s"] * 1e3 * per_step),
+        },
+        # ladder rungs and the byte budget are measured in-run, so the
+        # gated max-seq values are stable across runner generations; the
+        # wait-time ablation is reported but not gated (timing noise).
+        "gates": {
+            "max_seq_host": "higher_is_better",
+            "max_seq_ssd": "higher_is_better",
+            "seq_gain_ssd_vs_host": "higher_is_better",
+            "loss_mismatch_modes": "lower_is_better",  # zero baseline
+        },
+        "threshold": 0.2,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+    emit("ctx/measured/capacity", budget,
+         f"budget={budget / 1e6:.2f}MB(host@{BUDGET_SEQ}) "
+         f"max_seq: host={max_host} ssd={max_ssd} recompute={max_rec} "
+         f"gain_ssd={max_ssd / max_host:.2f}x")
+    emit("ctx/measured/act-peaks", float(ssd_peaks[max_ssd]),
+         f"act peak at own max: host={budget / 1e6:.2f}MB "
+         f"ssd={ssd_peaks[max_ssd] / 1e6:.2f}MB "
+         f"recompute={rec_peaks[max_rec] / 1e6:.2f}MB")
+    emit("ctx/measured/loss-identity", 0.0 if not mismatches else 1.0,
+         f"host/ssd/recompute/ssd-sync bit-identical over "
+         f"{IDENT_STEPS} steps: mismatches={mismatches}")
+    emit("ctx/measured/prefetch-overlap",
+         ssd_id["act_fetch_wait_s"] * 1e6 * per_step,
+         f"per-step act_fetch_wait: "
+         f"sync={ssd_sync['act_fetch_wait_s'] * 1e3 * per_step:.2f}ms "
+         f"full={ssd_id['act_fetch_wait_s'] * 1e3 * per_step:.2f}ms; "
+         f"act_save_wait: "
+         f"sync={ssd_sync['act_save_wait_s'] * 1e3 * per_step:.2f}ms "
+         f"full={ssd_id['act_save_wait_s'] * 1e3 * per_step:.2f}ms")
+
+
+def _analytic() -> None:
     for name in ("llama3.1-8b", "qwen2.5-7b", "qwen2.5-14b", "qwen2.5-32b"):
         cfg = PAPER_MODELS[name]
         for ctx in CONTEXTS:
@@ -23,8 +217,17 @@ def run() -> None:
             emit(f"ctx/{name}/{ctx}", us,
                  f"baseline={gib(b):.1f}GiB memascend={gib(m):.1f}GiB "
                  f"reduction={1 - m / b:.1%}")
+        us = time_us(lambda cfg=cfg: max_context_under(
+            cfg, LIMIT, memascend=True, batch=1), repeats=2)
         mb = max_context_under(cfg, LIMIT, memascend=False, batch=1)
         mm = max_context_under(cfg, LIMIT, memascend=True, batch=1)
-        emit(f"ctx/{name}/max@128GiB", 0.0,
-             f"baseline_max={mb} memascend_max={mm} "
+        ms = max_context_under(cfg, LIMIT, memascend=True, batch=1,
+                               act_policy="ssd")
+        emit(f"ctx/{name}/max@128GiB", us,
+             f"baseline_max={mb} memascend_host={mm} memascend_ssd={ms} "
              f"paper(qwen2.5-7b)=16384->131072")
+
+
+def run() -> None:
+    _measured()
+    _analytic()

@@ -58,7 +58,8 @@ class PeakEstimate:
 def estimate_peak(cfg: ModelConfig, *, memascend: bool, n_gpus: int = 2,
                   batch: int = 8, ctx: int = 4096,
                   inflight_blocks: int = 1,
-                  offload_checkpoints: bool = True) -> PeakEstimate:
+                  offload_checkpoints: bool = True,
+                  act_policy: str = "host") -> PeakEstimate:
     census = cfg.pool_census(inflight_blocks=inflight_blocks, shards=n_gpus)
     tracker = MemoryTracker()
     alloc_cls = AlignmentFreeAllocator if memascend \
@@ -85,19 +86,32 @@ def estimate_peak(cfg: ModelConfig, *, memascend: bool, n_gpus: int = 2,
     flat_buf = alloc.alloc(flat_payload // n_gpus)
     flat_reserved = flat_buf.capacity * n_gpus
 
-    # activation checkpoints (offloaded GC): Eq. 1, one pinned buffer per
-    # layer per rank of (B, C, H) in fp16/bf16
+    # activation checkpoints: one (B, C, H) half-precision buffer per
+    # layer per rank when every checkpoint stays host-resident (Eq. 1,
+    # act_policy="host"); streamed tiers ("ssd" — and "recompute", which
+    # checkpoints every other layer to SSD — PR 9 / SSDTrain) hold only
+    # the in-flight window: one buffer being saved (D2H staging on the
+    # writer) plus the prefetched-back window on the backward side, so
+    # the host footprint stops scaling with depth.
+    if act_policy not in ("host", "ssd", "recompute"):
+        raise ValueError(f"act_policy must be host|ssd|recompute, got "
+                         f"{act_policy!r}")
     ckpt_payload = 0
     ckpt_reserved = 0
     if offload_checkpoints:
         per_layer = batch * ctx * cfg.d_model * 2
         layers = cfg.n_layers + cfg.encoder_layers
-        for _ in range(min(layers, 64)):
+        if act_policy == "host":
+            resident = min(layers, 64)
+        else:
+            # save-side staging + double-buffered fetch-back window
+            resident = min(1 + max(1, inflight_blocks), layers)
+        for _ in range(resident):
             b = alloc.alloc(per_layer)
             ckpt_payload += per_layer * n_gpus
             ckpt_reserved += b.capacity * n_gpus
-        if layers > 64:   # avoid silly loops for deep models
-            scale = layers / 64
+        if act_policy == "host" and layers > 64:
+            scale = layers / 64   # avoid silly loops for deep models
             ckpt_payload = int(ckpt_payload * scale)
             ckpt_reserved = int(ckpt_reserved * scale)
 
@@ -133,13 +147,14 @@ def estimate_peak(cfg: ModelConfig, *, memascend: bool, n_gpus: int = 2,
 
 def max_context_under(cfg: ModelConfig, limit_bytes: int, *,
                       memascend: bool, n_gpus: int = 2, batch: int = 1,
+                      act_policy: str = "host",
                       contexts=(4096, 8192, 16384, 32768, 65536, 131072,
                                 262144)) -> int:
     """Largest context whose estimated peak fits the limit (Fig. 16)."""
     best = 0
     for ctx in contexts:
         est = estimate_peak(cfg, memascend=memascend, n_gpus=n_gpus,
-                            batch=batch, ctx=ctx)
+                            batch=batch, ctx=ctx, act_policy=act_policy)
         if est.total <= limit_bytes:
             best = ctx
     return best

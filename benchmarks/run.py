@@ -7,7 +7,11 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
   bench_overflow         Figs. 12/13
   bench_nvme             Fig. 14
   bench_peak_memory      Table II / Fig. 15
-  bench_context_scaling  Figs. 9/16
+  bench_context_scaling  Figs. 9/16 + (ours) measured activation-tier
+                         ladder: max trainable seq at a fixed host
+                         budget under host/ssd/recompute, loss-identity
+                         and prefetch-overlap ablation (writes
+                         BENCH_context.json for the CI regression gate)
   bench_batch_scaling    Figs. 10/17 + (ours) measured slot-occupancy
                          ablation (merges into BENCH_serving.json)
   bench_moe_pool         Fig. 18

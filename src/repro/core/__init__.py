@@ -31,11 +31,12 @@ from .nvme import DirectNVMeEngine, FilesystemEngine, TensorStore, IOStats
 from .optimizer import AdamConfig, OffloadedAdam, adam_update
 from .swapper import ParameterSwapper, SwapStats
 from .overlap import DeviceSlots, OverlapStats, SerialWorker
-from .stream_plan import (ComputeOp, FetchOp, GradWriteOp, KVReadOp,
+from .stream_plan import (ActFetchOp, ActSaveOp, ComputeOp, FetchOp,
+                          GradWriteOp, KVReadOp,
                           KVWriteOp, OptimStepOp, OverflowCheckOp, PlanError,
                           ReleaseOp, StreamPlan,
                           compile_decode, compile_decode_cached, compile_eval,
-                          compile_prefill, compile_train)
+                          compile_prefill, compile_train, resolve_act_policy)
 from .session import OffloadSession
 from .offload_engine import (OffloadableModel, OffloadUnit, OffloadPolicy,
                              OffloadedTrainer, PolicyBuilder,

@@ -178,6 +178,21 @@ class OffloadPolicy:
       the next block's re-fetch/recompute) and runs the optimizer stage on
       its own worker so step *k*'s host Adam interleaves with step *k+1*'s
       forward prefetch window (cross-step pipelining).
+
+    ``act_policy`` picks where each block's activation checkpoint lives
+    between forward and backward (only meaningful with
+    ``offload_checkpoints=True``; see
+    :func:`repro.core.stream_plan.resolve_act_policy`):
+
+    * ``"host"`` — pinned host memory, one resident buffer per block (the
+      pre-PR-9 behaviour; footprint grows with depth × seq),
+    * ``"ssd"`` — stream each checkpoint onward to the store and prefetch
+      it back under the backward pass (SSDTrain-style; host footprint is
+      the in-flight window, not the depth),
+    * ``"recompute"`` — checkpoint every other block to SSD and re-run the
+      forward for the rest (trade FLOPs for bytes),
+    * a dict block-name → tier or a positional sequence for per-block
+      mixes.
     """
 
     name: str
@@ -190,6 +205,8 @@ class OffloadPolicy:
     lookahead: int | None = None
     offload_checkpoints: bool = True   # offloaded gradient checkpointing
     overlap: str = "full"              # "sync" | "h2d" | "full" (Fig. 6)
+    act_policy: object = "host"        # "host" | "ssd" | "recompute" |
+    #                                    dict/sequence of per-block tiers
 
     def __post_init__(self) -> None:
         if not self.name or not isinstance(self.name, str):
@@ -216,6 +233,30 @@ class OffloadPolicy:
         if self.overlap not in ("sync", "h2d", "full"):
             raise ValueError(f"overlap must be one of 'sync'|'h2d'|'full', "
                              f"got {self.overlap!r}")
+        _act_tiers = ("host", "ssd", "recompute")
+        if isinstance(self.act_policy, str):
+            if self.act_policy not in _act_tiers:
+                raise ValueError(
+                    f"act_policy must be one of {_act_tiers} (or a "
+                    f"per-block dict/sequence), got {self.act_policy!r} — "
+                    f"device-resident checkpoints are selected via "
+                    f"offload_checkpoints=False")
+        elif isinstance(self.act_policy, dict):
+            bad = sorted(t for t in self.act_policy.values()
+                         if t not in _act_tiers)
+            if bad:
+                raise ValueError(f"act_policy has unknown tier(s) {bad}; "
+                                 f"expected {_act_tiers}")
+        else:
+            try:
+                tiers = list(self.act_policy)
+            except TypeError:
+                raise ValueError(f"act_policy must be a tier name, dict, or "
+                                 f"sequence, got {self.act_policy!r}") from None
+            bad = sorted(t for t in tiers if t not in _act_tiers)
+            if bad:
+                raise ValueError(f"act_policy has unknown tier(s) {bad}; "
+                                 f"expected {_act_tiers}")
         if self.adam.state_dtype not in ("float32", "bfloat16"):
             raise ValueError(f"state_dtype must be float32|bfloat16, got "
                              f"{self.adam.state_dtype!r}")
@@ -310,6 +351,13 @@ class PolicyBuilder:
     def with_overlap(self, mode: str) -> "PolicyBuilder":
         """Pipeline-overlap ablation level: 'sync' | 'h2d' | 'full'."""
         self._overrides["overlap"] = mode
+        return self
+
+    def with_activations(self, policy) -> "PolicyBuilder":
+        """Per-block activation-checkpoint tier: 'host' | 'ssd' |
+        'recompute', or a dict/sequence of per-block tiers (see
+        OffloadPolicy.act_policy)."""
+        self._overrides["act_policy"] = policy
         return self
 
     def with_overrides(self, **field_overrides) -> "PolicyBuilder":

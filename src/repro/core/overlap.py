@@ -24,6 +24,13 @@ half) behind that block's weight staging, bounded by a dedicated ``kv``
 device-slot class, so the serving path's last synchronous transfer also
 hides under the previous block's compute.
 
+Activation checkpoints (train) ride both workers: ActSaveOp's D2H + SSD
+write runs on the gradient-writer thread (idle during the forward pass),
+and ActFetchOp's SSD read + H2D staging rides the H2D worker behind the
+backward pass's weight staging, bounded by the dedicated
+:data:`ACT_CLASS` device-slot class — block *i−1*'s checkpoint streams
+back under block *i*'s ``block_bwd``.
+
 This module holds the machinery shared by those legs; the session wires it
 to the StreamPlan executor (:mod:`repro.core.session`).  Everything here is
 model-agnostic: a SerialWorker is just an order-preserving single-thread
@@ -58,6 +65,14 @@ import queue
 import threading
 from concurrent.futures import Future
 from dataclasses import dataclass, field
+
+
+# Device-slot class bounding staged activation-checkpoint H2Ds (train
+# backward).  Depth 2 = one checkpoint consumed by the current block_bwd
+# plus one being staged for the next — the same double-buffer rotation as
+# the weight classes, and the same deadlock-freedom argument: the single
+# H2D worker acquires, the executor's block_bwd consume releases.
+ACT_CLASS = "__act__"
 
 
 def done_future(value=None) -> Future:
@@ -251,8 +266,18 @@ class OverlapStats:
     kv_stage_wait_seconds: float = 0.0  # executor blocked on staged KV
     gradwrite_drain_seconds: float = 0.0  # OverflowCheckOp writer-drain stall
     optim_gate_seconds: float = 0.0       # prefetch blocked on step k-1 Adam
+    act_save_wait_seconds: float = 0.0  # executor blocked on an act save
+    #                                     (ActFetchOp gating on its unit's
+    #                                     still-pending save, or sync-mode
+    #                                     inline D2H + store write)
+    act_fetch_wait_seconds: float = 0.0  # executor blocked at an ActFetchOp
+    #                                      for a staged checkpoint
+    act_stage_gets: int = 0     # ActFetchOps served from the staging pipeline
+    act_stage_hits: int = 0     # checkpoint staged when the ActFetchOp asked
     optim_prefetch_wait_seconds: float = 0.0  # Adam blocked on staged state
     overflow_screen_seconds: float = 0.0      # per-region Inf/NaN screens
+    act_save_seconds: float = 0.0  # D2H + store write on the writer thread
+    act_write_failures: int = 0    # SSD act writes that fell back to host
     _lock: threading.Lock = field(default_factory=threading.Lock,
                                   repr=False, compare=False)
 
@@ -263,11 +288,19 @@ class OverlapStats:
         with self._lock:
             setattr(self, name, getattr(self, name) + dt)
 
+    def bump(self, name: str, n: int = 1) -> None:
+        """Increment a worker-thread counter (lock-guarded — e.g. the
+        gradient writer recording an act-write SSD fallback)."""
+        with self._lock:
+            setattr(self, name, getattr(self, name) + n)
+
     def snapshot(self) -> dict:
         with self._lock:
             worker = {
                 "optim_prefetch_wait_seconds": self.optim_prefetch_wait_seconds,
-                "overflow_screen_seconds": self.overflow_screen_seconds}
+                "overflow_screen_seconds": self.overflow_screen_seconds,
+                "act_save_seconds": self.act_save_seconds,
+                "act_write_failures": self.act_write_failures}
         return {"fetch_seconds": self.fetch_seconds,
                 "h2d_gets": self.h2d_gets, "h2d_hits": self.h2d_hits,
                 "h2d_wait_seconds": self.h2d_wait_seconds,
@@ -275,4 +308,8 @@ class OverlapStats:
                 "kv_stage_hits": self.kv_stage_hits,
                 "kv_stage_wait_seconds": self.kv_stage_wait_seconds,
                 "gradwrite_drain_seconds": self.gradwrite_drain_seconds,
-                "optim_gate_seconds": self.optim_gate_seconds, **worker}
+                "optim_gate_seconds": self.optim_gate_seconds,
+                "act_save_wait_seconds": self.act_save_wait_seconds,
+                "act_fetch_wait_seconds": self.act_fetch_wait_seconds,
+                "act_stage_gets": self.act_stage_gets,
+                "act_stage_hits": self.act_stage_hits, **worker}

@@ -41,6 +41,16 @@ of the paper's Fig. 6 full overlap (see :mod:`repro.core.overlap`):
   buffer.  Numerics are identical in every mode — the same float ops run
   in the same order, only the thread that pays the wait changes.
 
+Activation checkpoints stream the same way (``policy.act_policy``): each
+block's ActSaveOp runs its D2H + optional SSD write on the gradient-writer
+thread under full overlap (the forward no longer pays a blocking
+``np.asarray`` on the executor), and the backward's ActFetchOps split into
+issue/wait halves riding the H2D staging worker under a dedicated
+ACT-class device slot, so block *i−1*'s checkpoint streams back under
+block *i*'s ``block_bwd``.  ``recompute``-tier blocks save nothing and
+re-run the previous block's forward instead (see
+:func:`repro.core.stream_plan.resolve_act_policy`).
+
 The session runs four workloads through the same machinery:
 
 * ``train_step``   — compile_train plan: forward/backward streaming +
@@ -88,13 +98,15 @@ from .loss_scale import DynamicLossScaler
 from .memory_tracker import MemoryTracker
 from .optimizer import OffloadedAdam
 from .overflow import check_region, flat_overflow_check
-from .overlap import DeviceSlots, OverlapStats, SerialWorker, done_future
-from .stream_plan import (ComputeOp, FetchOp, GradWriteOp, KVReadOp,
-                          KVWriteOp, OptimStepOp, OverflowCheckOp,
-                          ReleaseOp, StreamPlan,
+from .overlap import (ACT_CLASS, DeviceSlots, OverlapStats, SerialWorker,
+                      done_future)
+from .stream_plan import (ActFetchOp, ActSaveOp, ComputeOp, FetchOp,
+                          GradWriteOp, KVReadOp, KVWriteOp, OptimStepOp,
+                          OverflowCheckOp, ReleaseOp, StreamPlan,
                           compile_decode, compile_decode_cached,
                           compile_decode_verify, compile_eval,
-                          compile_prefill, compile_train)
+                          compile_prefill, compile_train,
+                          resolve_act_policy)
 from .swapper import ParameterSwapper
 
 COMPUTE_SUFFIX = OffloadedAdam.COMPUTE
@@ -133,6 +145,34 @@ def verify_bucket(n: int) -> int:
     return 1 << (n - 1).bit_length()
 
 
+class _ActCkpt:
+    """One block's activation checkpoint, tracked through its tiers.
+
+    ``tier`` walks ``device`` (just saved: ``value`` is the device array)
+    → ``host`` (ActSaveOp D2H'd it: ``value`` is a host ndarray, ``handle``
+    its tracker allocation) → ``ssd`` (the store holds the bytes; only
+    ``shape``/``np_dtype`` remain) → ``ready`` (ActFetchOp staged it back:
+    ``value`` is a device array again, ``slot`` set if it holds an
+    ACT_CLASS device slot).  ``fut`` is the in-flight ActSaveOp future
+    while the gradient-writer thread runs the offload; the executor only
+    reads the tier fields after ``fut`` resolves (the Future is the
+    happens-before edge), or after an inline save on its own thread."""
+
+    __slots__ = ("unit", "tier", "value", "handle", "shape", "np_dtype",
+                 "dtype", "fut", "slot")
+
+    def __init__(self, unit, value):
+        self.unit = unit
+        self.tier = "device"
+        self.value = value
+        self.handle = None      # tracker handle while a host copy is live
+        self.shape = None       # ssd tier: host array shape
+        self.np_dtype = None    # ssd tier: host array dtype
+        self.dtype = value.dtype
+        self.fut = None         # pending ActSaveOp (writer-thread) future
+        self.slot = False       # value holds an ACT_CLASS device slot
+
+
 class _ExecState:
     """Per-plan-run bindings and carried activations/cotangents."""
 
@@ -141,7 +181,8 @@ class _ExecState:
                  "checkpoints", "overflowed", "apply", "optim_begun",
                  "kv", "kv_live", "kv_append", "kv_time", "cache_len",
                  "last_pos", "kv_stage", "kv_slots", "kv_write_slots",
-                 "stage_seq")
+                 "stage_seq", "act_order", "act_next", "act_stage",
+                 "act_reads", "act_slots_out")
 
     def __init__(self, tokens=None, labels=None, scale=1.0):
         self.tokens = None if tokens is None else jnp.asarray(tokens)
@@ -173,9 +214,19 @@ class _ExecState:
         #                             state, NOT plan state: plans stay
         #                             static across join/retire churn)
         # (kind, unit) per staging-worker submission, in FIFO order —
-        # "w" weight stages and "kv" window stages interleave on ONE
-        # worker, so the abort path must drain them in this exact order
+        # "w" weight stages, "kv" window stages, and "act" checkpoint
+        # stages interleave on ONE worker, so the abort path must drain
+        # them in this exact order
         self.stage_seq: list[tuple[str, str]] = []
+        # activation-checkpoint streaming (train plans with host/ssd tiers)
+        self.act_order: list[str] = []   # plan's ActFetchOp units, in order
+        self.act_next = 0                # first act fetch not yet issued
+        self.act_stage: dict[str, Future] = {}  # unit -> staged-ckpt future
+        self.act_reads: dict[str, tuple] = {}   # unit -> (fut, buf, handle)
+        #                                         sync-mode SSD act reads
+        self.act_slots_out = 0   # ACT_CLASS submissions not yet consumed —
+        #                          capped at the slot depth so the staging
+        #                          worker's acquire can never block
 
 
 class OffloadSession:
@@ -254,6 +305,17 @@ class OffloadSession:
         lookahead = policy.lookahead or policy.inflight_blocks
         self.lookahead = max(1, min(lookahead, policy.inflight_blocks))
 
+        # Per-block activation-checkpoint tiers (train mode): resolved once
+        # so a bad act_policy fails here, not at the first train_step.
+        # offload_checkpoints=False keeps every checkpoint on device.
+        block_names = [u.name for u in model.units[1:-1]]
+        self._act_tiers: tuple[str, ...] = ()
+        if mode == "train" and block_names:
+            self._act_tiers = resolve_act_policy(
+                block_names,
+                policy.act_policy if policy.offload_checkpoints
+                else "device")
+
         # Full-overlap machinery (policy.overlap; see module docstring and
         # repro.core.overlap).  Created before the store writes below so a
         # mid-construction failure still finds them on the close() path.
@@ -299,6 +361,10 @@ class OffloadSession:
                 # staged KV windows double-buffer too: one block's (K, V)
                 # in use by compute, one being gathered + H2D'd
                 depths[KV_CLASS] = 2
+            if any(t in ("host", "ssd") for t in self._act_tiers):
+                # staged activation checkpoints double-buffer the same way:
+                # one consumed by the current block_bwd, one being staged
+                depths[ACT_CLASS] = 2
             self._device_slots = DeviceSlots(depths)
             # latch=False: every staging future is awaited by the executor
             # (FetchOp wait half, or the abort path), which delivers any
@@ -492,12 +558,18 @@ class OffloadSession:
         """The session's compiled plan for ``name``
         (train/eval/decode/prefill/decode_cached/decode_verify)."""
         if name not in self._plans:
-            compiler = {"train": compile_train, "eval": compile_eval,
-                        "decode": compile_decode,
-                        "prefill": compile_prefill,
-                        "decode_cached": compile_decode_cached,
-                        "decode_verify": compile_decode_verify}[name]
-            self._plans[name] = compiler(self.model)
+            if name == "train":
+                # the resolved per-block tiers ARE the policy (a dict/
+                # sequence spec was normalized at construction)
+                self._plans[name] = compile_train(
+                    self.model, act_policy=self._act_tiers or None)
+            else:
+                compiler = {"eval": compile_eval,
+                            "decode": compile_decode,
+                            "prefill": compile_prefill,
+                            "decode_cached": compile_decode_cached,
+                            "decode_verify": compile_decode_verify}[name]
+                self._plans[name] = compiler(self.model)
         return self._plans[name]
 
     # -- jitted helpers ------------------------------------------------------
@@ -681,28 +753,272 @@ class OffloadSession:
             raise
         self._ostats.optim_gate_seconds += time.perf_counter() - t0
 
-    # -- checkpoint offload --------------------------------------------------
+    # -- activation-checkpoint streaming -------------------------------------
+    #
+    # Lifecycle (mirrors the weight stream's split issue/wait halves):
+    #
+    #   save    ComputeOp(save_input) binds the device array as an _ActCkpt;
+    #           ActSaveOp runs _act_offload on the gradient-writer thread
+    #           under full overlap (the D2H + SSD write hide under the next
+    #           block's forward compute) and inline otherwise,
+    #   fetch   _act_issue_ahead (called inside the FetchOp lookahead
+    #           window and at each ActFetchOp) starts the SSD read + H2D
+    #           staging for upcoming act fetches, bounded by the ACT_CLASS
+    #           device-slot budget; ActFetchOp's _act_fetch only waits,
+    #   consume block_bwd takes the device array and returns the slot.
+    #
+    # Deadlock-freedom of the staged path: the executor never submits an
+    # act stage while act_slots_out >= the ACT_CLASS depth, so the staging
+    # worker's ACT acquire is always immediately satisfiable — it can
+    # never wedge the shared FIFO worker behind an unreleasable slot.
 
-    def _save_checkpoint(self, h) -> tuple:
-        if self.policy.offload_checkpoints:
-            host = np.asarray(h)   # D2H into host memory
-            handle = self.tracker.alloc("activation_checkpoints", host.nbytes,
-                                        tag="block_input")
-            return ("host", host, handle, h.dtype)
-        return ("device", h, None, h.dtype)
+    def _act_key(self, unit: str, nbytes: int) -> str:
+        # nbytes in the key: DirectNVMeEngine reuses an existing key's
+        # extents and rejects size changes, so a seq-length change must
+        # land under a fresh key (keys are overwritten per step, never
+        # deleted — the store reuses their extents)
+        return f"__act__/{unit}/{nbytes}"
 
-    def _restore_checkpoint(self, ckpt):
-        kind, payload, handle, dtype = ckpt
-        if kind == "host":
-            arr = jnp.asarray(payload, dtype=dtype)
+    def _exec_act_save(self, op: ActSaveOp, state: _ExecState) -> None:  # thread: executor
+        """ActSaveOp: offload the unit's just-saved checkpoint — on the
+        gradient-writer thread (full overlap; idle during the forward
+        pass) or inline."""
+        rec = state.checkpoints[op.unit]
+        if self._grad_writer is not None:
+            rec.fut = self._grad_writer.submit(
+                functools.partial(self._act_offload, rec, op.tier))
+        else:
+            t0 = time.perf_counter()
+            self._act_offload(rec, op.tier)
+            self._ostats.act_save_wait_seconds += time.perf_counter() - t0
+
+    def _act_offload(self, rec: _ActCkpt, tier: str) -> None:  # thread: executor, writer
+        """D2H the checkpoint and, for the ssd tier, write it onward to
+        the store and free the host copy.  A failed SSD write degrades
+        gracefully: the host copy stays live (tracked) and the checkpoint
+        serves from the host tier — no data loss, no raised step."""
+        t0 = time.perf_counter()
+        try:
+            host = np.asarray(rec.value)   # D2H
+            handle = self.tracker.alloc("activation_checkpoints",
+                                        host.nbytes, tag="block_input")
+            try:
+                if tier == "ssd":
+                    try:
+                        self.store.write(self._act_key(rec.unit, host.nbytes),
+                                         host)
+                    except Exception:
+                        self._ostats.bump("act_write_failures")
+                    else:
+                        self.tracker.free(handle)
+                        rec.shape, rec.np_dtype = host.shape, host.dtype
+                        rec.value, rec.handle = None, None
+                        rec.tier = "ssd"
+                        return
+                rec.value, rec.handle = host, handle
+                rec.tier = "host"
+            except BaseException:
+                # rec stays device-tier; the abort path discards it safely
+                self.tracker.free(handle)
+                raise
+        finally:
+            self._ostats.add_worker_seconds("act_save_seconds",
+                                            time.perf_counter() - t0)
+
+    def _act_issue_ahead(self, state: _ExecState) -> None:  # thread: executor
+        """Issue half of upcoming ActFetchOps: start SSD reads + H2D
+        staging for the next offloaded checkpoints, in plan order, so
+        block *i−1*'s checkpoint streams back under block *i*'s
+        ``block_bwd``.  Stops at a checkpoint whose save is still in
+        flight (or failed — the failure surfaces at its ActFetchOp gate)
+        and at the ACT slot / lookahead budget."""
+        order = state.act_order
+        while state.act_next < len(order):
+            unit = order[state.act_next]
+            rec = state.checkpoints.get(unit)
+            if rec is None:
+                break              # forward has not saved this one yet
+            fut = rec.fut
+            if fut is not None:
+                if not fut.done():
+                    break          # save still in flight on the writer
+                if fut.exception() is not None:
+                    break          # delivered at the ActFetchOp gate
+            if rec.tier not in ("host", "ssd") or unit in state.act_stage \
+                    or unit in state.act_reads:
+                state.act_next += 1
+                continue
+            if self._h2d is not None:
+                if state.act_slots_out >= 2:
+                    break          # ACT_CLASS budget: acquire never blocks
+                self._issue_act_stage(unit, rec, state)
+            elif rec.tier == "ssd":
+                if len(state.act_reads) >= self.lookahead:
+                    break
+                self._issue_act_read(unit, rec, state)
+            # sync-mode host tier: nothing to issue — the H2D is the wait
+            state.act_next += 1
+
+    def _issue_act_stage(self, unit: str, rec: _ActCkpt,  # thread: executor
+                         state: _ExecState) -> None:
+        """Queue one checkpoint's H2D staging (and, for ssd, its async
+        store read) on the staging worker, behind the backward pass's
+        weight stages."""
+        if rec.tier == "ssd":
+            buf = np.empty(rec.shape, rec.np_dtype)
+            handle = self.tracker.alloc("activation_checkpoints", buf.nbytes,
+                                        tag="act_fetch_staging")
+            try:
+                read_fut = self.store.read_async(
+                    self._act_key(unit, buf.nbytes), buf)
+            except BaseException:
+                self.tracker.free(handle)
+                raise
+            task = functools.partial(self._act_stage_ssd, read_fut, buf,
+                                     handle)
+        else:
+            task = functools.partial(self._act_stage_host, rec)
+        state.act_stage[unit] = self._h2d.submit(task)
+        state.stage_seq.append(("act", unit))
+        state.act_slots_out += 1
+
+    def _act_stage_ssd(self, read_fut: Future, buf: np.ndarray,  # thread: h2d-worker
+                       handle) -> object:
+        """Staging-worker body: wait the SSD read, H2D under a counted ACT
+        device slot, free the staging buffer.  On failure the slot is
+        returned here; the read buffer's tracker handle is always freed
+        (the bytes live on device or nowhere)."""
+        self._device_slots.acquire(ACT_CLASS)
+        try:
+            try:
+                read_fut.result()
+                return self._h2d_copy(buf)
+            finally:
+                self.tracker.free(handle)
+        except BaseException:
+            self._device_slots.release_all([ACT_CLASS])
+            raise
+
+    def _act_stage_host(self, rec: _ActCkpt) -> object:  # thread: h2d-worker
+        """Staging-worker body for a host-tier checkpoint: H2D under a
+        counted ACT device slot (the host copy's tracker handle is freed
+        by the executor when the staged array is consumed)."""
+        self._device_slots.acquire(ACT_CLASS)
+        try:
+            return self._h2d_copy(rec.value)
+        except BaseException:
+            self._device_slots.release_all([ACT_CLASS])
+            raise
+
+    def _issue_act_read(self, unit: str, rec: _ActCkpt,  # thread: executor
+                        state: _ExecState) -> None:
+        """Sync-mode issue half: async SSD read into a tracked host
+        buffer; the ActFetchOp waits it out and H2Ds inline."""
+        buf = np.empty(rec.shape, rec.np_dtype)
+        handle = self.tracker.alloc("activation_checkpoints", buf.nbytes,
+                                    tag="act_fetch_staging")
+        try:
+            fut = self.store.read_async(self._act_key(unit, buf.nbytes), buf)
+        except BaseException:
             self.tracker.free(handle)
-            return arr
-        return payload
+            raise
+        state.act_reads[unit] = (fut, buf, handle)
 
-    def _discard_checkpoint(self, ckpt) -> None:
-        kind, _payload, handle, _dtype = ckpt
-        if kind == "host":
-            self.tracker.free(handle)
+    def _act_fetch(self, op: ActFetchOp, state: _ExecState) -> None:  # thread: executor
+        """Wait half of the split ActFetchOp: surface a failed save
+        exactly once, top up the issue window, then make the checkpoint
+        device-resident from whichever tier it landed in."""
+        unit = op.unit
+        rec = state.checkpoints[unit]
+        if rec.fut is not None:
+            t0 = time.perf_counter()
+            try:
+                rec.fut.result()
+            except BaseException as e:
+                if self._grad_writer is not None:
+                    self._grad_writer.consume_error(e)  # delivered here
+                raise
+            finally:
+                rec.fut = None
+                self._ostats.act_save_wait_seconds += \
+                    time.perf_counter() - t0
+        self._act_issue_ahead(state)
+        t0 = time.perf_counter()
+        staged = state.act_stage.pop(unit, None)
+        if staged is not None:
+            hit = staged.done()
+            try:
+                arr = staged.result()
+            finally:
+                # satellite fix: free under finally — a failed stage must
+                # not leak the host copy's tracker handle
+                if rec.handle is not None:
+                    self.tracker.free(rec.handle)
+                    rec.handle = None
+            self._ostats.act_stage_gets += 1
+            self._ostats.act_stage_hits += int(hit)
+            rec.value, rec.tier, rec.slot = arr, "ready", True
+        elif unit in state.act_reads:
+            read_fut, buf, handle = state.act_reads.pop(unit)
+            try:
+                read_fut.result()
+                arr = jnp.asarray(buf, dtype=rec.dtype)
+            finally:
+                self.tracker.free(handle)
+            rec.value, rec.tier = arr, "ready"
+        elif rec.tier == "host":
+            # inline H2D; free under try/finally — the pre-PR-9 restore
+            # leaked the tracker handle when jnp.asarray raised
+            try:
+                arr = jnp.asarray(rec.value, dtype=rec.dtype)
+            finally:
+                self.tracker.free(rec.handle)
+                rec.handle = None
+            rec.value, rec.tier = arr, "ready"
+        elif rec.tier == "ssd":
+            # cold path (defensive): read + H2D inline
+            buf = np.empty(rec.shape, rec.np_dtype)
+            handle = self.tracker.alloc("activation_checkpoints", buf.nbytes,
+                                        tag="act_fetch_staging")
+            try:
+                self.store.read(self._act_key(unit, buf.nbytes), buf)
+                arr = jnp.asarray(buf, dtype=rec.dtype)
+            finally:
+                self.tracker.free(handle)
+            rec.value, rec.tier = arr, "ready"
+        self._ostats.act_fetch_wait_seconds += time.perf_counter() - t0
+
+    def _consume_checkpoint(self, unit: str, state: _ExecState):  # thread: executor
+        """block_bwd's checkpoint take: pop the record, return its device
+        array, and give back its ACT device slot."""
+        rec = state.checkpoints.pop(unit)
+        if rec.slot:
+            self._device_slots.release_all([ACT_CLASS])
+            state.act_slots_out -= 1
+            rec.slot = False
+        if rec.tier in ("device", "ready"):
+            return rec.value
+        # validated at plan build (block_bwd only consumes saved/ready);
+        # defensive
+        raise RuntimeError(f"checkpoint for {unit!r} is {rec.tier!r}, not "
+                           f"device-resident")
+
+    def _discard_checkpoint(self, rec: _ActCkpt,  # thread: executor
+                            state: _ExecState) -> None:
+        """Abort-path release of one checkpoint record: wait out an
+        in-flight save (the writer thread may still be mutating the
+        record), return its device slot, free its host handle."""
+        if rec.fut is not None:
+            with contextlib.suppress(BaseException):
+                rec.fut.result()
+            rec.fut = None
+        if rec.slot:
+            self._device_slots.release_all([ACT_CLASS])
+            state.act_slots_out -= 1
+            rec.slot = False
+        if rec.handle is not None:
+            self.tracker.free(rec.handle)
+            rec.handle = None
 
     # -- the executor --------------------------------------------------------
 
@@ -720,9 +1036,18 @@ class OffloadSession:
         kv_read_units = (frozenset(
             op.unit for op in plan.ops if isinstance(op, KVReadOp))
             if state.kv is not None else frozenset())
+        state.act_order = [op.unit for op in plan.ops
+                           if isinstance(op, ActFetchOp)]
+        state.act_next = 0
         try:
             for op in plan.ops:
                 if isinstance(op, FetchOp):
+                    if state.act_order:
+                        # checkpoint fetches ride the same window — issued
+                        # BEFORE this dispatch's weight stages so they are
+                        # not queued behind a weight stage that is parked
+                        # on a device slot the backward has yet to release
+                        self._act_issue_ahead(state)
                     limit = min(fetch_pos + self.lookahead, len(fetch_order))
                     while next_prefetch < limit:
                         unit = fetch_order[next_prefetch]
@@ -773,6 +1098,10 @@ class OffloadSession:
                     self._read_kv(op.unit, state)
                 elif isinstance(op, KVWriteOp):
                     self._write_kv(op, state)
+                elif isinstance(op, ActSaveOp):
+                    self._exec_act_save(op, state)
+                elif isinstance(op, ActFetchOp):
+                    self._act_fetch(op, state)
                 elif isinstance(op, GradWriteOp):
                     self._dispatch_grad_write(op.unit, state)
                 elif isinstance(op, OverflowCheckOp):
@@ -787,21 +1116,23 @@ class OffloadSession:
                     kv_tokens = state.kv_slots.pop(op.unit, None)
                     if kv_tokens:
                         self._device_slots.release_all(kv_tokens)
+                    if state.act_order:
+                        # a block_bwd just gave an ACT slot back — top the
+                        # issue window up ahead of the next weight stages
+                        self._act_issue_ahead(state)
         except BaseException:
             self._abort_execute(state)
             raise
         return state
 
     def _abort_execute(self, state: _ExecState) -> None:
-        """Error path: nothing may leak.  Host-held checkpoints are freed,
-        device-slot tokens returned (resident units first, so a staging
-        worker blocked on a slot can finish), staged fetches waited out,
-        and outstanding reads drained back to the pool.  (KV pool slots
-        belong to the SpillableKVCache, whose owner — generate()'s finally
-        — closes it.)"""
-        for ckpt in state.checkpoints.values():
-            self._discard_checkpoint(ckpt)
-        state.checkpoints.clear()
+        """Error path: nothing may leak.  Device-slot tokens are returned
+        (resident units first, so a staging worker blocked on a slot can
+        finish), staged fetches waited out, the gradient writer drained
+        (resolving in-flight activation saves), host-held checkpoints and
+        staged act reads freed, and outstanding reads drained back to the
+        pool.  (KV pool slots belong to the SpillableKVCache, whose owner
+        — generate()'s finally — closes it.)"""
         for tokens in state.live_slots.values():
             self._device_slots.release_all(tokens)
         state.live_slots.clear()
@@ -809,15 +1140,17 @@ class OffloadSession:
             self._device_slots.release_all(tokens)
         state.kv_slots.clear()
         state.live.clear()
-        # Staged fetches/KV windows must settle before the swapper drain: a
-        # queued staging job that ran *after* the drain would re-issue its
-        # reads and leak device slots.  Weight and KV stages interleave on
-        # ONE FIFO worker, so waits must follow stage_seq's submission
-        # order — waiting a later weight future while an earlier KV task
-        # still blocks on a kv device slot would deadlock.  Consumed
-        # submissions have empty deques / absent keys and are skipped; each
-        # released token keeps the worker's next blocked acquire
-        # satisfiable.
+        # Staged fetches/KV windows/act checkpoints must settle before the
+        # swapper drain: a queued staging job that ran *after* the drain
+        # would re-issue its reads and leak device slots.  All three kinds
+        # interleave on ONE FIFO worker, so waits must follow stage_seq's
+        # submission order — waiting a later weight future while an
+        # earlier KV task still blocks on a kv device slot would deadlock.
+        # (Act stages never block on their slot: the executor's
+        # act_slots_out cap guarantees a free ACT slot per submission.)
+        # Consumed submissions have empty deques / absent keys and are
+        # skipped; each released token keeps the worker's next blocked
+        # acquire satisfiable.
         for kind, unit in state.stage_seq:
             if kind == "w":
                 pending = state.h2d.get(unit)
@@ -829,7 +1162,7 @@ class OffloadSession:
                 except BaseException:
                     continue      # the worker released its own claims
                 self._device_slots.release_all(tokens)
-            else:
+            elif kind == "kv":
                 fut = state.kv_stage.pop(unit, None)
                 if fut is None:
                     continue
@@ -838,14 +1171,35 @@ class OffloadSession:
                 except BaseException:
                     continue      # the worker released its own slot
                 self._device_slots.release_all([KV_CLASS])
+            else:   # "act"
+                fut = state.act_stage.pop(unit, None)
+                if fut is None:
+                    continue
+                try:
+                    fut.result()
+                except BaseException:
+                    continue      # the worker released its own slot
+                self._device_slots.release_all([ACT_CLASS])
         state.stage_seq.clear()
         state.h2d.clear()
         state.kv_live.clear()
         state.kv_append.clear()
+        state.act_stage.clear()
         if self._grad_writer is not None:
-            # the original executor error propagates
+            # the original executor error propagates; the drain also
+            # resolves in-flight activation saves, so the checkpoint
+            # discard below sees settled records
             with contextlib.suppress(BaseException):
                 self._grad_writer.drain()
+        for rec in state.checkpoints.values():
+            self._discard_checkpoint(rec, state)
+        state.checkpoints.clear()
+        for read_fut, _buf, handle in state.act_reads.values():
+            with contextlib.suppress(BaseException):
+                read_fut.result()   # the async pread targets the buffer
+            self.tracker.free(handle)
+        state.act_reads.clear()
+        state.act_slots_out = 0
         self.swapper.drain()
 
     def _compute(self, op: ComputeOp, state: _ExecState) -> None:
@@ -854,7 +1208,10 @@ class OffloadSession:
             state.h = self._jit_embed(params, state.tokens)
         elif op.kind == "block":
             if op.save_input:
-                state.checkpoints[op.unit] = self._save_checkpoint(state.h)
+                # bind the device array only — the D2H (and SSD write)
+                # happen at the unit's ActSaveOp, off the executor thread
+                # under full overlap; device-tier plans keep it as-is
+                state.checkpoints[op.unit] = _ActCkpt(op.unit, state.h)
             state.h = self._jit_block(params, state.h)
         elif op.kind == "head_loss_grad":
             state.loss, head_grads, state.dh = self._jit_head(
@@ -883,9 +1240,19 @@ class OffloadSession:
                 chunk=self.decode_spec.bucket)
             state.kv_append[op.unit] = (k, v)
         elif op.kind == "block_bwd":
-            x = self._restore_checkpoint(state.checkpoints.pop(op.unit))
+            x = self._consume_checkpoint(op.unit, state)
             state.grads[op.unit], state.dh = self._jit_block_bwd(
                 params, x, state.dh)
+        elif op.kind == "block_recompute":
+            # re-run this block's forward from its own (peeked, not
+            # consumed — its block_bwd still needs it) checkpoint to
+            # re-derive the successor's dropped checkpoint
+            src = state.checkpoints[op.unit]
+            if src.tier not in ("device", "ready"):  # validated; defensive
+                raise RuntimeError(f"recompute source for {op.unit!r} is "
+                                   f"{src.tier!r}, not device-resident")
+            state.checkpoints[op.recompute_for] = _ActCkpt(
+                op.recompute_for, self._jit_block(params, src.value))
         elif op.kind == "embed_bwd":
             state.grads[op.unit] = self._jit_embed_bwd(
                 params, state.tokens, state.dh)
@@ -1256,6 +1623,15 @@ class OffloadSession:
             - o0["optim_prefetch_wait_seconds"])
         self.metrics["overflow_screen_s"] = (
             o1["overflow_screen_seconds"] - o0["overflow_screen_seconds"])
+        # activation streaming: executor stall on checkpoint saves (gating
+        # on a still-pending writer-thread save, or the inline D2H + store
+        # write) and on staged checkpoint fetches at block_bwd gates
+        self.metrics["act_save_wait_s"] = (
+            o1["act_save_wait_seconds"] - o0["act_save_wait_seconds"])
+        self.metrics["act_fetch_wait_s"] = (
+            o1["act_fetch_wait_seconds"] - o0["act_fetch_wait_seconds"])
+        self.metrics["act_write_failures"] = (
+            o1["act_write_failures"] - o0["act_write_failures"])
         return self.metrics
 
     def eval_loss(self, tokens: np.ndarray, labels: np.ndarray) -> float:

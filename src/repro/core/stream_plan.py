@@ -3,7 +3,7 @@
 The paper's pipeline (§IV-A, Fig. 5/6) is a *lifecycle* — pool-slot checkout
 → async SSD read → H2D → compute → release — that the seed code hard-coded
 inside ``OffloadedTrainer.train_step``.  This module lifts that lifecycle
-into data: a :class:`StreamPlan` is a linear sequence of eight op kinds
+into data: a :class:`StreamPlan` is a linear sequence of ten op kinds
 
 * :class:`FetchOp`    — stream one unit's compute weights SSD→pool→device,
 * :class:`ComputeOp`  — run one jitted stage against the resident weights,
@@ -14,6 +14,15 @@ into data: a :class:`StreamPlan` is a linear sequence of eight op kinds
                         out an SSD refill if the layer had spilled),
 * :class:`KVWriteOp`  — land freshly produced K/V in the unit's host slot,
                         spilling onward past the residency budget,
+* :class:`ActSaveOp`  — offload one block's activation checkpoint: D2H on
+                        the gradient-writer thread (hidden under the next
+                        block's forward compute) and, for the ``ssd``
+                        tier, an onward store write that frees the host
+                        copy (SSDTrain's activation leg, arXiv 2408.10013),
+* :class:`ActFetchOp` — make an offloaded checkpoint device-resident for
+                        its ``block_bwd``: the SSD read + H2D are issued
+                        inside the lookahead window so block *i−1*'s
+                        checkpoint streams back under block *i*'s backward,
 * :class:`OverflowCheckOp` — drain the gradient write-back queue, screen
                         the flat buffer for Inf/NaN, update the loss
                         scaler (decides whether the step applies),
@@ -70,7 +79,21 @@ COMPUTE_KINDS = frozenset({
     "block_step",    # h, k, v = block_step(params, h, kc, vc, len)
     "block_verify",  # h, k, v = block_verify(params, h, kc, vc, len)
                      #   (B, K) spec-decode draft window; K-token append
+    "block_recompute",  # ckpt[recompute_for] = block_apply(params, ckpt[unit])
+                     #   re-derive a dropped checkpoint from the previous
+                     #   block's (peeked, not consumed) checkpoint
 })
+
+# Activation-checkpoint tiers a block can be assigned (`act_policy`):
+#   host       D2H into pinned host memory, H2D back for block_bwd
+#   ssd        D2H + SSD write on the save side; SSD read + H2D prefetched
+#              under the backward pass (SSDTrain-style streamed activations)
+#   recompute  no checkpoint saved: backward re-runs `block` from the
+#              previous block's checkpoint (trade FLOPs for bytes)
+#   device     keep the device array (offload_checkpoints=False)
+ACT_TIERS = frozenset({"host", "ssd", "recompute", "device"})
+# Tiers an ActSaveOp can carry (the offloaded ones).
+_ACT_SAVE_TIERS = frozenset({"host", "ssd"})
 
 _GRAD_KINDS = frozenset({"head_loss_grad", "block_bwd", "embed_bwd"})
 _KV_PRODUCING_KINDS = frozenset({"block_prefill", "block_step",
@@ -90,11 +113,17 @@ class FetchOp:
 @dataclass(frozen=True)
 class ComputeOp:
     """Run one jitted stage; ``save_input`` checkpoints the stage's
-    activation input, which the unit's ``block_bwd`` stage restores."""
+    activation input, which the unit's ``block_bwd`` stage restores.
+
+    ``recompute_for`` is set only on ``block_recompute`` stages: run
+    ``block_apply`` with *this* unit's weights against its own (peeked,
+    not consumed) checkpoint and store the output as ``recompute_for``'s
+    checkpoint — the recompute leg of the per-block activation policy."""
 
     unit: str
     kind: str
     save_input: bool = False
+    recompute_for: str | None = None
 
 
 @dataclass(frozen=True)
@@ -163,6 +192,32 @@ class OverflowCheckOp:
 
 
 @dataclass(frozen=True)
+class ActSaveOp:
+    """Offload the unit's just-saved activation checkpoint: D2H into host
+    memory and — for ``tier="ssd"`` — write it onward to the store, after
+    which the host copy is freed.  The executor runs the body on the
+    gradient-writer thread under full overlap (the forward's save D2H
+    hides under the next block's compute) and inline otherwise.  A failed
+    SSD write degrades gracefully: the host copy is re-marked live and
+    the checkpoint serves from the host tier."""
+
+    unit: str
+    tier: str = "host"
+
+
+@dataclass(frozen=True)
+class ActFetchOp:
+    """Make the unit's offloaded checkpoint device-resident for its
+    ``block_bwd`` (or for a successor's ``block_recompute``).  Like
+    FetchOp, the executor splits this: SSD reads + H2D staging for
+    upcoming act fetches are issued inside the lookahead window — block
+    *i−1*'s checkpoint streams back under block *i*'s ``block_bwd`` —
+    and this op only waits for the staged device array."""
+
+    unit: str
+
+
+@dataclass(frozen=True)
 class OptimStepOp:
     """Stream one unit's (master, m, v) subgroups through the host Adam
     and emit fresh compute weights.  Skipped when the overflow check
@@ -176,7 +231,7 @@ class OptimStepOp:
 
 
 Op = (FetchOp | ComputeOp | GradWriteOp | ReleaseOp | KVReadOp | KVWriteOp
-      | OverflowCheckOp | OptimStepOp)
+      | ActSaveOp | ActFetchOp | OverflowCheckOp | OptimStepOp)
 
 
 class PlanError(ValueError):
@@ -209,9 +264,17 @@ class StreamPlan:
         * no double fetch while resident, no release of a non-resident unit,
         * every fetch is eventually released (pool capacity is returned),
         * GradWriteOp must follow a grad-producing ComputeOp for its unit,
-        * ``block_bwd`` consumes a checkpoint a prior ``save_input`` op
-          saved for its unit, and every saved checkpoint is consumed
-          (host checkpoint memory is returned),
+        * checkpoints walk a per-unit lifecycle ``saved`` (a ``save_input``
+          compute) → ``offloaded`` (ActSaveOp, at most once, tier host|ssd)
+          → ``ready`` (ActFetchOp, at most once) → consumed (the unit's
+          ``block_bwd``).  ``block_bwd`` may consume a ``saved`` checkpoint
+          directly (device/host-resident modes have no Act ops) but never
+          an ``offloaded`` one — the bytes are on the SSD;
+          ``block_recompute`` peeks (does not consume) its own unit's
+          ``saved``/``ready`` checkpoint and produces ``recompute_for``'s,
+          which must not already exist.  Every checkpoint is eventually
+          consumed and every ActSaveOp eventually fetched (host checkpoint
+          memory and store staging are returned),
         * ``block_step`` / ``block_verify`` consume a prior KVReadOp for
           their unit, every KVReadOp is consumed, and every KV-producing
           compute is landed by a KVWriteOp whose ``mode`` matches the
@@ -230,7 +293,8 @@ class StreamPlan:
         """
         resident: set[str] = set()
         pending_grads: set[str] = set()
-        saved_inputs: set[str] = set()
+        # unit -> checkpoint state: "saved" | "offloaded" | "ready"
+        ckpt: dict[str, str] = {}
         kv_loaded: set[str] = set()
         pending_kv: dict[str, str] = {}   # unit -> producing compute kind
         grads_written: set[str] = set()
@@ -252,15 +316,51 @@ class StreamPlan:
                     raise PlanError(f"{where}: compute on non-resident unit "
                                     f"{op.unit!r}")
                 if op.save_input:
-                    if op.unit in saved_inputs:
+                    if op.kind == "block_recompute":
+                        raise PlanError(f"{where}: block_recompute must not "
+                                        f"save_input (it *produces* "
+                                        f"{op.recompute_for!r}'s checkpoint)")
+                    if op.unit in ckpt:
                         raise PlanError(f"{where}: {op.unit!r} already has a "
                                         f"saved checkpoint")
-                    saved_inputs.add(op.unit)
+                    ckpt[op.unit] = "saved"
+                if op.recompute_for is not None and \
+                        op.kind != "block_recompute":
+                    raise PlanError(f"{where}: recompute_for on a "
+                                    f"{op.kind!r} compute (only "
+                                    f"block_recompute produces a successor "
+                                    f"checkpoint)")
+                if op.kind == "block_recompute":
+                    if op.recompute_for is None:
+                        raise PlanError(f"{where}: block_recompute for "
+                                        f"{op.unit!r} with no recompute_for "
+                                        f"target")
+                    if op.recompute_for == op.unit:
+                        raise PlanError(f"{where}: block_recompute target is "
+                                        f"the source unit {op.unit!r}")
+                    # peeks (does not consume) its own checkpoint: the bytes
+                    # must be device-reachable — saved, or fetched back
+                    if ckpt.get(op.unit) not in ("saved", "ready"):
+                        raise PlanError(
+                            f"{where}: block_recompute for {op.unit!r} with "
+                            f"no device-reachable checkpoint (state: "
+                            f"{ckpt.get(op.unit)!r} — an offloaded "
+                            f"checkpoint needs its ActFetchOp first)")
+                    if op.recompute_for in ckpt:
+                        raise PlanError(f"{where}: block_recompute target "
+                                        f"{op.recompute_for!r} already has a "
+                                        f"checkpoint")
+                    ckpt[op.recompute_for] = "saved"
                 if op.kind == "block_bwd":
-                    if op.unit not in saved_inputs:
+                    state = ckpt.get(op.unit)
+                    if state is None:
                         raise PlanError(f"{where}: block_bwd for {op.unit!r} "
                                         f"with no saved checkpoint")
-                    saved_inputs.discard(op.unit)
+                    if state == "offloaded":
+                        raise PlanError(f"{where}: block_bwd for {op.unit!r} "
+                                        f"before its ActFetchOp (the "
+                                        f"checkpoint bytes are offloaded)")
+                    del ckpt[op.unit]
                 if op.kind in _GRAD_KINDS:
                     pending_grads.add(op.unit)
                 if op.kind in ("block_step", "block_verify"):
@@ -273,6 +373,29 @@ class StreamPlan:
                         raise PlanError(f"{where}: {op.unit!r} already has "
                                         f"unwritten K/V")
                     pending_kv[op.unit] = op.kind
+            elif isinstance(op, ActSaveOp):
+                if op.tier not in _ACT_SAVE_TIERS:
+                    raise PlanError(f"{where}: unknown activation save tier "
+                                    f"{op.tier!r} (expected one of "
+                                    f"{sorted(_ACT_SAVE_TIERS)})")
+                state = ckpt.get(op.unit)
+                if state is None:
+                    raise PlanError(f"{where}: activation save for "
+                                    f"{op.unit!r} with no saved checkpoint")
+                if state != "saved":
+                    raise PlanError(f"{where}: duplicate activation save "
+                                    f"for {op.unit!r} (state: {state!r})")
+                ckpt[op.unit] = "offloaded"
+            elif isinstance(op, ActFetchOp):
+                state = ckpt.get(op.unit)
+                if state is None:
+                    raise PlanError(f"{where}: activation fetch for "
+                                    f"{op.unit!r} with no checkpoint")
+                if state != "offloaded":
+                    raise PlanError(f"{where}: activation fetch for "
+                                    f"{op.unit!r} without an ActSaveOp "
+                                    f"(state: {state!r})")
+                ckpt[op.unit] = "ready"
             elif isinstance(op, KVReadOp):
                 if op.unit in kv_loaded:
                     raise PlanError(f"{where}: double KV read for "
@@ -351,9 +474,13 @@ class StreamPlan:
         if pending_grads:
             raise PlanError(f"{self.name}: grads never written: "
                             f"{sorted(pending_grads)}")
-        if saved_inputs:
+        unfetched = sorted(u for u, s in ckpt.items() if s == "offloaded")
+        if unfetched:
+            raise PlanError(f"{self.name}: activation saves never fetched: "
+                            f"{unfetched}")
+        if ckpt:
             raise PlanError(f"{self.name}: checkpoints never restored: "
-                            f"{sorted(saved_inputs)}")
+                            f"{sorted(ckpt)}")
         if kv_loaded:
             raise PlanError(f"{self.name}: KV reads never consumed: "
                             f"{sorted(kv_loaded)}")
@@ -374,6 +501,69 @@ def _unit_names(model) -> tuple[str, list[str], str]:
     return names[0], names[1:-1], names[-1]
 
 
+def resolve_act_policy(blocks: list[str], spec) -> tuple[str, ...]:
+    """Resolve an ``act_policy`` spec into one tier per block.
+
+    ``spec`` may be:
+
+    * ``None`` — every block checkpoints to pinned host memory (``host``,
+      the pre-activation-streaming behaviour),
+    * a single tier name — uniform, except ``"recompute"``, which becomes
+      the classic checkpoint-every-other ladder (even-index blocks save to
+      SSD, odd-index blocks recompute from them): a chain where *no* block
+      kept a checkpoint would have nothing to recompute from,
+    * a ``dict`` block-name → tier (missing blocks default to ``host``),
+    * a sequence of tiers, positional, one per block.
+
+    Chain rules (violations raise :class:`PlanError`):
+
+    * block 0 cannot be ``recompute`` — the embedding output is not
+      checkpointed, so there is no predecessor checkpoint to re-run from,
+    * two consecutive ``recompute`` blocks are rejected — block *i*'s
+      recompute runs from block *i−1*'s checkpoint, which must exist.
+    """
+    n = len(blocks)
+    if spec is None:
+        spec = "host"
+    if isinstance(spec, str):
+        if spec not in ACT_TIERS:
+            raise PlanError(f"unknown act_policy tier {spec!r} (expected "
+                            f"one of {sorted(ACT_TIERS)})")
+        if spec == "recompute":
+            tiers = tuple("ssd" if i % 2 == 0 else "recompute"
+                          for i in range(n))
+        else:
+            tiers = (spec,) * n
+    elif isinstance(spec, dict):
+        unknown = sorted(set(spec) - set(blocks))
+        if unknown:
+            raise PlanError(f"act_policy names unknown blocks: {unknown}")
+        tiers = tuple(spec.get(b, "host") for b in blocks)
+    else:
+        tiers = tuple(spec)
+        if len(tiers) != n:
+            raise PlanError(f"act_policy has {len(tiers)} entries for "
+                            f"{n} blocks")
+    for i, t in enumerate(tiers):
+        if t not in ACT_TIERS:
+            raise PlanError(f"unknown act_policy tier {t!r} for block "
+                            f"{blocks[i]!r} (expected one of "
+                            f"{sorted(ACT_TIERS)})")
+        if t == "recompute":
+            if i == 0:
+                raise PlanError(f"block 0 ({blocks[0]!r}) cannot be "
+                                f"'recompute': the embedding output is not "
+                                f"checkpointed, so there is no predecessor "
+                                f"checkpoint to re-run from")
+            if tiers[i - 1] == "recompute":
+                raise PlanError(
+                    f"consecutive 'recompute' blocks {blocks[i - 1]!r}, "
+                    f"{blocks[i]!r}: block {blocks[i]!r}'s recompute runs "
+                    f"from {blocks[i - 1]!r}'s checkpoint, which "
+                    f"'recompute' drops")
+    return tiers
+
+
 def _forward_ops(model, *, checkpoint: bool) -> list[Op]:
     embed, blocks, _head = _unit_names(model)
     ops: list[Op] = [FetchOp(embed), ComputeOp(embed, "embed"),
@@ -385,10 +575,20 @@ def _forward_ops(model, *, checkpoint: bool) -> list[Op]:
     return ops
 
 
-def compile_train(model) -> StreamPlan:
+def compile_train(model, act_policy=None) -> StreamPlan:
     """Forward (checkpointing block inputs) + loss/cotangent + reverse
     backward + embedding backward + overflow screen + per-unit optimizer —
     the whole training step as data.
+
+    ``act_policy`` (see :func:`resolve_act_policy`) picks each block's
+    checkpoint tier.  ``host``/``ssd`` blocks get an ActSaveOp after their
+    forward compute and an ActFetchOp before their ``block_bwd``
+    (ssd-tier saves free the host copy once the store write lands — the
+    forward's resident-checkpoint footprint stops growing with depth);
+    ``recompute`` blocks save nothing and instead re-run the *previous*
+    block forward from its (fetched-back, peeked-not-consumed) checkpoint
+    just before their own ``block_bwd``; ``device`` blocks keep the
+    device array (``offload_checkpoints=False``).
 
     The OptimStepOps come last, ordered by the *next* step's fetch order
     (embed, blocks, head): under full overlap each unit's Adam write-back
@@ -397,11 +597,35 @@ def compile_train(model) -> StreamPlan:
     longer than one subgroup.
     """
     embed, blocks, head = _unit_names(model)
-    ops = _forward_ops(model, checkpoint=True)
+    tiers = resolve_act_policy(blocks, act_policy)
+    ops: list[Op] = [FetchOp(embed), ComputeOp(embed, "embed"),
+                     ReleaseOp(embed)]
+    for b, tier in zip(blocks, tiers):
+        ops += [FetchOp(b),
+                ComputeOp(b, "block", save_input=(tier != "recompute"))]
+        if tier in _ACT_SAVE_TIERS:
+            ops.append(ActSaveOp(b, tier))
+        ops.append(ReleaseOp(b))
     ops += [FetchOp(head), ComputeOp(head, "head_loss_grad"),
             ReleaseOp(head), GradWriteOp(head)]
-    for b in reversed(blocks):
-        ops += [FetchOp(b), ComputeOp(b, "block_bwd"),
+    # a block fetched back early to seed a successor's recompute keeps its
+    # checkpoint device-resident ("ready") for its own block_bwd later —
+    # no second ActFetchOp
+    fetched_early: set[str] = set()
+    for i in reversed(range(len(blocks))):
+        b = blocks[i]
+        if tiers[i] == "recompute":
+            p = blocks[i - 1]
+            ops.append(FetchOp(p))
+            if tiers[i - 1] in _ACT_SAVE_TIERS and p not in fetched_early:
+                ops.append(ActFetchOp(p))
+                fetched_early.add(p)
+            ops += [ComputeOp(p, "block_recompute", recompute_for=b),
+                    ReleaseOp(p)]
+        ops.append(FetchOp(b))
+        if tiers[i] in _ACT_SAVE_TIERS and b not in fetched_early:
+            ops.append(ActFetchOp(b))
+        ops += [ComputeOp(b, "block_bwd"),
                 ReleaseOp(b), GradWriteOp(b)]
     ops += [FetchOp(embed), ComputeOp(embed, "embed_bwd"),
             ReleaseOp(embed), GradWriteOp(embed)]

@@ -1,0 +1,306 @@
+"""Activation-checkpoint streaming (PR 9): ActSaveOp/ActFetchOp plan
+lifecycle, per-block act-policy resolution, and the executor's activation
+stream under fault injection — a failed SSD write degrades to the host
+tier, a failed prefetch surfaces exactly once at the ActFetchOp gate, and
+an abort mid-backward drains every in-flight save/fetch, slot, and
+tracker handle."""
+
+from concurrent.futures import Future
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import (ActFetchOp, ActSaveOp, ComputeOp, FetchOp,
+                        GradWriteOp, OffloadPolicy, OffloadSession,
+                        PlanError, ReleaseOp, StreamPlan, compile_train,
+                        resolve_act_policy)
+from repro.core.model_adapter import make_offloadable_lm
+from repro.data import DataLoader, SyntheticTextDataset
+
+CFG = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab=256)
+
+
+def _model(seed=0):
+    return make_offloadable_lm(CFG, jax.random.PRNGKey(seed))
+
+
+def _batch(batch=2, seq=32, seed=1):
+    dl = DataLoader(SyntheticTextDataset(vocab=256, seed=seed), batch=batch,
+                    seq_len=seq)
+    return dl.next_batch()
+
+
+def _session(root, tier, overlap="full"):
+    policy = (OffloadPolicy.preset("memascend").with_store(root)
+              .with_adam(lr=1e-3).with_overlap(overlap)
+              .with_activations(tier).build())
+    return OffloadSession(_model(), policy)
+
+
+def _assert_act_drained(s):
+    """Abort/close invariant: the activation stream released every
+    tracker handle and counted device slot."""
+    assert s.tracker.component("activation_checkpoints").live_allocated == 0
+    if s._device_slots is not None:
+        assert s._device_slots.idle()
+
+
+# -- plan validator: ActSaveOp / ActFetchOp lifecycle ------------------------
+
+def _plan(*ops):
+    return StreamPlan("t", tuple(ops))
+
+
+_SAVE_CYCLE = (FetchOp("b0"),
+               ComputeOp("b0", "block", save_input=True),
+               ActSaveOp("b0", "ssd"),
+               ReleaseOp("b0"))
+_FETCH_CYCLE = (FetchOp("b0"),
+                ActFetchOp("b0"),
+                ComputeOp("b0", "block_bwd"),
+                ReleaseOp("b0"),
+                GradWriteOp("b0"))
+
+
+def test_valid_act_save_fetch_cycle():
+    _plan(*_SAVE_CYCLE, *_FETCH_CYCLE)   # validates in __post_init__
+
+
+def test_act_save_without_checkpoint():
+    with pytest.raises(PlanError, match="no saved checkpoint"):
+        _plan(FetchOp("b0"), ComputeOp("b0", "block"),
+              ActSaveOp("b0", "ssd"), ReleaseOp("b0"))
+
+
+def test_act_save_twice():
+    with pytest.raises(PlanError, match="duplicate activation save"):
+        _plan(FetchOp("b0"), ComputeOp("b0", "block", save_input=True),
+              ActSaveOp("b0", "ssd"), ActSaveOp("b0", "host"),
+              ReleaseOp("b0"))
+
+
+def test_act_save_rejects_non_offload_tier():
+    with pytest.raises(PlanError, match="unknown activation save tier"):
+        _plan(FetchOp("b0"), ComputeOp("b0", "block", save_input=True),
+              ActSaveOp("b0", "device"), ReleaseOp("b0"))
+
+
+def test_act_fetch_without_save():
+    with pytest.raises(PlanError, match="without an ActSaveOp"):
+        _plan(FetchOp("b0"), ComputeOp("b0", "block", save_input=True),
+              ActFetchOp("b0"), ComputeOp("b0", "block_bwd"),
+              ReleaseOp("b0"), GradWriteOp("b0"))
+
+
+def test_block_bwd_on_offloaded_checkpoint():
+    with pytest.raises(PlanError, match="before its ActFetchOp"):
+        _plan(*_SAVE_CYCLE,
+              FetchOp("b0"), ComputeOp("b0", "block_bwd"),
+              ReleaseOp("b0"), GradWriteOp("b0"))
+
+
+def test_act_save_never_fetched():
+    with pytest.raises(PlanError, match="activation saves never fetched"):
+        _plan(*_SAVE_CYCLE)
+
+
+def test_recompute_source_must_be_device_reachable():
+    # b0's checkpoint is offloaded (no ActFetchOp yet): the recompute
+    # cannot peek bytes that live on the SSD
+    with pytest.raises(PlanError, match="no device-reachable checkpoint"):
+        _plan(*_SAVE_CYCLE,
+              FetchOp("b0"),
+              ComputeOp("b0", "block_recompute", recompute_for="b1"),
+              ReleaseOp("b0"))
+
+
+def test_recompute_target_collision():
+    with pytest.raises(PlanError, match="already has a checkpoint"):
+        _plan(FetchOp("b0"), ComputeOp("b0", "block", save_input=True),
+              FetchOp("b1"), ComputeOp("b1", "block", save_input=True),
+              ReleaseOp("b1"),
+              ComputeOp("b0", "block_recompute", recompute_for="b1"),
+              ReleaseOp("b0"))
+
+
+def test_recompute_plan_compiles_and_validates():
+    model = make_offloadable_lm(
+        ModelConfig(name="tiny4", family="dense", n_layers=4, d_model=64,
+                    n_heads=4, n_kv_heads=2, d_ff=128, vocab=256),
+        jax.random.PRNGKey(0))
+    plan = compile_train(model, act_policy="recompute")
+    saves = [op for op in plan.ops if isinstance(op, ActSaveOp)]
+    fetches = [op for op in plan.ops if isinstance(op, ActFetchOp)]
+    recomputes = [op for op in plan.ops if isinstance(op, ComputeOp)
+                  and op.kind == "block_recompute"]
+    # every-other ladder over 4 blocks: even blocks save to SSD, odd
+    # blocks re-run their predecessor's forward
+    assert len(saves) == len(fetches) == 2
+    assert all(op.tier == "ssd" for op in saves)
+    assert len(recomputes) == 2
+    assert all(op.recompute_for is not None and not op.save_input
+               for op in recomputes)
+
+
+def test_compile_train_accepts_every_policy_shape():
+    model = _model()
+    blocks = [f"block_{i:03d}" for i in range(CFG.n_layers)]
+    for spec in (None, "host", "ssd", "device", "recompute",
+                 {blocks[0]: "ssd"}, ["host", "ssd"]):
+        compile_train(model, act_policy=spec)   # must validate
+
+
+# -- resolve_act_policy chain rules ------------------------------------------
+
+def test_resolve_uniform_and_every_other():
+    blocks = ["a", "b", "c", "d"]
+    assert resolve_act_policy(blocks, None) == ("host",) * 4
+    assert resolve_act_policy(blocks, "ssd") == ("ssd",) * 4
+    assert resolve_act_policy(blocks, "recompute") == (
+        "ssd", "recompute", "ssd", "recompute")
+
+
+def test_resolve_dict_defaults_and_unknown_name():
+    blocks = ["a", "b"]
+    assert resolve_act_policy(blocks, {"b": "ssd"}) == ("host", "ssd")
+    with pytest.raises(PlanError, match="unknown blocks"):
+        resolve_act_policy(blocks, {"nope": "ssd"})
+
+
+def test_resolve_sequence_length_and_tier_checks():
+    with pytest.raises(PlanError, match="entries for"):
+        resolve_act_policy(["a", "b"], ["host"])
+    with pytest.raises(PlanError, match="unknown act_policy tier"):
+        resolve_act_policy(["a", "b"], ["host", "pmem"])
+
+
+def test_resolve_block0_cannot_recompute():
+    with pytest.raises(PlanError, match="block 0"):
+        resolve_act_policy(["a", "b"], ["recompute", "host"])
+
+
+def test_resolve_consecutive_recompute_rejected():
+    with pytest.raises(PlanError, match="consecutive 'recompute'"):
+        resolve_act_policy(["a", "b", "c"],
+                           ["ssd", "recompute", "recompute"])
+
+
+# -- executor: loss identity across tiers ------------------------------------
+
+def test_loss_identity_across_tiers(tmp_store_root):
+    """host / ssd / recompute / ssd-under-sync run the same floats in the
+    same order — losses must match bit for bit."""
+    losses = {}
+    for name, tier, overlap in (("host", "host", "full"),
+                                ("ssd", "ssd", "full"),
+                                ("recompute", "recompute", "full"),
+                                ("ssd_sync", "ssd", "sync")):
+        with _session(f"{tmp_store_root}/{name}", tier, overlap) as s:
+            run = []
+            for seed in (1, 2):
+                b = _batch(seed=seed)
+                m = s.train_step(b["tokens"], b["labels"])
+                run.append(m["loss"])
+                assert m["act_fetch_wait_s"] >= 0.0
+                assert m["act_save_wait_s"] >= 0.0
+            losses[name] = run
+        s.tracker.assert_quiescent()
+    assert losses["host"] == losses["ssd"] == losses["recompute"] \
+        == losses["ssd_sync"]
+
+
+# -- executor: fault injection ------------------------------------------------
+
+def test_failed_ssd_write_degrades_to_host_tier(tmp_store_root):
+    """An act-store write failure must not fail the step: the host copy
+    is re-marked live and the checkpoint serves from the host tier, with
+    the same loss as an unbroken run."""
+    with _session(f"{tmp_store_root}/clean", "ssd") as s:
+        b = _batch()
+        clean_loss = s.train_step(b["tokens"], b["labels"])["loss"]
+    s.tracker.assert_quiescent()
+
+    with _session(f"{tmp_store_root}/broken", "ssd") as s:
+        real_write = s.store.write
+
+        def flaky_write(key, data):
+            if key.startswith("__act__/"):
+                raise IOError("injected act write failure")
+            return real_write(key, data)
+
+        s.store.write = flaky_write
+        b = _batch()
+        m = s.train_step(b["tokens"], b["labels"])
+        assert m["act_write_failures"] == CFG.n_layers
+        assert m["loss"] == clean_loss
+        _assert_act_drained(s)
+    s.tracker.assert_quiescent()
+
+
+def test_failed_act_prefetch_surfaces_once_at_gate(tmp_store_root):
+    """A failed act read is delivered exactly once, at that checkpoint's
+    ActFetchOp; the abort drains every slot and handle, and the session
+    trains again once the store recovers."""
+    with _session(f"{tmp_store_root}/s", "ssd") as s:
+        real_read_async = s.store.read_async
+
+        def failing_read_async(key, out):
+            if key.startswith("__act__/"):
+                f = Future()
+                f.set_exception(IOError("injected act read failure"))
+                return f
+            return real_read_async(key, out)
+
+        s.store.read_async = failing_read_async
+        b = _batch()
+        with pytest.raises(IOError, match="injected act read"):
+            s.train_step(b["tokens"], b["labels"])
+        assert len(s.swapper._inflight) == 0
+        _assert_act_drained(s)
+
+        s.store.read_async = real_read_async
+        m = s.train_step(b["tokens"], b["labels"])   # recovered
+        assert np.isfinite(m["loss"])
+        _assert_act_drained(s)
+    s.tracker.assert_quiescent()
+
+
+def test_act_read_submit_failure_does_not_leak(tmp_store_root):
+    """read_async raising *synchronously* (queue-full analogue) fails at
+    the issue site — the staging buffer's tracker handle must still be
+    freed (the analyzer's resource-lifecycle contract on the act path)."""
+    with _session(f"{tmp_store_root}/s", "ssd") as s:
+        def exploding_read_async(key, out):
+            raise RuntimeError("injected submit failure")
+
+        s.store.read_async = exploding_read_async
+        b = _batch()
+        with pytest.raises(RuntimeError, match="injected submit"):
+            s.train_step(b["tokens"], b["labels"])
+        _assert_act_drained(s)
+    s.tracker.assert_quiescent()
+
+
+def test_abort_mid_backward_drains_act_stream(tmp_store_root):
+    """block_bwd failing mid-backward aborts with saves resolved, staged
+    fetches waited out, and activation live bytes back to zero."""
+    with _session(f"{tmp_store_root}/s", "ssd") as s:
+        calls = {"n": 0}
+        real_bwd = s._jit_block_bwd
+
+        def flaky_bwd(*a, **kw):
+            calls["n"] += 1
+            if calls["n"] == 1:    # first block_bwd: acts still in flight
+                raise RuntimeError("injected backward failure")
+            return real_bwd(*a, **kw)
+
+        s._jit_block_bwd = flaky_bwd
+        b = _batch()
+        with pytest.raises(RuntimeError, match="injected backward"):
+            s.train_step(b["tokens"], b["labels"])
+        assert len(s.swapper._inflight) == 0
+        _assert_act_drained(s)
+    s.tracker.assert_quiescent()

@@ -23,6 +23,7 @@ MUST_FLAG = {
     "pool_oversubscription.py": ["lock-discipline", "lock-discipline",
                                  "resource-lifecycle"],
     "affinity_cross_call.py": ["thread-affinity", "thread-affinity"],
+    "act_d2h_on_executor.py": ["thread-affinity", "thread-affinity"],
     "holds_contract.py": ["lock-blocking"],
     "annotations.py": ["annotation", "annotation"],
 }

@@ -1,0 +1,20 @@
+"""MUST-FLAG — thread affinity: a blocking D2H on the executor thread
+under full overlap.  The checkpoint save/restore pair calls the
+device-to-host copy helper inline, but that helper belongs to the writer
+thread (where the copy hides under the next block's compute) — running
+it on the executor serializes the pipeline, which is exactly the stall
+the overlap machinery exists to remove.
+
+Expected findings: 2 × thread-affinity.
+"""
+
+
+class CheckpointPath:
+    def save_checkpoint(self):  # thread: executor
+        self._blocking_d2h()             # must-flag: writer-only callee
+
+    def restore_checkpoint(self):  # thread: executor
+        self._blocking_d2h()             # must-flag: writer-only callee
+
+    def _blocking_d2h(self):  # thread: writer
+        pass

@@ -1,0 +1,19 @@
+"""MUST-PASS — the fixed activation-checkpoint path: the executor hands
+the blocking D2H to the writer thread as a *submitted reference* (not a
+call edge — the callee's own annotation covers the body that eventually
+runs) and only waits the returned future; the wait-side helper is
+annotated for the executor, so the save/fetch pair stays silent."""
+
+
+class CheckpointPathFixed:
+    def save_checkpoint(self, worker):  # thread: executor
+        self.pending = worker.submit(self._blocking_d2h)   # a reference
+
+    def restore_checkpoint(self):  # thread: executor
+        self._wait_staged()              # {executor} subset of its roles
+
+    def _wait_staged(self):  # thread: executor, writer
+        pass
+
+    def _blocking_d2h(self):  # thread: writer
+        pass
