@@ -56,16 +56,14 @@ staging worker has drained (the session's abort path guarantees it).
 
 from __future__ import annotations
 
-import threading
-import time
 from collections import deque
-from concurrent.futures import Future
 from dataclasses import dataclass
 
 import numpy as np
 
-from .buffer_pool import KV_CLASS, BufferPoolBase, PoolBuffer
+from .buffer_pool import KV_CLASS, BufferPoolBase
 from .nvme import TensorStore
+from .paged import PagedResidency, PageStats
 
 
 @dataclass(frozen=True)
@@ -163,36 +161,23 @@ class DecodeSpec:
 
 
 @dataclass
-class KVStats:
+class KVStats(PageStats):
     """Spill-pipeline effectiveness counters (mirrors SwapStats for KV).
 
-    All byte counters are page-granular: ``spill_bytes`` counts only
-    *dirty* page writes (``clean_drops`` pages were evicted for free —
-    their bytes were already on SSD and unchanged)."""
+    The generic page counters live in :class:`~repro.core.paged.PageStats`;
+    the fields below are KV-only lifecycle events (slot retirement,
+    spec-decode rollback)."""
 
-    spills: int = 0            # dirty page written to SSD + slot released
-    clean_drops: int = 0       # clean page evicted without a write
-    refills: int = 0           # SSD page read back into a slot (any path)
-    prefetch_refills: int = 0  # refills issued ahead of use
-    prefetch_hits: int = 0     # refill already complete when asked for
-    sync_refills: int = 0      # ensure found nothing in flight
-    spill_bytes: int = 0
-    refill_bytes: int = 0
-    wait_seconds: float = 0.0  # time blocked on outstanding refills
     reclaims: int = 0          # pages dropped by slot retirement (no write)
     reclaim_bytes: int = 0     # bytes those reclaimed pages did NOT spill
     rollbacks: int = 0         # spec-decode rollback/commit calls
     rollback_pages: int = 0    # pages dropped past a rolled-back tail
 
-    def snapshot(self) -> dict:
-        return {k: getattr(self, k) for k in (
-            "spills", "clean_drops", "refills", "prefetch_refills",
-            "prefetch_hits", "sync_refills", "spill_bytes", "refill_bytes",
-            "wait_seconds", "reclaims", "reclaim_bytes", "rollbacks",
-            "rollback_pages")}
+    _FIELDS = PageStats._FIELDS + ("reclaims", "reclaim_bytes",
+                                   "rollbacks", "rollback_pages")
 
 
-class SpillableKVCache:
+class SpillableKVCache(PagedResidency):
     """Per-layer KV state in page-granular pool slots, spilled to SSD on
     budget.
 
@@ -249,17 +234,12 @@ class SpillableKVCache:
         # row per batch slot otherwise
         self.batch = self.page_shape[1] if self.slots == 1 else self.slots
         total = len(self.units) * self.pages_per_unit * self.slots
-        self.resident_limit = total if resident_limit is None else \
-            min(resident_limit, total)
-        if self.resident_limit < total and self.resident_limit < 2:
-            raise ValueError(
-                f"resident_limit {self.resident_limit} < 2 cannot stream "
-                f"{total} pages (one page pinned for a copy, one turning "
-                f"over)")
-        # Below budget every page stays resident; at budget, reserve two
-        # slots for the (in use, prefetching) pair cycling the cold pages.
-        self._keep = total if self.resident_limit >= total else \
-            max(0, self.resident_limit - 2)
+        # the block table / eviction / pin / capacity machinery lives in
+        # the shared paged-residency base; page key = (unit, batch_slot,
+        # page_index)
+        super().__init__(pool, store, pool_class=KV_CLASS,
+                         total_pages=total, resident_limit=resident_limit,
+                         stats=KVStats())
         # Per-slot cached-token counts.  All slots start active (the joint
         # generate() path drives them in lockstep); a serving engine
         # retires them into the free list first, then join/retire churns
@@ -269,31 +249,6 @@ class SpillableKVCache:
         self.lengths = np.zeros(self.slots, dtype=np.int64)
         self.active: set[int] = set(range(self.slots))
         self._free: deque[int] = deque()   # guarded-by: _lock
-        self.stats = KVStats()             # guarded-by: _lock
-        self.closed = False                # guarded-by: _lock
-        # A Condition, not a bare Lock: with two ensuring threads (compute
-        # + staging worker) capacity can be transiently held entirely by
-        # in-flight refills and mid-read ensures — a thread needing a slot
-        # then waits for the next land/unpin/spill instead of failing.
-        # Backed by a NON-reentrant Lock on purpose: _spill releases it
-        # around the dirty-page store write, which only balances if no
-        # path ever acquires it twice (an accidental nested acquire should
-        # deadlock loudly, not silently unlock early).
-        self._lock = threading.Condition(threading.Lock())
-        # page key = (unit, batch_slot, page_index); every map below is
-        # page/slot bookkeeping and lives under the one lock
-        self._slots: dict[tuple, PoolBuffer] = {}     # guarded-by: _lock
-        self._futures: dict[tuple, tuple[PoolBuffer, Future]] = {}  # guarded-by: _lock
-        self._spilled: set[tuple] = set()    # guarded-by: _lock
-        self._dirty: set[tuple] = set()      # guarded-by: _lock
-        self._evicting: set[tuple] = set()   # guarded-by: _lock
-        self._pinned: dict[tuple, int] = {}  # guarded-by: _lock
-        self._use_order: list[tuple] = []    # guarded-by: _lock
-        # Pages whose buffer is held by an ensure_page mid-read (popped out
-        # of _futures / freshly acquired, not yet landed in _slots).  Two
-        # threads ensure concurrently now (compute + staging worker), so
-        # capacity math must count these or the pool oversubscribes.
-        self._in_transit = 0               # guarded-by: _lock
 
     # -- internals -----------------------------------------------------------
 
@@ -304,87 +259,19 @@ class SpillableKVCache:
             return f"kv/{unit}/p{page:04d}"
         return f"kv/{unit}/s{slot:02d}/p{page:04d}"
 
-    def _touch(self, key: tuple) -> None:  # analyze: holds(_lock)
-        if key in self._use_order:
-            self._use_order.remove(key)
-        self._use_order.append(key)
+    # page-naming hooks for the shared residency engine: every KV page
+    # shares one shape/dtype/size; the store key carries unit/slot/page
+    def _store_key_of(self, key: tuple) -> str:
+        return self._store_key(*key)
 
-    def _acquire(self, key: tuple) -> PoolBuffer:  # analyze: holds(_lock)
-        # Budget is self-managed: resident + in-flight never exceeds
-        # resident_limit (the census slot count), so this never blocks —
-        # a pool wait here would mean the capacity ledger is wrong, and
-        # the 30s acquire timeout turns that bug into a loud failure.
-        return self.pool.acquire(KV_CLASS, self.page_nbytes,  # analyze: ignore[lock-blocking]
-                                 tag=self._store_key(*key))
+    def _page_shape_of(self, key: tuple) -> tuple:
+        return self.page_shape
 
-    def _free_capacity(self) -> int:  # analyze: holds(_lock)
-        return (self.resident_limit - len(self._slots) - len(self._futures)
-                - self._in_transit)
+    def _page_dtype_of(self, key: tuple) -> np.dtype:
+        return self.dtype
 
-    def _materialized(self, key: tuple) -> bool:  # analyze: holds(_lock)
-        return (key in self._slots or key in self._futures
-                or key in self._spilled or key in self._evicting)
-
-    def _try_spill_one(self, exclude: set) -> bool:  # analyze: holds(_lock)
-        """Evict the most-recently-used resident page (Belady under cyclic
-        access) that is neither excluded nor pinned; False when every
-        resident page is pinned/excluded (the caller waits for capacity)."""
-        for key in reversed(self._use_order):
-            if (key in self._slots and key not in exclude
-                    and not self._pinned.get(key)):
-                self._spill(key)
-                return True
-        return False
-
-    def _spill(self, key: tuple) -> None:  # analyze: holds(_lock)
-        """Evict one resident page.  Called with the lock held; a dirty
-        page's store write runs with the lock RELEASED so the other
-        thread can keep gathering/appending meanwhile — the page sits in
-        ``_evicting`` for the duration (materialized-but-busy: ensure
-        waits it out, eviction scans cannot see it).  A failed write puts
-        the page back resident + dirty: the host copy is the only one."""
-        buf = self._slots.pop(key)
-        self._use_order.remove(key)
-        if key in self._dirty:
-            self._dirty.discard(key)
-            self._evicting.add(key)
-            self._in_transit += 1     # slot still held during the write
-            self._lock.release()
-            ok = False
-            try:
-                view = buf.view(self.dtype, self.page_shape)
-                self.store.write(self._store_key(*key), view)
-                ok = True
-            finally:
-                self._lock.acquire()
-                self._evicting.discard(key)
-                self._in_transit -= 1
-                if not ok:
-                    # failed write: the host copy is the only one — put
-                    # the page back resident (and dirty) rather than leak
-                    # the slot or forget the data; the error propagates
-                    self._slots[key] = buf
-                    self._use_order.append(key)
-                    self._dirty.add(key)
-                    self._lock.notify_all()
-            self.stats.spills += 1
-            self.stats.spill_bytes += self.page_nbytes
-        else:
-            # clean page: its bytes already live on SSD, unchanged — the
-            # paged design's whole point is that this write is free
-            self.stats.clean_drops += 1
-        buf.release()
-        self._spilled.add(key)
-        self._lock.notify_all()   # freed capacity: wake slot waiters
-
-    def _maybe_spill_after_use(self) -> None:
-        """Spill-after-use: once a unit's write landed, its pages' next use
-        is a full cycle away — evict MRU pages over the keep line (skipping
-        pinned pages; a concurrent gather may hold one mid-copy)."""
-        with self._lock:
-            while len(self._slots) > self._keep:
-                if not self._try_spill_one(exclude=set()):
-                    break
+    def _page_nbytes_of(self, key: tuple) -> int:
+        return self.page_nbytes
 
     # -- the session-facing API ----------------------------------------------
 
@@ -407,25 +294,8 @@ class SpillableKVCache:
                 return
             for slot in range(self.slots):
                 for p in range(self.pages_for(extent)):
-                    key = (unit, slot, p)
-                    if (key not in self._spilled or key in self._slots
-                            or key in self._futures):
-                        continue
-                    if self._free_capacity() < 2:
+                    if not self._prefetch_one((unit, slot, p)):
                         return
-                    buf = self._acquire(key)
-                    try:
-                        view = buf.view(self.dtype, self.page_shape)
-                        future = self.store.read_async(
-                            self._store_key(*key), view)
-                    except BaseException:
-                        # failed issue: the key is still in _spilled (the
-                        # SSD copy is intact) — only the slot must go back
-                        buf.release()
-                        raise
-                    self._futures[key] = (buf, future)
-                    self._spilled.discard(key)
-                    self.stats.prefetch_refills += 1
 
     def ensure_page(self, unit: str, page: int, *, slot: int = 0,
                     pin: bool = False) -> np.ndarray:  # thread: executor, h2d-worker
@@ -442,99 +312,12 @@ class SpillableKVCache:
                              f"{self.pages_per_unit}) for unit {unit!r}")
         if not 0 <= slot < self.slots:
             raise ValueError(f"slot {slot} outside [0, {self.slots})")
-        key = (unit, slot, page)
-        with self._lock:
-            if self.closed:
-                raise RuntimeError("KV cache is closed")
-            # A page mid-spill (dirty write in flight on the other thread,
-            # lock dropped) is materialized but in no map: wait for the
-            # write to land, then take the _spilled path below.
-            while key in self._evicting:
-                if not self._lock.wait(timeout=30.0):
-                    raise RuntimeError(
-                        f"KV page {key!r} stuck in eviction for 30s")
-            entry = self._futures.pop(key, None)
-            spilled = key in self._spilled
-            if entry is not None:
-                buf, future = entry
-                hit = future.done()
-            elif key in self._slots:
-                self._touch(key)
-                if pin:
-                    self._pinned[key] = self._pinned.get(key, 0) + 1
-                return self._slots[key].view(self.dtype, self.page_shape)
-            else:
-                # Sync path: spilled (refill now) or first touch (zero).
-                # When no page is evictable (all pinned, or the capacity
-                # sits in other pages' in-flight refills / mid-read
-                # ensures), wait: the other thread's land/unpin frees it.
-                while self._free_capacity() < 1:
-                    if (not self._try_spill_one(exclude={key})
-                            and not self._lock.wait(timeout=30.0)):
-                        raise RuntimeError(
-                                f"KV cache slot wait timed out for page "
-                                f"{key!r}: every slot pinned or in flight "
-                                f"for 30s (budget {self.resident_limit})")
-                buf = self._acquire(key)
-                future = None
-                hit = False
-            self._in_transit += 1   # buf held outside _slots/_futures
-        t0 = time.perf_counter()
-        try:
-            view = buf.view(self.dtype, self.page_shape)
-            if future is not None:
-                future.result()
-            elif spilled:
-                self.store.read(self._store_key(*key), view)
-            else:
-                view[...] = np.zeros((), self.dtype)  # fresh page
-        except BaseException:
-            with self._lock:
-                self._in_transit -= 1
-                if future is not None:
-                    # a failed prefetched refill must not forget the page:
-                    # the SSD copy is still valid (prefetch_window removed
-                    # the key from _spilled when it issued the read) — the
-                    # sync path below keeps _spilled until success, this
-                    # mirrors it so a retry refills instead of zero-fills
-                    self._spilled.add(key)
-                self._lock.notify_all()
-            buf.release()   # slot must not leak on a failed read
-            raise
-        wait = time.perf_counter() - t0
-        # Counters strictly under the lock: the staging worker and the
-        # compute thread both run ensure/prefetch while refills land from
-        # store workers — unlocked read-modify-writes tore the ledger.
-        with self._lock:
-            if future is not None:
-                self.stats.refills += 1
-                self.stats.refill_bytes += self.page_nbytes
-                self.stats.prefetch_hits += int(hit)
-            elif spilled:
-                self.stats.refills += 1
-                self.stats.refill_bytes += self.page_nbytes
-                self.stats.sync_refills += 1
-            self.stats.wait_seconds += wait
-            self._in_transit -= 1
-            self._spilled.discard(key)
-            self._slots[key] = buf
-            self._touch(key)
-            if pin:
-                self._pinned[key] = self._pinned.get(key, 0) + 1
-            self._lock.notify_all()   # landed page is evictable again
-        return view
+        return self._ensure((unit, slot, page), pin=pin)
 
     def unpin(self, unit: str, page: int, *,
               slot: int = 0) -> None:  # thread: executor, h2d-worker
         """Release one pin on a page (see :meth:`ensure_page`)."""
-        key = (unit, slot, page)
-        with self._lock:
-            n = self._pinned.get(key, 0) - 1
-            if n <= 0:
-                self._pinned.pop(key, None)
-                self._lock.notify_all()   # page is evictable again
-            else:
-                self._pinned[key] = n
+        self._unpin((unit, slot, page))
 
     def gather_window(self, unit: str, extent: int  # thread: executor, h2d-worker
                       ) -> tuple[np.ndarray, np.ndarray]:
@@ -902,28 +685,5 @@ class SpillableKVCache:
             return [(u, p) for (u, _s, p) in keys]
         return keys
 
-    def close(self) -> None:  # thread: executor
-        """Wait out in-flight refills and return every slot.  Idempotent;
-        runs on generate()'s error path, so nothing may leak.  Callers must
-        drain any worker still gathering first (the session's abort path
-        does) — close does not wait for pins."""
-        with self._lock:
-            if self.closed:
-                return
-            self.closed = True
-            futures = list(self._futures.values())
-            self._futures.clear()
-            slots = list(self._slots.values())
-            self._slots.clear()
-            self._use_order.clear()
-            self._dirty.clear()
-            self._pinned.clear()
-        for buf, future in futures:
-            try:
-                future.result()
-            except BaseException:
-                pass            # data is being discarded
-            finally:
-                buf.release()
-        for buf in slots:
-            buf.release()
+    # close() is inherited from PagedResidency: wait out in-flight
+    # refills, return every slot; idempotent (generate()'s error path).

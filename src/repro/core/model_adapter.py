@@ -20,32 +20,58 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models.attention import gqa_prefill, gqa_step, gqa_verify
+from repro.models.attention import (gqa_attention, gqa_prefill, gqa_step,
+                                    gqa_verify, mla_attention)
+from repro.models.moe import moe_ffn
 from repro.models.transformer import (apply_ffn, apply_layer, ffn_kind,
                                       init_layer_params, layer_period,
                                       mixer_kind)
-from repro.models.layers import (cross_entropy, embed_lookup, lm_logits,
-                                 rms_norm, trunc_normal, fan_in_init)
+from repro.models.layers import (cross_entropy, dense, embed_lookup,
+                                 lm_logits, rms_norm, trunc_normal,
+                                 fan_in_init)
 from .offload_engine import OffloadableModel, OffloadUnit
 
 
-def make_offloadable_lm(cfg: ModelConfig, key,
-                        compute_dtype=jnp.bfloat16) -> OffloadableModel:
+def make_offloadable_lm(cfg: ModelConfig, key, compute_dtype=jnp.bfloat16,
+                        *, expert_paging: str = "off") -> OffloadableModel:
     if layer_period(cfg) != 1:
         raise ValueError(
             f"{cfg.name}: offloaded trainer requires layer-homogeneous "
             f"configs (period==1); got period={layer_period(cfg)}")
     kinds = (mixer_kind(cfg, 0), ffn_kind(cfg, 0))
+    paged_moe = expert_paging != "off"
+    if paged_moe and kinds[1] != "moe":
+        raise ValueError(
+            f"{cfg.name}: expert_paging={expert_paging!r} needs a MoE "
+            f"config (ffn kind is {kinds[1]!r})")
 
     keys = jax.random.split(key, cfg.n_layers + 2)
     units = [OffloadUnit("embed", "standalone", {
         "embed": np.asarray(trunc_normal(keys[0], (cfg.vocab, cfg.d_model),
                                          0.02))})]
+    expert_meta: dict | None = {} if paged_moe else None
     for i in range(cfg.n_layers):
         lp = init_layer_params(keys[1 + i], cfg, i)
-        units.append(OffloadUnit(
-            f"block_{i:03d}", "block",
-            {k: np.asarray(v) for k, v in lp.items()}))
+        params = {k: np.asarray(v) for k, v in lp.items()}
+        name = f"block_{i:03d}"
+        if paged_moe:
+            # split the stacked (E, ...) expert tensors into per-expert
+            # params: each becomes an individually fetchable page in the
+            # expert page cache instead of a per-fetch streamed tensor
+            e = cfg.moe
+            gate = params.pop("moe.w_gate")
+            up = params.pop("moe.w_up")
+            down = params.pop("moe.w_down")
+            triples = []
+            for x in range(e.n_experts):
+                names = (f"moe.expert{x}.w_gate", f"moe.expert{x}.w_up",
+                         f"moe.expert{x}.w_down")
+                for pname, stack in zip(names, (gate, up, down)):
+                    params[pname] = np.ascontiguousarray(stack[x])
+                triples.append(names)
+            expert_meta[name] = {"n_experts": e.n_experts,
+                                 "experts": triples}
+        units.append(OffloadUnit(name, "block", params))
     head_params = {"final_norm": np.zeros((cfg.d_model,), np.float32)}
     # tied embeddings share the table; an untied head projects its own
     head_params["head"] = (
@@ -71,6 +97,62 @@ def make_offloadable_lm(cfg: ModelConfig, key,
 
     def class_of(param_key: str) -> str:
         return ModelConfig.class_of_param(param_key)
+
+    # Expert-paged MoE applies: one block splits into a routing half (the
+    # mixer + router top-k, whose indices the host reads back to decide
+    # which expert pages to fetch) and an expert half (the routed FFN,
+    # consuming staged (E, ...) stacks whose unrouted rows are zero and —
+    # by moe_ffn's dispatch/combine structure — never read, so routed and
+    # all-resident residency are bit-identical).  The backward recomputes
+    # the whole block under vjp with the forward's pinned expert indices.
+    block_route = block_moe = block_moe_bwd = None
+    block_prefill_route = block_step_route = block_verify_route = None
+    if paged_moe:
+        def _mixer(params, hn):
+            if kinds[0] == "attn":
+                return gqa_attention(params, hn, cfg)
+            if kinds[0] == "mla":
+                return mla_attention(params, hn, cfg)
+            raise ValueError(
+                f"expert paging supports attn/mla mixers, got {kinds[0]!r}")
+
+        def _route_idx(params, hmid):
+            # the same logits moe_ffn recomputes; only the top-k indices
+            # leave the device (the host's fetch decision)
+            hn = rms_norm(hmid, params["norm_ffn"], cfg.rms_eps)
+            b, s, d = hn.shape
+            logits = dense(hn.reshape(b * s, d), params["moe.w_router"])
+            probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+            _w, idx = jax.lax.top_k(probs, cfg.moe.top_k)
+            return idx
+
+        def block_route(params, h):
+            hn = rms_norm(h, params["norm_mixer"], cfg.rms_eps)
+            hmid = h + _mixer(params, hn)
+            return hmid, _route_idx(params, hmid)
+
+        def block_moe(params, gate, up, down, idx, hmid):
+            # apply_ffn's moe half with the expert stacks passed as
+            # arguments (staged from the page cache) and the routing
+            # pinned to the route stage's choice
+            hn = rms_norm(hmid, params["norm_ffn"], cfg.rms_eps)
+            full = dict(params)
+            full["moe.w_gate"], full["moe.w_up"] = gate, up
+            full["moe.w_down"] = down
+            out, _aux = moe_ffn(full, hn, cfg, idx=idx)
+            return hmid + out
+
+        def block_moe_bwd(params, gate, up, down, idx, h, dh):
+            # recompute the full block under vjp (gradient checkpointing),
+            # with the forward's expert assignment pinned so the staged
+            # stacks cover every expert the backward touches
+            def f(p, g, u, dn, hh):
+                hn = rms_norm(hh, p["norm_mixer"], cfg.rms_eps)
+                hmid = hh + _mixer(p, hn)
+                return block_moe(p, g, u, dn, idx, hmid)
+            _out, vjp = jax.vjp(f, params, gate, up, down, h)
+            dparams, dgate, dup, ddown, dh_in = vjp(dh)
+            return dparams, dgate, dup, ddown, dh_in
 
     # Cached-decode applies (spill-able KV cache): attention mixers only —
     # recurrent-state mixers (mamba/xLSTM) carry different cache pytrees
@@ -110,9 +192,42 @@ def make_offloadable_lm(cfg: ModelConfig, key,
         def kv_shape(batch: int, time: int) -> tuple:
             return (2, batch, time, cfg.n_kv_heads, cfg.head_dim)
 
+        if paged_moe:
+            # cached-decode route variants: the same mixer halves as the
+            # plain applies, stopping at hmid + expert indices so the
+            # staged expert stacks feed the shared block_moe
+            def block_prefill_route(params, h):
+                hn = rms_norm(h, params["norm_mixer"], cfg.rms_eps)
+                mix, k, v = gqa_prefill(params, hn, cfg)
+                hmid = h + mix
+                return hmid, k, v, _route_idx(params, hmid)
+
+            def block_step_route(params, h, k_cache, v_cache, cache_len, *,
+                                 chunk=None):
+                hn = rms_norm(h, params["norm_mixer"], cfg.rms_eps)
+                mix, k_new, v_new = gqa_step(params, hn, cfg, k_cache,
+                                             v_cache, cache_len, chunk=chunk)
+                hmid = h + mix
+                return hmid, k_new, v_new, _route_idx(params, hmid)
+
+            def block_verify_route(params, h, k_cache, v_cache, cache_len,
+                                   *, chunk=None):
+                hn = rms_norm(h, params["norm_mixer"], cfg.rms_eps)
+                mix, k_new, v_new = gqa_verify(params, hn, cfg, k_cache,
+                                               v_cache, cache_len,
+                                               chunk=chunk)
+                hmid = h + mix
+                return hmid, k_new, v_new, _route_idx(params, hmid)
+
     return OffloadableModel(units=units, embed_apply=embed_apply,
                             block_apply=block_apply, head_loss=head_loss,
                             class_of=class_of, head_logits=head_logits,
                             block_prefill=block_prefill,
                             block_step=block_step,
-                            block_verify=block_verify, kv_shape=kv_shape)
+                            block_verify=block_verify, kv_shape=kv_shape,
+                            block_route=block_route, block_moe=block_moe,
+                            block_moe_bwd=block_moe_bwd,
+                            block_prefill_route=block_prefill_route,
+                            block_step_route=block_step_route,
+                            block_verify_route=block_verify_route,
+                            expert_meta=expert_meta)

@@ -74,6 +74,12 @@ from dataclasses import dataclass, field
 # H2D worker acquires, the executor's block_bwd consume releases.
 ACT_CLASS = "__act__"
 
+# Device-slot class bounding staged expert-stack H2Ds (route-aware MoE
+# paging).  Depth 2 = one unit's routed expert stacks consumed by the
+# current block_moe plus one being staged for the next MoE unit — the
+# same rotation and deadlock-freedom argument as ACT_CLASS.
+EXPERT_CLASS = "__expert__"
+
 
 def done_future(value=None) -> Future:
     """An already-resolved Future (sync-mode stand-in for a queued task)."""
@@ -274,6 +280,13 @@ class OverlapStats:
     #                                      for a staged checkpoint
     act_stage_gets: int = 0     # ActFetchOps served from the staging pipeline
     act_stage_hits: int = 0     # checkpoint staged when the ActFetchOp asked
+    expert_stage_gets: int = 0  # ExpertFetchOps served from the pipeline
+    expert_stage_hits: int = 0  # routed set covered by the prestaged stack
+    expert_fetch_wait_seconds: float = 0.0  # executor blocked at an
+    #                                         ExpertFetchOp for staged stacks
+    expert_fetch_bytes: int = 0  # expert bytes copied into H2D stacks
+    #                              (routed-only vs all-resident ledger);
+    #                              accrued via bump() on the staging worker
     optim_prefetch_wait_seconds: float = 0.0  # Adam blocked on staged state
     overflow_screen_seconds: float = 0.0      # per-region Inf/NaN screens
     act_save_seconds: float = 0.0  # D2H + store write on the writer thread
@@ -312,4 +325,8 @@ class OverlapStats:
                 "act_save_wait_seconds": self.act_save_wait_seconds,
                 "act_fetch_wait_seconds": self.act_fetch_wait_seconds,
                 "act_stage_gets": self.act_stage_gets,
-                "act_stage_hits": self.act_stage_hits, **worker}
+                "act_stage_hits": self.act_stage_hits,
+                "expert_stage_gets": self.expert_stage_gets,
+                "expert_stage_hits": self.expert_stage_hits,
+                "expert_fetch_wait_seconds": self.expert_fetch_wait_seconds,
+                "expert_fetch_bytes": self.expert_fetch_bytes, **worker}

@@ -98,12 +98,13 @@ from .loss_scale import DynamicLossScaler
 from .memory_tracker import MemoryTracker
 from .optimizer import OffloadedAdam
 from .overflow import check_region, flat_overflow_check
-from .overlap import (ACT_CLASS, DeviceSlots, OverlapStats, SerialWorker,
-                      done_future)
-from .stream_plan import (ActFetchOp, ActSaveOp, ComputeOp, FetchOp,
-                          GradWriteOp, KVReadOp, KVWriteOp, OptimStepOp,
-                          OverflowCheckOp, ReleaseOp, StreamPlan,
-                          compile_decode, compile_decode_cached,
+from .overlap import (ACT_CLASS, EXPERT_CLASS, DeviceSlots, OverlapStats,
+                      SerialWorker, done_future)
+from .paged import ExpertPageCache
+from .stream_plan import (ActFetchOp, ActSaveOp, ComputeOp, ExpertFetchOp,
+                          ExpertReleaseOp, FetchOp, GradWriteOp, KVReadOp,
+                          KVWriteOp, OptimStepOp, OverflowCheckOp, ReleaseOp,
+                          StreamPlan, compile_decode, compile_decode_cached,
                           compile_decode_verify, compile_eval,
                           compile_prefill, compile_train,
                           resolve_act_policy)
@@ -182,7 +183,9 @@ class _ExecState:
                  "kv", "kv_live", "kv_append", "kv_time", "cache_len",
                  "last_pos", "kv_stage", "kv_slots", "kv_write_slots",
                  "stage_seq", "act_order", "act_next", "act_stage",
-                 "act_reads", "act_slots_out")
+                 "act_reads", "act_slots_out", "expert_route",
+                 "expert_stage", "expert_live", "expert_slots",
+                 "expert_slots_out")
 
     def __init__(self, tokens=None, labels=None, scale=1.0):
         self.tokens = None if tokens is None else jnp.asarray(tokens)
@@ -227,6 +230,17 @@ class _ExecState:
         self.act_slots_out = 0   # ACT_CLASS submissions not yet consumed —
         #                          capped at the slot depth so the staging
         #                          worker's acquire can never block
+        # expert paging (paged-MoE plans only): the routing indices persist
+        # for the WHOLE plan run — the backward's ExpertFetchOp reuses the
+        # forward's routing decision, so its prestage is an exact hit
+        self.expert_route: dict[str, np.ndarray] = {}  # unit -> host (T,k)
+        self.expert_stage: dict[str, deque] = {}  # unit -> staged-stack futs
+        self.expert_live: dict[str, tuple] = {}   # unit -> device stacks
+        self.expert_slots: dict[str, tuple] = {}  # unit -> EXPERT_CLASS tokens
+        self.expert_slots_out = 0  # EXPERT_CLASS submissions whose slot has
+        #                            not been returned yet — capped at the
+        #                            slot depth so the staging worker's
+        #                            acquire can never block the pipeline
 
 
 class OffloadSession:
@@ -258,9 +272,39 @@ class OffloadSession:
                    decode: DecodeSpec | None) -> None:
         self.allocator = policy.allocator_cls(
             tracker=self.tracker, component="pinned", backing="numpy")
+        # Expert paging (paged MoE): resolved before the census because the
+        # paged units' per-expert tensors leave the per-block streaming
+        # counts and become standalone expert-page slots instead.
+        self._expert_mode = policy.expert_paging
+        self._expert_meta = getattr(model, "expert_meta", None) or {}
+        if self._expert_mode != "off" and not self._expert_meta:
+            raise ValueError(
+                f"expert_paging={self._expert_mode!r} but the model has no "
+                f"paged-MoE units; build it with make_offloadable_lm(..., "
+                f"expert_paging=...) so expert tensors split into pages")
+        if self._expert_mode == "off" and self._expert_meta:
+            raise ValueError(
+                "model was built with per-expert pages (expert_meta set) "
+                "but the policy streams experts densely "
+                "(expert_paging='off'); the dense block apply would miss "
+                "the stacked expert weights — align the two knobs")
+        self._paged_params: dict[str, frozenset] = (
+            {u: frozenset(model.expert_params(u)) for u in self._expert_meta}
+            if self._expert_mode != "off" else {})
+        expert_pages: dict[tuple[str, str], tuple] = {}
+        if self._expert_mode != "off":
+            for uname in self._expert_meta:
+                unit = next(u for u in model.units if u.name == uname)
+                for pname in self._paged_params[uname]:
+                    expert_pages[(uname, pname)] = unit.params[pname].shape
+            budget = policy.expert_page_slots or len(expert_pages)
+        self._expert_cache: ExpertPageCache | None = None
+        self._expert_prior: dict[str, np.ndarray] = {}
         census = model.census(
             policy.inflight_blocks,
-            bytes_per_elem=policy.adam.compute_np_dtype.itemsize)
+            bytes_per_elem=policy.adam.compute_np_dtype.itemsize,
+            expert_page_slots=(budget if self._expert_mode != "off"
+                               else None))
         # Cached decode: the KV cache draws slots from the same pool arena
         # the weights stream through, so its residency budget is part of
         # the census (paper §IV-B sizing, extended to decode state).
@@ -292,9 +336,20 @@ class OffloadSession:
                 self._kv_page_shape, dtype=np.int64))
             census = census.with_kv(kv_nbytes, self._kv_resident)
         self.pool = policy.pool_cls(census, self.allocator)
+        # Paged expert tensors are NOT swapper-streamed: they go through
+        # the expert page cache below, one page per (unit, param).
         self.swapper = ParameterSwapper(self.store, self.pool, class_of={
             f"{unit.name}/{key}{COMPUTE_SUFFIX}": model.class_of(key)
-            for unit in model.units for key in unit.params})
+            for unit in model.units for key in unit.params
+            if key not in self._paged_params.get(unit.name, frozenset())})
+        if self._expert_mode != "off":
+            # lazy reads: pages are born spilled against the {key}.compute
+            # store copies the registration loop below writes, so creating
+            # the cache before them is safe — nothing reads until a fetch
+            self._expert_cache = ExpertPageCache(
+                expert_pages, policy.adam.compute_np_dtype, self.pool,
+                self.store, resident_limit=budget,
+                store_suffix=COMPUTE_SUFFIX)
         self.scaler = DynamicLossScaler()
         if policy.adam.compute_dtype != "float16":
             self.scaler.scale = 1.0  # only fp16 needs scaling; check stays on
@@ -348,8 +403,11 @@ class OffloadSession:
         if policy.overlap in ("h2d", "full"):
             per_unit: dict[str, int] = {}
             for unit in model.units:
+                paged = self._paged_params.get(unit.name, frozenset())
                 counts: dict[str, int] = {}
                 for key in unit.params:
+                    if key in paged:
+                        continue   # staged as (E, ...) stacks, not per-key
                     cls = model.class_of(key)
                     counts[cls] = counts.get(cls, 0) + 1
                 for cls, c in counts.items():
@@ -365,6 +423,10 @@ class OffloadSession:
                 # staged activation checkpoints double-buffer the same way:
                 # one consumed by the current block_bwd, one being staged
                 depths[ACT_CLASS] = 2
+            if self._expert_mode != "off":
+                # staged expert (E, ...) stacks double-buffer: one triple
+                # feeding the current block_moe, one being staged ahead
+                depths[EXPERT_CLASS] = 2
             self._device_slots = DeviceSlots(depths)
             # latch=False: every staging future is awaited by the executor
             # (FetchOp wait half, or the abort path), which delivers any
@@ -462,6 +524,26 @@ class OffloadSession:
                                           static_argnames=("chunk",))
                                   if getattr(model, "block_verify", None)
                                   else None)
+        # expert-paged MoE stages (route half / expert half / backward,
+        # plus the cached-decode route variants)
+        paged_moe = self._expert_mode != "off"
+        self._jit_block_route = (jax.jit(model.block_route)
+                                 if paged_moe else None)
+        self._jit_block_moe = (jax.jit(model.block_moe)
+                               if paged_moe else None)
+        self._jit_block_moe_bwd = (jax.jit(model.block_moe_bwd)
+                                   if paged_moe else None)
+        self._jit_prefill_route = (
+            jax.jit(model.block_prefill_route) if paged_moe
+            and getattr(model, "block_prefill_route", None) else None)
+        self._jit_step_route = (
+            jax.jit(model.block_step_route, static_argnames=("chunk",))
+            if paged_moe and getattr(model, "block_step_route", None)
+            else None)
+        self._jit_verify_route = (
+            jax.jit(model.block_verify_route, static_argnames=("chunk",))
+            if paged_moe and getattr(model, "block_verify_route", None)
+            else None)
         self._jit_head_last = None
         if self._jit_head_logits is not None and \
                 self._jit_block_prefill is not None:
@@ -509,6 +591,8 @@ class OffloadSession:
         steps = []
         if getattr(self, "_kv_cache", None) is not None:
             steps.append(self._kv_cache.close)
+        if getattr(self, "_expert_cache", None) is not None:
+            steps.append(self._expert_cache.close)
         for worker_attr in ("_h2d", "_grad_writer", "_optim_worker",
                             "_optim_prefetch"):
             worker = getattr(self, worker_attr, None)
@@ -591,7 +675,10 @@ class OffloadSession:
     def _param_keys(self, unit_name: str):
         unit, meta = self._units[unit_name]
         cd = self.policy.adam.compute_np_dtype
+        paged = self._paged_params.get(unit_name, frozenset())
         for key, (shape, _size) in meta.items():
+            if key in paged:
+                continue   # streamed as expert pages, not with the unit
             yield key, f"{unit.name}/{key}{COMPUTE_SUFFIX}", cd, shape
 
     def _prefetch_unit(self, unit_name: str) -> None:
@@ -1020,6 +1107,172 @@ class OffloadSession:
             self.tracker.free(rec.handle)
             rec.handle = None
 
+    # -- expert-page streaming (paged MoE) -----------------------------------
+    #
+    # Lifecycle (mirrors the weight stream's split issue/wait halves):
+    #
+    #   route   block_route (or a cached-decode route variant) computes the
+    #           expert assignment; the executor reads the indices back and
+    #           binds them for the WHOLE plan run (the backward reuses the
+    #           forward's routing),
+    #   issue   the FetchOp lookahead window prestages the PREDICTED
+    #           routed set — this plan's own routing when already known
+    #           (backward: exact), else the previous step's actual set,
+    #           or every expert under expert_paging="all" — as zero-
+    #           initialized (E, ...) host stacks H2D'd under a counted
+    #           __expert__ device slot on the staging worker,
+    #   wait    ExpertFetchOp resolves the ACTUAL routed set; a staged set
+    #           that covers it is a hit, otherwise the stale stacks are
+    #           dropped (slot returned) and the actual set is staged
+    #           on demand,
+    #   consume block_moe / block_moe_bwd read the stacks; ExpertReleaseOp
+    #           returns the device slot and trims the page cache back
+    #           under its residency budget.
+    #
+    # Deadlock-freedom of the staged path: the executor never submits an
+    # expert stage while expert_slots_out >= the EXPERT_CLASS depth, so
+    # the staging worker's acquire is always immediately satisfiable — it
+    # can never wedge the shared FIFO worker behind an unreleasable slot.
+    # Unrouted experts are never read by moe_ffn's combine (dropped slots
+    # carry weight zero), so routed-only stacks are bit-identical to
+    # all-resident ones by construction.
+
+    def _expert_predict(self, unit: str, state: _ExecState):  # thread: executor
+        """Predicted routed set for a window prestage: every expert under
+        "all", this plan's own routing when the route already ran (the
+        backward re-fetch — exact by construction), else the previous
+        step's actual set (None before any step routed this unit)."""
+        if self._expert_mode == "all":
+            return np.arange(self._expert_meta[unit]["n_experts"])
+        route = state.expert_route.get(unit)
+        if route is not None:
+            return np.unique(route.reshape(-1))
+        return self._expert_prior.get(unit)
+
+    def _build_expert_stacks(self, unit: str, ids) -> list:  # thread: executor, h2d-worker
+        """Zero-initialized (E, ...) host stacks with the routed experts'
+        pages memcpy'd in (pinned across each copy).  Rows of unrouted
+        experts stay zero — never read by the combine — so the stacks are
+        shape-identical to the all-resident ones and the jitted program
+        is shared.  Byte accounting lands here: only routed pages cost
+        SSD/memcpy traffic."""
+        meta = self._expert_meta[unit]
+        triples = meta["experts"]
+        _unit, umeta = self._units[unit]
+        cd = self.policy.adam.compute_np_dtype
+        stacks = [np.zeros((meta["n_experts"],) + tuple(umeta[pname][0]), cd)
+                  for pname in triples[0]]
+        nbytes = 0
+        for i in ids:
+            for j, pname in enumerate(triples[int(i)]):
+                view = self._expert_cache.ensure(unit, pname, pin=True)
+                try:
+                    stacks[j][int(i)] = view
+                finally:
+                    self._expert_cache.unpin(unit, pname)
+                nbytes += view.nbytes
+        self._ostats.bump("expert_fetch_bytes", nbytes)
+        return stacks
+
+    def _stage_experts(self, unit: str, ids: tuple) -> tuple:  # thread: h2d-worker
+        """Staging-worker body: build the routed stacks, then H2D under a
+        counted __expert__ device slot.  The stacks are built BEFORE the
+        acquire so a failed expert SSD read surfaces at the fetch gate
+        with no device slot held."""
+        stacks = self._build_expert_stacks(unit, ids)
+        self._device_slots.acquire(EXPERT_CLASS)
+        try:
+            return (frozenset(int(i) for i in ids),
+                    tuple(self._h2d_copy(a) for a in stacks))
+        except BaseException:
+            self._device_slots.release_all([EXPERT_CLASS])
+            raise
+
+    def _submit_expert_stage(self, unit: str, ids,  # thread: executor
+                             state: _ExecState) -> None:
+        """Issue half: queue one unit's expert staging on the staging
+        worker, behind the same unit's weight (and KV) stages."""
+        fut = self._h2d.submit(
+            functools.partial(self._stage_experts, unit, tuple(ids)))
+        state.expert_stage.setdefault(unit, deque()).append(fut)
+        state.stage_seq.append(("ex", unit))
+        state.expert_slots_out += 1
+
+    def _expert_fetch_now(self, unit: str, ids,  # thread: executor
+                          state: _ExecState) -> tuple:
+        """On-demand stage (miss, or no prestage was issued): through the
+        staging worker when an EXPERT slot is guaranteed free — the
+        executor is about to block on the result, so the worker's acquire
+        must not be able to block — else built + copied inline without a
+        slot (transient, accounted to the fetch wait)."""
+        if self._h2d is not None and state.expert_slots_out < 2:
+            state.expert_slots_out += 1
+            fut = self._h2d.submit(
+                functools.partial(self._stage_experts, unit, tuple(ids)))
+            # NOT in stage_seq: consumed synchronously right here, even on
+            # error (the worker released any slot it held before raising)
+            try:
+                _ids, stacks = fut.result()
+            except BaseException:
+                state.expert_slots_out -= 1
+                raise
+            return stacks, (EXPERT_CLASS,)
+        stacks = tuple(self._h2d_copy(a)
+                       for a in self._build_expert_stacks(unit, ids))
+        return stacks, ()
+
+    def _expert_fetch(self, op: ExpertFetchOp,  # thread: executor
+                      state: _ExecState) -> None:
+        """Wait half of the split ExpertFetchOp: resolve the actual routed
+        set, take a covering staged prediction, restage on a miss."""
+        unit = op.unit
+        if self._expert_mode == "all":
+            actual = np.arange(self._expert_meta[unit]["n_experts"])
+        else:
+            actual = np.unique(state.expert_route[unit].reshape(-1))
+        self._expert_prior[unit] = actual
+        t0 = time.perf_counter()
+        stacks = tokens = None
+        pending = state.expert_stage.get(unit)
+        if pending:
+            fut = pending.popleft()
+            if not pending:
+                del state.expert_stage[unit]
+            self._ostats.expert_stage_gets += 1
+            try:
+                staged_ids, staged = fut.result()
+            except BaseException:
+                # a failed expert SSD read surfaces exactly once, here;
+                # the worker held no slot (stacks build precedes acquire)
+                state.expert_slots_out -= 1
+                raise
+            if set(int(i) for i in actual) <= staged_ids:
+                self._ostats.expert_stage_hits += 1
+                stacks, tokens = staged, (EXPERT_CLASS,)
+            else:
+                # stale prediction: drop the stacks, return the slot, and
+                # stage the actual routed set on demand
+                del staged
+                self._device_slots.release_all([EXPERT_CLASS])
+                state.expert_slots_out -= 1
+        if stacks is None:
+            stacks, tokens = self._expert_fetch_now(unit, actual, state)
+        state.expert_live[unit] = tuple(stacks)
+        state.expert_slots[unit] = tokens
+        self._ostats.expert_fetch_wait_seconds += time.perf_counter() - t0
+
+    def _expert_release(self, op: ExpertReleaseOp,  # thread: executor
+                        state: _ExecState) -> None:
+        """ExpertReleaseOp: drop the staged device stacks, return the
+        __expert__ slot, and trim the page cache over its keep line (the
+        host pages themselves stay cached for future steps)."""
+        state.expert_live.pop(op.unit, None)
+        tokens = state.expert_slots.pop(op.unit, ())
+        if tokens:
+            self._device_slots.release_all(tokens)
+            state.expert_slots_out -= 1
+        self._expert_cache.release_round()
+
     # -- the executor --------------------------------------------------------
 
     def execute(self, plan: StreamPlan, state: _ExecState) -> _ExecState:  # thread: executor
@@ -1036,6 +1289,8 @@ class OffloadSession:
         kv_read_units = (frozenset(
             op.unit for op in plan.ops if isinstance(op, KVReadOp))
             if state.kv is not None else frozenset())
+        expert_units = frozenset(
+            op.unit for op in plan.ops if isinstance(op, ExpertFetchOp))
         state.act_order = [op.unit for op in plan.ops
                            if isinstance(op, ActFetchOp)]
         state.act_next = 0
@@ -1086,6 +1341,16 @@ class OffloadSession:
                             if self._h2d is not None and \
                                     unit not in state.kv_stage:
                                 self._submit_kv_stage(unit, state)
+                        if unit in expert_units and self._h2d is not None \
+                                and state.expert_slots_out < 2:
+                            # prestage the predicted routed set behind the
+                            # unit's weight/KV stages; skipped when the
+                            # prediction is unknown (first step) or the
+                            # EXPERT slot budget is out — the ExpertFetchOp
+                            # then stages on demand
+                            pred = self._expert_predict(unit, state)
+                            if pred is not None and len(pred):
+                                self._submit_expert_stage(unit, pred, state)
                         next_prefetch += 1
                     t_fetch = time.perf_counter()
                     state.live[op.unit] = self._fetch_unit(op.unit, state)
@@ -1102,6 +1367,10 @@ class OffloadSession:
                     self._exec_act_save(op, state)
                 elif isinstance(op, ActFetchOp):
                     self._act_fetch(op, state)
+                elif isinstance(op, ExpertFetchOp):
+                    self._expert_fetch(op, state)
+                elif isinstance(op, ExpertReleaseOp):
+                    self._expert_release(op, state)
                 elif isinstance(op, GradWriteOp):
                     self._dispatch_grad_write(op.unit, state)
                 elif isinstance(op, OverflowCheckOp):
@@ -1139,6 +1408,11 @@ class OffloadSession:
         for tokens in state.kv_slots.values():
             self._device_slots.release_all(tokens)
         state.kv_slots.clear()
+        for tokens in state.expert_slots.values():
+            if tokens:
+                self._device_slots.release_all(tokens)
+        state.expert_slots.clear()
+        state.expert_live.clear()
         state.live.clear()
         # Staged fetches/KV windows/act checkpoints must settle before the
         # swapper drain: a queued staging job that ran *after* the drain
@@ -1171,6 +1445,16 @@ class OffloadSession:
                 except BaseException:
                     continue      # the worker released its own slot
                 self._device_slots.release_all([KV_CLASS])
+            elif kind == "ex":
+                pending = state.expert_stage.get(unit)
+                if not pending:
+                    continue
+                fut = pending.popleft()
+                try:
+                    fut.result()
+                except BaseException:
+                    continue      # the worker released its own slot
+                self._device_slots.release_all([EXPERT_CLASS])
             else:   # "act"
                 fut = state.act_stage.pop(unit, None)
                 if fut is None:
@@ -1185,6 +1469,9 @@ class OffloadSession:
         state.kv_live.clear()
         state.kv_append.clear()
         state.act_stage.clear()
+        state.expert_stage.clear()
+        state.expert_route.clear()
+        state.expert_slots_out = 0
         if self._grad_writer is not None:
             # the original executor error propagates; the drain also
             # resolves in-flight activation saves, so the checkpoint
@@ -1239,6 +1526,52 @@ class OffloadSession:
                 params, state.h, k_dev, v_dev, state.cache_len,
                 chunk=self.decode_spec.bucket)
             state.kv_append[op.unit] = (k, v)
+        elif op.kind == "block_route":
+            if op.save_input:
+                state.checkpoints[op.unit] = _ActCkpt(op.unit, state.h)
+            state.h, idx = self._jit_block_route(params, state.h)
+            # host readback: the fetch decision (unavoidable — the routed
+            # set IS host control flow); the same indices are fed back to
+            # block_moe so decision and compute agree by construction
+            state.expert_route[op.unit] = np.asarray(idx)
+        elif op.kind == "block_moe":
+            gate, up, down = state.expert_live[op.unit]
+            state.h = self._jit_block_moe(
+                params, gate, up, down,
+                jnp.asarray(state.expert_route[op.unit]), state.h)
+        elif op.kind == "block_moe_bwd":
+            x = self._consume_checkpoint(op.unit, state)
+            gate, up, down = state.expert_live[op.unit]
+            dparams, dgate, dup, ddown, state.dh = self._jit_block_moe_bwd(
+                params, gate, up, down,
+                jnp.asarray(state.expert_route[op.unit]), x, state.dh)
+            # merge the stacked expert grads back under their per-expert
+            # param keys (the flat-buffer layout); unrouted experts' rows
+            # are exactly zero — their weights were never read
+            grads = dict(dparams)
+            for i, triple in enumerate(
+                    self._expert_meta[op.unit]["experts"]):
+                for g, pname in zip((dgate, dup, ddown), triple):
+                    grads[pname] = g[i]
+            state.grads[op.unit] = grads
+        elif op.kind == "block_prefill_route":
+            state.h, k, v, idx = self._jit_prefill_route(params, state.h)
+            state.kv_append[op.unit] = (k, v)
+            state.expert_route[op.unit] = np.asarray(idx)
+        elif op.kind == "block_step_route":
+            k_dev, v_dev = state.kv_live.pop(op.unit)
+            state.h, k, v, idx = self._jit_step_route(
+                params, state.h, k_dev, v_dev, state.cache_len,
+                chunk=self.decode_spec.bucket)
+            state.kv_append[op.unit] = (k, v)
+            state.expert_route[op.unit] = np.asarray(idx)
+        elif op.kind == "block_verify_route":
+            k_dev, v_dev = state.kv_live.pop(op.unit)
+            state.h, k, v, idx = self._jit_verify_route(
+                params, state.h, k_dev, v_dev, state.cache_len,
+                chunk=self.decode_spec.bucket)
+            state.kv_append[op.unit] = (k, v)
+            state.expert_route[op.unit] = np.asarray(idx)
         elif op.kind == "block_bwd":
             x = self._consume_checkpoint(op.unit, state)
             state.grads[op.unit], state.dh = self._jit_block_bwd(
@@ -1426,11 +1759,15 @@ class OffloadSession:
                 self._adam_work.extend(
                     (unit_name, key) for key in meta)
                 hi = len(self._adam_work)
+            task = (self._optim_unit_paged
+                    if unit_name in self._expert_meta
+                    else self._optim_unit_pipelined)
             fut = self._optim_worker.submit(
-                functools.partial(self._optim_unit_pipelined, unit_name,
-                                  lo, hi, inv_scale))
+                functools.partial(task, unit_name, lo, hi, inv_scale))
         else:
             self._optim_unit(unit_name, inv_scale)
+            if unit_name in self._expert_meta:
+                self._expert_cache.invalidate_unit(unit_name)
             fut = done_future()
         with self._optim_lock:
             self._optim_futures[unit_name] = fut
@@ -1535,6 +1872,17 @@ class OffloadSession:
             self._adam_abort(commits, resume_at=hi)
             raise
 
+    def _optim_unit_paged(self, unit_name: str, lo: int, hi: int,  # thread: optim-worker
+                          inv_scale: np.float32) -> None:
+        """Pipelined Adam for a paged-MoE unit, then expert-page
+        invalidation (the commit rewrote the unit's SSD compute copies)
+        BEFORE the readiness future resolves: the next step's fetch
+        window — and therefore every expert prestage/ensure for this
+        unit — gates on that future, so no page can be pinned while the
+        invalidation drops it."""
+        self._optim_unit_pipelined(unit_name, lo, hi, inv_scale)
+        self._expert_cache.invalidate_unit(unit_name)
+
     def _adam_abort(self, commits: list[Future], *, resume_at: int) -> None:  # thread: optim-worker
         """Failure path of a unit task: wait out this unit's commits
         (each releases its own buffer), release every issued-but-never-
@@ -1632,6 +1980,11 @@ class OffloadSession:
             o1["act_fetch_wait_seconds"] - o0["act_fetch_wait_seconds"])
         self.metrics["act_write_failures"] = (
             o1["act_write_failures"] - o0["act_write_failures"])
+        # expert paging: executor stall at ExpertFetchOp gates (staged-
+        # stack waits, miss restages, and on-demand fetches)
+        self.metrics["expert_fetch_wait_s"] = (
+            o1["expert_fetch_wait_seconds"]
+            - o0["expert_fetch_wait_seconds"])
         return self.metrics
 
     def eval_loss(self, tokens: np.ndarray, labels: np.ndarray) -> float:
@@ -1878,6 +2231,13 @@ class OffloadSession:
         state = self.execute(self.plan("decode_verify"), state)
         return np.asarray(state.logits)[:, :n]
 
+    def expert_cache_stats(self) -> dict:
+        """Expert page cache spill/refill counters (see
+        :class:`~repro.core.paged.PageStats`); empty when expert paging
+        is off."""
+        return ({} if self._expert_cache is None
+                else self._expert_cache.stats.snapshot())
+
     def overlap_snapshot(self) -> dict:
         """Point-in-time copy of the overlap-pipeline stall counters
         (:class:`~repro.core.overlap.OverlapStats`), including the staged-
@@ -1894,7 +2254,9 @@ class OffloadSession:
         jax's private trace-count probe."""
         fns = (self._jit_embed, self._jit_head_logits, self._jit_head_last,
                self._jit_block_prefill, self._jit_block_step,
-               self._jit_block_verify)
+               self._jit_block_verify, self._jit_prefill_route,
+               self._jit_step_route, self._jit_verify_route,
+               self._jit_block_moe)
         return sum(jit_cache_size(f) for f in fns if f is not None)
 
     # -- weights access ------------------------------------------------------

@@ -3,7 +3,7 @@
 The paper's pipeline (§IV-A, Fig. 5/6) is a *lifecycle* — pool-slot checkout
 → async SSD read → H2D → compute → release — that the seed code hard-coded
 inside ``OffloadedTrainer.train_step``.  This module lifts that lifecycle
-into data: a :class:`StreamPlan` is a linear sequence of ten op kinds
+into data: a :class:`StreamPlan` is a linear sequence of twelve op kinds
 
 * :class:`FetchOp`    — stream one unit's compute weights SSD→pool→device,
 * :class:`ComputeOp`  — run one jitted stage against the resident weights,
@@ -26,6 +26,14 @@ into data: a :class:`StreamPlan` is a linear sequence of ten op kinds
 * :class:`OverflowCheckOp` — drain the gradient write-back queue, screen
                         the flat buffer for Inf/NaN, update the loss
                         scaler (decides whether the step applies),
+* :class:`ExpertFetchOp` / :class:`ExpertReleaseOp`
+                      — the expert-paged MoE pair: stage the unit's
+                        *routed* expert weights (chosen by its
+                        ``block_route`` stage, predicted one step ahead by
+                        the executor) as device (E, ...) stacks out of the
+                        generalized page pool, and drop them after the
+                        ``block_moe`` / ``block_moe_bwd`` stage consumed
+                        them,
 * :class:`OptimStepOp`— stream one unit's (master, m, v) subgroups through
                         the host Adam.  Inside the plan — rather than after
                         it — so the full-overlap executor can run step *k*'s
@@ -82,6 +90,16 @@ COMPUTE_KINDS = frozenset({
     "block_recompute",  # ckpt[recompute_for] = block_apply(params, ckpt[unit])
                      #   re-derive a dropped checkpoint from the previous
                      #   block's (peeked, not consumed) checkpoint
+    # --- expert-paged MoE stages (route half / expert half split) ---
+    "block_route",   # hmid, idx = mixer + router top-k; idx leaves the
+                     #   device so the host can fetch the routed experts
+    "block_moe",     # h = block_moe(params, gate, up, down, idx, hmid):
+                     #   the routed FFN against staged expert stacks
+    "block_moe_bwd",  # dparams, dgate, dup, ddown, dh = vjp(full block)
+                     #   with the forward's expert assignment pinned
+    "block_prefill_route",  # hmid, k, v, idx  (cached-decode prompt pass)
+    "block_step_route",     # hmid, k, v, idx  (one-token cached step)
+    "block_verify_route",   # hmid, k, v, idx  (spec-decode draft window)
 })
 
 # Activation-checkpoint tiers a block can be assigned (`act_policy`):
@@ -95,12 +113,26 @@ ACT_TIERS = frozenset({"host", "ssd", "recompute", "device"})
 # Tiers an ActSaveOp can carry (the offloaded ones).
 _ACT_SAVE_TIERS = frozenset({"host", "ssd"})
 
-_GRAD_KINDS = frozenset({"head_loss_grad", "block_bwd", "embed_bwd"})
+_GRAD_KINDS = frozenset({"head_loss_grad", "block_bwd", "embed_bwd",
+                         "block_moe_bwd"})
 _KV_PRODUCING_KINDS = frozenset({"block_prefill", "block_step",
-                                 "block_verify"})
+                                 "block_verify", "block_prefill_route",
+                                 "block_step_route", "block_verify_route"})
 # KVWriteOp.mode required for each KV-producing compute kind
 _KV_WRITE_MODES = {"block_prefill": "prefill", "block_step": "step",
-                   "block_verify": "verify"}
+                   "block_verify": "verify",
+                   "block_prefill_route": "prefill",
+                   "block_step_route": "step",
+                   "block_verify_route": "verify"}
+# Compute kinds that read the paged KV cache (consume a prior KVReadOp).
+_KV_CONSUMING_KINDS = frozenset({"block_step", "block_verify",
+                                 "block_step_route", "block_verify_route"})
+# Compute kinds that emit an expert routing decision (set the unit's
+# "routed" flag an ExpertFetchOp requires).
+_ROUTE_KINDS = frozenset({"block_route", "block_prefill_route",
+                          "block_step_route", "block_verify_route"})
+# Compute kinds that consume staged expert stacks (require ExpertFetchOp).
+_EXPERT_CONSUMING_KINDS = frozenset({"block_moe", "block_moe_bwd"})
 
 
 @dataclass(frozen=True)
@@ -218,6 +250,30 @@ class ActFetchOp:
 
 
 @dataclass(frozen=True)
+class ExpertFetchOp:
+    """Make the unit's routed expert weights device-resident as staged
+    (E, ...) stacks.  The executor resolves the actual routed set from the
+    unit's ``block_route`` indices (or all experts under
+    ``expert_paging="all"``), ensures those pages in the expert page cache
+    (SSD refills for spilled pages), memcpys them into zero-initialized
+    host stacks, and H2Ds under a ``__expert__`` device slot.  Like
+    FetchOp, the issue half runs inside the lookahead window against the
+    *previous* step's routing (a prediction); this op verifies the staged
+    set covers the actual routed set and restages on a miss."""
+
+    unit: str
+
+
+@dataclass(frozen=True)
+class ExpertReleaseOp:
+    """Drop the unit's staged expert stacks (the ``__expert__`` device
+    slot rotates back to the staging worker).  The cached host-side pages
+    stay in the expert page cache for future steps."""
+
+    unit: str
+
+
+@dataclass(frozen=True)
 class OptimStepOp:
     """Stream one unit's (master, m, v) subgroups through the host Adam
     and emit fresh compute weights.  Skipped when the overflow check
@@ -231,7 +287,8 @@ class OptimStepOp:
 
 
 Op = (FetchOp | ComputeOp | GradWriteOp | ReleaseOp | KVReadOp | KVWriteOp
-      | ActSaveOp | ActFetchOp | OverflowCheckOp | OptimStepOp)
+      | ActSaveOp | ActFetchOp | OverflowCheckOp | OptimStepOp
+      | ExpertFetchOp | ExpertReleaseOp)
 
 
 class PlanError(ValueError):
@@ -281,6 +338,14 @@ class StreamPlan:
           producing kind (one-token append vs draft-window append vs
           whole-window prefill scatter — device K/V is never silently
           dropped, nor landed at the wrong page granularity),
+        * expert stacks walk their own lifecycle: an ExpertFetchOp needs
+          its unit resident *and* routed earlier in the plan (a
+          ``block_route`` / ``*_route`` compute — the flag persists, so
+          the backward's re-fetch reuses the forward's routing), and may
+          not double-stage; ``block_moe`` / ``block_moe_bwd`` *require*
+          staged stacks; ExpertReleaseOp drops them; a ReleaseOp (and the
+          plan end) with stacks still staged is an error — the
+          ``__expert__`` device slot would leak,
         * at most one OverflowCheckOp, after every GradWriteOp (it is the
           barrier that makes the flat buffer whole); when it names
           ``regions`` they must cover every grad-written unit exactly
@@ -297,6 +362,8 @@ class StreamPlan:
         ckpt: dict[str, str] = {}
         kv_loaded: set[str] = set()
         pending_kv: dict[str, str] = {}   # unit -> producing compute kind
+        routed: set[str] = set()          # units with a route decision
+        expert_staged: set[str] = set()   # units with staged expert stacks
         grads_written: set[str] = set()
         grad_write_order: list[str] = []
         optim_stepped: set[str] = set()
@@ -351,23 +418,30 @@ class StreamPlan:
                                         f"{op.recompute_for!r} already has a "
                                         f"checkpoint")
                     ckpt[op.recompute_for] = "saved"
-                if op.kind == "block_bwd":
+                if op.kind in ("block_bwd", "block_moe_bwd"):
                     state = ckpt.get(op.unit)
                     if state is None:
-                        raise PlanError(f"{where}: block_bwd for {op.unit!r} "
+                        raise PlanError(f"{where}: {op.kind} for {op.unit!r} "
                                         f"with no saved checkpoint")
                     if state == "offloaded":
-                        raise PlanError(f"{where}: block_bwd for {op.unit!r} "
+                        raise PlanError(f"{where}: {op.kind} for {op.unit!r} "
                                         f"before its ActFetchOp (the "
                                         f"checkpoint bytes are offloaded)")
                     del ckpt[op.unit]
                 if op.kind in _GRAD_KINDS:
                     pending_grads.add(op.unit)
-                if op.kind in ("block_step", "block_verify"):
+                if op.kind in _KV_CONSUMING_KINDS:
                     if op.unit not in kv_loaded:
                         raise PlanError(f"{where}: {op.kind} for {op.unit!r}"
                                         f" with no KV read")
                     kv_loaded.discard(op.unit)
+                if op.kind in _ROUTE_KINDS:
+                    routed.add(op.unit)
+                if op.kind in _EXPERT_CONSUMING_KINDS and \
+                        op.unit not in expert_staged:
+                    raise PlanError(f"{where}: {op.kind} for {op.unit!r} "
+                                    f"with no staged expert stacks (needs "
+                                    f"an ExpertFetchOp)")
                 if op.kind in _KV_PRODUCING_KINDS:
                     if op.unit in pending_kv:
                         raise PlanError(f"{where}: {op.unit!r} already has "
@@ -417,6 +491,23 @@ class StreamPlan:
                         f"{kind!r} (expected {expected!r}: a step appends "
                         f"one token, a verify appends the draft window, "
                         f"a prefill scatters the whole prompt window)")
+            elif isinstance(op, ExpertFetchOp):
+                if op.unit not in resident:
+                    raise PlanError(f"{where}: expert fetch for non-resident"
+                                    f" unit {op.unit!r}")
+                if op.unit not in routed:
+                    raise PlanError(f"{where}: expert fetch for {op.unit!r} "
+                                    f"with no routing decision (needs a "
+                                    f"block_route/*_route compute first)")
+                if op.unit in expert_staged:
+                    raise PlanError(f"{where}: double expert fetch for "
+                                    f"{op.unit!r}")
+                expert_staged.add(op.unit)
+            elif isinstance(op, ExpertReleaseOp):
+                if op.unit not in expert_staged:
+                    raise PlanError(f"{where}: expert release for "
+                                    f"{op.unit!r} with no staged stacks")
+                expert_staged.discard(op.unit)
             elif isinstance(op, GradWriteOp):
                 if op.unit not in pending_grads:
                     raise PlanError(f"{where}: grad write for {op.unit!r} "
@@ -465,6 +556,10 @@ class StreamPlan:
                 if op.unit not in resident:
                     raise PlanError(f"{where}: release of non-resident unit "
                                     f"{op.unit!r}")
+                if op.unit in expert_staged:
+                    raise PlanError(f"{where}: release of {op.unit!r} with "
+                                    f"expert stacks still staged (its "
+                                    f"ExpertReleaseOp must come first)")
                 resident.discard(op.unit)
             else:
                 raise PlanError(f"{where}: unknown op {op!r}")
@@ -487,6 +582,9 @@ class StreamPlan:
         if pending_kv:
             raise PlanError(f"{self.name}: K/V never written: "
                             f"{sorted(pending_kv)}")
+        if expert_staged:
+            raise PlanError(f"{self.name}: expert stacks never released: "
+                            f"{sorted(expert_staged)}")
 
 
 # ---------------------------------------------------------------------------
@@ -564,14 +662,27 @@ def resolve_act_policy(blocks: list[str], spec) -> tuple[str, ...]:
     return tiers
 
 
+def _moe_units(model) -> frozenset:
+    """Units whose expert weights live in the expert page cache (their
+    ``block`` compute splits into ``block_route`` + ``block_moe``)."""
+    return frozenset(getattr(model, "expert_meta", None) or ())
+
+
 def _forward_ops(model, *, checkpoint: bool) -> list[Op]:
     embed, blocks, _head = _unit_names(model)
+    moe = _moe_units(model)
     ops: list[Op] = [FetchOp(embed), ComputeOp(embed, "embed"),
                      ReleaseOp(embed)]
     for b in blocks:
-        ops += [FetchOp(b),
-                ComputeOp(b, "block", save_input=checkpoint),
-                ReleaseOp(b)]
+        if b in moe:
+            ops += [FetchOp(b),
+                    ComputeOp(b, "block_route", save_input=checkpoint),
+                    ExpertFetchOp(b), ComputeOp(b, "block_moe"),
+                    ExpertReleaseOp(b), ReleaseOp(b)]
+        else:
+            ops += [FetchOp(b),
+                    ComputeOp(b, "block", save_input=checkpoint),
+                    ReleaseOp(b)]
     return ops
 
 
@@ -598,9 +709,23 @@ def compile_train(model, act_policy=None) -> StreamPlan:
     """
     embed, blocks, head = _unit_names(model)
     tiers = resolve_act_policy(blocks, act_policy)
+    moe = _moe_units(model)
+    if moe and "recompute" in tiers:
+        raise PlanError(
+            "act_policy 'recompute' is not supported for expert-paged MoE "
+            "blocks: block_recompute re-runs block_apply, which needs the "
+            "stacked expert weights the page cache replaced")
     ops: list[Op] = [FetchOp(embed), ComputeOp(embed, "embed"),
                      ReleaseOp(embed)]
     for b, tier in zip(blocks, tiers):
+        if b in moe:
+            ops += [FetchOp(b),
+                    ComputeOp(b, "block_route", save_input=True),
+                    ExpertFetchOp(b), ComputeOp(b, "block_moe")]
+            if tier in _ACT_SAVE_TIERS:
+                ops.append(ActSaveOp(b, tier))
+            ops += [ExpertReleaseOp(b), ReleaseOp(b)]
+            continue
         ops += [FetchOp(b),
                 ComputeOp(b, "block", save_input=(tier != "recompute"))]
         if tier in _ACT_SAVE_TIERS:
@@ -625,8 +750,14 @@ def compile_train(model, act_policy=None) -> StreamPlan:
         ops.append(FetchOp(b))
         if tiers[i] in _ACT_SAVE_TIERS and b not in fetched_early:
             ops.append(ActFetchOp(b))
-        ops += [ComputeOp(b, "block_bwd"),
-                ReleaseOp(b), GradWriteOp(b)]
+        if b in moe:
+            # the backward re-fetches the forward's routed experts (the
+            # executor remembered the idx) and recomputes under vjp
+            ops += [ExpertFetchOp(b), ComputeOp(b, "block_moe_bwd"),
+                    ExpertReleaseOp(b), ReleaseOp(b), GradWriteOp(b)]
+        else:
+            ops += [ComputeOp(b, "block_bwd"),
+                    ReleaseOp(b), GradWriteOp(b)]
     ops += [FetchOp(embed), ComputeOp(embed, "embed_bwd"),
             ReleaseOp(embed), GradWriteOp(embed)]
     # per-subgroup screen: each unit's flat region is checked as its write
@@ -658,7 +789,10 @@ def compile_decode(model) -> StreamPlan:
 
 
 def _require_cached_applies(model) -> None:
-    for attr in ("head_logits", "block_prefill", "block_step"):
+    attrs = ["head_logits", "block_prefill", "block_step"]
+    if _moe_units(model):
+        attrs += ["block_prefill_route", "block_step_route", "block_moe"]
+    for attr in attrs:
         if getattr(model, attr, None) is None:
             raise PlanError(
                 f"model has no {attr} apply; cached decode plans need one "
@@ -674,9 +808,18 @@ def compile_prefill(model) -> StreamPlan:
     embed, blocks, head = _unit_names(model)
     ops: list[Op] = [FetchOp(embed), ComputeOp(embed, "embed"),
                      ReleaseOp(embed)]
+    moe = _moe_units(model)
     for b in blocks:
-        ops += [FetchOp(b), ComputeOp(b, "block_prefill"),
-                KVWriteOp(b, "prefill"), ReleaseOp(b)]
+        if b in moe:
+            # K/V lands right after the route half; the expert fetch's
+            # SSD reads overlap the KV write
+            ops += [FetchOp(b), ComputeOp(b, "block_prefill_route"),
+                    KVWriteOp(b, "prefill"), ExpertFetchOp(b),
+                    ComputeOp(b, "block_moe"), ExpertReleaseOp(b),
+                    ReleaseOp(b)]
+        else:
+            ops += [FetchOp(b), ComputeOp(b, "block_prefill"),
+                    KVWriteOp(b, "prefill"), ReleaseOp(b)]
     ops += [FetchOp(head), ComputeOp(head, "head_logits_last"),
             ReleaseOp(head)]
     return StreamPlan("prefill", tuple(ops))
@@ -691,9 +834,16 @@ def compile_decode_cached(model) -> StreamPlan:
     embed, blocks, head = _unit_names(model)
     ops: list[Op] = [FetchOp(embed), ComputeOp(embed, "embed"),
                      ReleaseOp(embed)]
+    moe = _moe_units(model)
     for b in blocks:
-        ops += [FetchOp(b), KVReadOp(b), ComputeOp(b, "block_step"),
-                KVWriteOp(b, "step"), ReleaseOp(b)]
+        if b in moe:
+            ops += [FetchOp(b), KVReadOp(b),
+                    ComputeOp(b, "block_step_route"), KVWriteOp(b, "step"),
+                    ExpertFetchOp(b), ComputeOp(b, "block_moe"),
+                    ExpertReleaseOp(b), ReleaseOp(b)]
+        else:
+            ops += [FetchOp(b), KVReadOp(b), ComputeOp(b, "block_step"),
+                    KVWriteOp(b, "step"), ReleaseOp(b)]
     ops += [FetchOp(head), ComputeOp(head, "head_logits"), ReleaseOp(head)]
     return StreamPlan("decode_cached", tuple(ops))
 
@@ -713,12 +863,25 @@ def compile_decode_verify(model) -> StreamPlan:
             "model has no block_verify apply; spec-decode verify plans "
             "need one (see model_adapter.make_offloadable_lm — "
             "attention-mixer families only)")
+    moe = _moe_units(model)
+    if moe and getattr(model, "block_verify_route", None) is None:
+        raise PlanError(
+            "model has no block_verify_route apply; expert-paged spec-"
+            "decode verify plans need one "
+            "(see model_adapter.make_offloadable_lm)")
     embed, blocks, head = _unit_names(model)
     ops: list[Op] = [FetchOp(embed), ComputeOp(embed, "embed"),
                      ReleaseOp(embed)]
     for b in blocks:
-        ops += [FetchOp(b), KVReadOp(b), ComputeOp(b, "block_verify"),
-                KVWriteOp(b, "verify"), ReleaseOp(b)]
+        if b in moe:
+            ops += [FetchOp(b), KVReadOp(b),
+                    ComputeOp(b, "block_verify_route"),
+                    KVWriteOp(b, "verify"), ExpertFetchOp(b),
+                    ComputeOp(b, "block_moe"), ExpertReleaseOp(b),
+                    ReleaseOp(b)]
+        else:
+            ops += [FetchOp(b), KVReadOp(b), ComputeOp(b, "block_verify"),
+                    KVWriteOp(b, "verify"), ReleaseOp(b)]
     ops += [FetchOp(head), ComputeOp(head, "head_logits"), ReleaseOp(head)]
     return StreamPlan("decode_verify", tuple(ops))
 

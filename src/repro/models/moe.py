@@ -47,12 +47,19 @@ def _positions_in_expert(flat_experts, n_tokens_k: int):
     return pos
 
 
-def moe_ffn(params, x, cfg):
+def moe_ffn(params, x, cfg, idx=None):
     """Routed expert FFN (+ shared experts).  x: (B, S, D) -> (B, S, D).
 
     params: moe.w_router (D, E), moe.w_gate/w_up (E, D, F) each,
     moe.w_down (E, F, D); optionally moe.shared_gate/up/down.
     Returns (out, aux_loss).
+
+    ``idx`` (optional, (T, k) or (B, S, k) int32) pins the expert
+    assignment instead of recomputing top-k — the expert-paging path
+    passes the routing stage's choice so the host-side fetch decision and
+    the expert compute agree *by construction* (weights are re-gathered
+    from the softmax probabilities at those indices, which equals the
+    top-k values bitwise when ``idx`` came from the same logits).
     """
     e = cfg.moe
     b, s, d = x.shape
@@ -60,7 +67,18 @@ def moe_ffn(params, x, cfg):
     xf = x.reshape(t, d)
 
     logits = dense(xf, params["moe.w_router"])
-    w, idx, aux = router_topk(logits, e.top_k)            # (T,k) fp32, (T,k)
+    if idx is None:
+        w, idx, aux = router_topk(logits, e.top_k)        # (T,k) fp32, (T,k)
+    else:
+        idx = idx.reshape(t, e.top_k)
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        w = jnp.take_along_axis(probs, idx, axis=-1)      # == top_k values
+        w = (w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)).astype(
+            jnp.float32)
+        assign = jnp.zeros_like(probs).at[
+            jnp.arange(t)[:, None], idx].add(1.0) / e.top_k
+        aux = e.n_experts * jnp.mean(assign.mean(0) * probs.mean(0)) \
+            * e.top_k
 
     capacity = int(max(e.top_k * t // e.n_experts * e.capacity_factor, 4))
     flat_e = idx.reshape(-1)                              # (T*k,)

@@ -26,6 +26,7 @@ MUST_FLAG = {
     "act_d2h_on_executor.py": ["thread-affinity", "thread-affinity"],
     "holds_contract.py": ["lock-blocking"],
     "annotations.py": ["annotation", "annotation"],
+    "expert_fetch_under_lock.py": ["lock-blocking", "lock-blocking"],
 }
 
 

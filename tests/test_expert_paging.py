@@ -1,0 +1,241 @@
+"""Fault injection for the expert-paging path: a failed expert SSD read
+must surface exactly once at its fetch gate with every claimed device slot
+and page pin released, and an abort mid-step must drain in-flight expert
+stages back to a quiescent session.
+
+Every scenario finishes with a RECOVERY step — the strongest leak probe:
+a leaked ``__expert__`` device slot wedges the next stage's acquire, a
+leaked page pin blows up the optimizer's ``invalidate_unit``, and a torn
+``expert_slots_out`` counter deadlocks the on-demand fetch, so a clean
+follow-up ``train_step`` after the fault proves all three ledgers healed.
+Runs under the suite-wide worker-thread leak guard and the
+``--lock-witness`` CI matrix.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.core import DecodeSpec, OffloadSession, memascend_policy
+from repro.core.model_adapter import make_offloadable_lm
+
+CFG = ModelConfig(name="tiny-moe", family="moe", n_layers=2, d_model=32,
+                  n_heads=4, n_kv_heads=2, d_ff=64, vocab=128,
+                  moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=32))
+
+
+def _model(mode="routed", seed=0):
+    return make_offloadable_lm(CFG, jax.random.PRNGKey(seed),
+                               expert_paging=mode)
+
+
+def _policy(root, mode="routed", overlap="full"):
+    return memascend_policy(root, lr=1e-2).replace(
+        expert_paging=mode, expert_page_slots=8, overlap=overlap)
+
+
+def _batch(seed=1):
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, CFG.vocab, (2, 16)).astype(np.int32),
+            rng.integers(0, CFG.vocab, (2, 16)).astype(np.int32))
+
+
+class _FaultyRead:
+    """Store wrapper whose ``read`` raises for expert compute pages while
+    ``armed``, counting how many times the fault actually fired."""
+
+    def __init__(self, inner, *, fail_on_call=1):
+        self._inner = inner
+        self.armed = True
+        self.fired = 0
+        self._calls = 0
+        self._fail_on = fail_on_call
+
+    def read(self, key, view):
+        if self.armed and "moe.expert" in key:
+            self._calls += 1
+            if self._calls >= self._fail_on:
+                self.fired += 1
+                raise IOError(f"injected expert read failure: {key}")
+        return self._inner.read(key, view)
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+
+# -- failed expert SSD read ---------------------------------------------------
+
+@pytest.mark.parametrize("overlap", ["sync", "full"])
+def test_failed_expert_read_surfaces_once_and_releases(tmp_store_root,
+                                                       overlap):
+    """The very first expert page read fails: the error must surface
+    exactly once at the fetch gate (the staging worker holds no device
+    slot — stacks build precedes the acquire) and leave no slot, pin, or
+    counter behind, proven by a clean recovery step."""
+    tokens, labels = _batch()
+    s = OffloadSession(_model(), _policy(tmp_store_root, overlap=overlap))
+    try:
+        faulty = _FaultyRead(s.store)
+        s.store = faulty
+        s._expert_cache.store = faulty
+        with pytest.raises(IOError, match="injected expert read"):
+            s.train_step(tokens, labels)
+        assert faulty.fired == 1, (
+            "fault must fire once and propagate, not be retried/swallowed")
+        # drain left nothing claimed (sync mode has no device-slot budget)
+        assert len(s.swapper._inflight) == 0
+        assert s._device_slots is None or s._device_slots.idle()
+        assert s.tracker.component(
+            "activation_checkpoints").live_allocated == 0
+        # recovery: with the fault disarmed the same session trains —
+        # a leaked __expert__ slot or pin would wedge or raise here
+        faulty.armed = False
+        m = s.train_step(tokens, labels)
+        assert np.isfinite(m["loss"])
+    finally:
+        s.close()
+    s.tracker.assert_quiescent()
+
+
+def test_failed_read_mid_gather_unpins_earlier_pages(tmp_store_root):
+    """Failure on the THIRD expert page read: the pages already gathered
+    into the stack were pinned and must be unpinned on the error path, or
+    the optimizer's invalidate_unit (and close) would refuse."""
+    tokens, labels = _batch()
+    s = OffloadSession(_model(), _policy(tmp_store_root, overlap="full"))
+    try:
+        faulty = _FaultyRead(s.store, fail_on_call=3)
+        s.store = faulty
+        s._expert_cache.store = faulty
+        with pytest.raises(IOError, match="injected expert read"):
+            s.train_step(tokens, labels)
+        assert faulty.fired == 1
+        assert s._device_slots.idle()
+        faulty.armed = False
+        losses = [s.train_step(tokens, labels)["loss"] for _ in range(2)]
+        assert all(np.isfinite(x) for x in losses)
+    finally:
+        s.close()
+    s.tracker.assert_quiescent()
+
+
+def test_failed_read_on_prestaged_step_drops_staged_slot(tmp_store_root):
+    """Fault armed only from the SECOND step: step 1 seeds the routing
+    prior, so step 2's window prestages expert stacks whose build fails on
+    the staging worker.  The failure must surface at that step's fetch
+    gate and still release the EXPERT_CLASS budget."""
+    tokens, labels = _batch()
+    s = OffloadSession(_model(), _policy(tmp_store_root, overlap="full"))
+    try:
+        faulty = _FaultyRead(s.store)
+        faulty.armed = False
+        s.store = faulty
+        s._expert_cache.store = faulty
+        m = s.train_step(tokens, labels)         # seeds _expert_prior
+        assert np.isfinite(m["loss"])
+        # evict every cached page so step 2 must hit SSD again
+        for unit in s._expert_meta:
+            s._expert_cache.invalidate_unit(unit)
+        faulty.armed = True
+        with pytest.raises(IOError, match="injected expert read"):
+            s.train_step(tokens, labels)
+        assert faulty.fired >= 1
+        assert s._device_slots.idle()
+        assert len(s.swapper._inflight) == 0
+        faulty.armed = False
+        m = s.train_step(tokens, labels)
+        assert np.isfinite(m["loss"])
+    finally:
+        s.close()
+    s.tracker.assert_quiescent()
+
+
+# -- abort mid-step -----------------------------------------------------------
+
+def test_abort_mid_step_drains_expert_stages(tmp_store_root):
+    """A compute failure while later units' expert prestages are still in
+    flight on the staging worker: the abort drain must consume those
+    futures and return their __expert__ slots, leaving live_allocated==0
+    for the step's transient components and a session that still trains."""
+    tokens, labels = _batch()
+    s = OffloadSession(_model(), _policy(tmp_store_root, overlap="full"))
+    try:
+        m = s.train_step(tokens, labels)   # warm: prior + prestage window
+        assert np.isfinite(m["loss"])
+        calls = {"n": 0}
+        real_moe = s._jit_block_moe
+
+        def flaky_moe(*a):
+            calls["n"] += 1
+            if calls["n"] == 1:    # first MoE block of step 2: the next
+                raise RuntimeError("injected moe failure")  # stage in flight
+            return real_moe(*a)
+
+        s._jit_block_moe = flaky_moe
+        with pytest.raises(RuntimeError, match="injected moe"):
+            s.train_step(tokens, labels)
+        s._jit_block_moe = real_moe
+        assert len(s.swapper._inflight) == 0
+        assert s._device_slots.idle(), "abort leaked an __expert__ slot"
+        # only cache-resident pages may still hold pool buffers
+        assert len(s._expert_cache.resident_pages) <= 8
+        assert s.tracker.component(
+            "activation_checkpoints").live_allocated == 0
+        m = s.train_step(tokens, labels)
+        assert np.isfinite(m["loss"])
+    finally:
+        s.close()
+    s.tracker.assert_quiescent()
+
+
+def test_abort_during_decode_releases_expert_slots(tmp_store_root):
+    """Same drain contract on the serve path: a failing decode step with
+    expert stacks staged must release them and leave the KV cache usable."""
+    tokens, labels = _batch()
+    s = OffloadSession(_model(), _policy(tmp_store_root, overlap="full"),
+                       decode=DecodeSpec(batch=2, max_seq=64))
+    try:
+        s.train_step(tokens, labels)
+        kv = s.open_kv_cache()
+        try:
+            logits = s.prefill(kv, tokens[:, :8])
+            nxt = np.argmax(logits, axis=-1).astype(np.int32)[:, None]
+            real_step = s._jit_step_route
+            calls = {"n": 0}
+
+            def flaky_step(*a, **kw):
+                calls["n"] += 1
+                if calls["n"] == 1:
+                    raise RuntimeError("injected decode failure")
+                return real_step(*a, **kw)
+
+            s._jit_step_route = flaky_step
+            with pytest.raises(RuntimeError, match="injected decode"):
+                s.decode_step(kv, nxt)
+            s._jit_step_route = real_step
+            assert s._device_slots.idle()
+            # the same KV cache still decodes after the drain
+            out = s.decode_step(kv, nxt)
+            assert out.shape[0] == 2
+        finally:
+            kv.close()
+    finally:
+        s.close()
+    s.tracker.assert_quiescent()
+
+
+def test_close_with_fault_still_quiesces(tmp_store_root):
+    """Closing right after a failed step runs every teardown step: the
+    expert cache closes (dropping resident pages), the arena returns, and
+    the tracker ends quiescent."""
+    tokens, labels = _batch()
+    s = OffloadSession(_model(), _policy(tmp_store_root, overlap="h2d"))
+    faulty = _FaultyRead(s.store)
+    s.store = faulty
+    s._expert_cache.store = faulty
+    with pytest.raises(IOError, match="injected expert read"):
+        s.train_step(tokens, labels)
+    s.close()
+    s.tracker.assert_quiescent()
+    assert s.pool.in_use_payload == 0

@@ -1,0 +1,41 @@
+"""MUST-FLAG — expert-fetch-under-cache-lock race (PR 10 bug class).
+
+A first cut of the expert page cache refilled a spilled expert page with
+a synchronous SSD read while still holding the cache lock.  The staging
+worker building the next unit's stacks and the executor trimming the
+round both serialize on that lock, so a single multi-millisecond expert
+read stalled the whole prestage pipeline — and with the store's
+backpressure in the loop, the worker could wait on a read that was
+waiting on a buffer only the worker's own release would free.  The fix
+parks the key in ``_in_transit`` and drops the lock around the read: see
+``must_pass/expert_fetch_under_lock_fixed.py``.
+
+Expected findings: 2 x lock-blocking.
+"""
+
+import threading
+
+
+class ExpertCache:
+    """Distilled buggy shape: refill I/O and prefetch settle under the
+    cache lock."""
+
+    def __init__(self, store, pool):
+        self._lock = threading.Lock()
+        self.store = store
+        self._resident = {}
+        self._spilled = set()
+
+    def fetch(self, key, view):
+        with self._lock:
+            if key in self._spilled:
+                self.store.read(key, view)   # must-flag: SSD read under lock
+                self._spilled.discard(key)
+            self._resident[key] = view
+            return view
+
+    def wait_prefetch(self, key, fut):
+        with self._lock:
+            view = fut.result()              # must-flag: future wait under lock
+            self._resident[key] = view
+            return view

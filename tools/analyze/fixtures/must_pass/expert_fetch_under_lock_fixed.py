@@ -1,0 +1,45 @@
+"""MUST-PASS — the expert-fetch-under-cache-lock race, fixed.
+
+The refill parks the key in ``_in_transit`` under the lock, performs the
+SSD read unlocked (other ensuring threads keep making progress), and
+re-takes the lock to land the page; a concurrent fetch of the same key
+waits on the cache's own condition — allowed — until the read settles.
+Prefetch futures settle before the lock is taken.  This is the
+discipline ``repro.core.paged.PagedResidency`` ships with.
+"""
+
+import threading
+
+
+class ExpertCacheFixed:
+    def __init__(self, store, pool):
+        self._lock = threading.Condition(threading.Lock())
+        self.store = store
+        self._resident = {}
+        self._spilled = set()
+        self._in_transit = set()
+
+    def fetch(self, key, view):
+        with self._lock:
+            while key in self._in_transit:
+                self._lock.wait()            # own condition: not a finding
+            if key not in self._spilled:
+                self._resident[key] = view
+                return view
+            self._spilled.discard(key)
+            self._in_transit.add(key)
+        try:
+            self.store.read(key, view)       # unlocked: pipeline keeps moving
+        finally:
+            with self._lock:
+                self._in_transit.discard(key)
+                self._lock.notify_all()
+        with self._lock:
+            self._resident[key] = view
+            return view
+
+    def wait_prefetch(self, key, fut):
+        view = fut.result()                  # settle outside the lock
+        with self._lock:
+            self._resident[key] = view
+            return view
